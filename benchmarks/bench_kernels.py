@@ -1,0 +1,39 @@
+"""Per-kernel micro-benchmarks: Pallas (interpret on CPU — correctness-level
+timing only; the TPU numbers come from the §Roofline analysis) vs jnp refs."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.hash_partition import ops as hp_ops, ref as hp_ref
+from repro.kernels.segment_reduce import ops as sr_ops
+from repro.kernels.stencil1d import ops as st_ops, ref as st_ref
+from repro.kernels.stream_compact import ops as sc_ops
+
+from .common import report, timeit
+
+
+def run(scale: float = 1.0):
+    n = int(262_144 * scale)
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.normal(size=n).astype(np.float32))
+
+    w = [0.25, 0.5, 0.25]
+    ext = jnp.asarray(rng.normal(size=n + 2).astype(np.float32))
+    us_ref = timeit(lambda: st_ref.stencil1d_ref(ext, w))
+    us_k = timeit(lambda: st_ops.stencil1d(ext, w))
+    report(f"kern_stencil1d_ref_n{n}", us_ref, "")
+    report(f"kern_stencil1d_pallas_n{n}", us_k, "interpret")
+
+    ki = jnp.asarray(rng.integers(0, 2, n).astype(np.int32))
+    us_ref = timeit(lambda: jnp.cumsum(ki))
+    us_k = timeit(lambda: sc_ops.prefix_sum(ki))
+    report(f"kern_prefix_ref_n{n}", us_ref, "")
+    report(f"kern_prefix_pallas_n{n}", us_k, "interpret")
+
+    P = 64
+    dest = jnp.asarray(rng.integers(0, P, n).astype(np.int32))
+    us_ref = timeit(lambda: hp_ref.bucket_ranks_ref(dest, P))
+    us_k = timeit(lambda: hp_ops.bucket_ranks(dest, P))
+    report(f"kern_bucketrank_ref_n{n}_P{P}", us_ref, "")
+    report(f"kern_bucketrank_pallas_n{n}_P{P}", us_k, "interpret")

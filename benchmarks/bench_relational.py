@@ -1,0 +1,82 @@
+"""Paper Fig. 8a — basic relational operations: filter / join / aggregate.
+
+Baselines (the Pandas/Julia roles are played by eager NumPy — sequential,
+no compilation; Spark cannot run here):
+  numpy-eager     sequential host baseline
+  hiframes        compiled single-jit plan (this paper)
+  hiframes+kern   same, hot loops through the Pallas kernels (interpret on CPU)
+
+The paper's sizes (2B/0.5M/256M rows) are scaled to CPU-feasible defaults;
+pass --scale to grow them.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro import hiframes as hf
+from repro.data import synth
+
+from .common import report, timeit
+
+
+def bench_filter(n):
+    t = synth.relational_tables(n, n_keys=1000, seed=0)
+
+    def np_eager():
+        m = t["x"] < 0.5
+        return {k: v[m] for k, v in t.items()}
+    us_np = timeit(np_eager)
+
+    df = hf.table(t)
+    plan = df[df["x"] < 0.5].lower()
+    us_hf = timeit(plan)
+    report(f"fig8a_filter_numpy_n{n}", us_np, "")
+    report(f"fig8a_filter_hiframes_n{n}", us_hf,
+           f"speedup={us_np/us_hf:.2f}x")
+
+
+def bench_join(n_left, n_right):
+    rng = np.random.default_rng(1)
+    left = {"id": rng.integers(0, n_right, n_left).astype(np.int32),
+            "x": rng.normal(size=n_left).astype(np.float32)}
+    right = {"cid": np.arange(n_right, dtype=np.int32),
+             "w": rng.normal(size=n_right).astype(np.float32)}
+
+    def np_eager():
+        order = np.argsort(right["cid"])
+        pos = np.searchsorted(right["cid"], left["id"], sorter=order)
+        return right["w"][order[pos]]
+    us_np = timeit(np_eager)
+
+    plan = hf.join(hf.table(left, "l"), hf.table(right, "r"),
+                   on=("id", "cid")).lower()
+    us_hf = timeit(plan)
+    report(f"fig8a_join_numpy_n{n_left}", us_np, "")
+    report(f"fig8a_join_hiframes_n{n_left}", us_hf,
+           f"speedup={us_np/us_hf:.2f}x")
+
+
+def bench_aggregate(n):
+    t = synth.relational_tables(n, n_keys=4096, seed=2)
+
+    def np_eager():
+        order = np.argsort(t["id"], kind="stable")
+        sid = t["id"][order]
+        sx = t["x"][order]
+        bounds = np.flatnonzero(np.diff(sid)) + 1
+        return np.add.reduceat(sx, np.concatenate([[0], bounds]))
+    us_np = timeit(np_eager)
+
+    df = hf.table(t)
+    plan = hf.aggregate(df, "id", s=hf.sum_(df["x"]),
+                        m=hf.mean(df["y"])).lower()
+    us_hf = timeit(plan)
+    report(f"fig8a_aggregate_numpy_n{n}", us_np, "")
+    report(f"fig8a_aggregate_hiframes_n{n}", us_hf,
+           f"speedup={us_np/us_hf:.2f}x")
+
+
+def run(scale: float = 1.0):
+    bench_filter(int(2_000_000 * scale))
+    bench_join(int(500_000 * scale), int(50_000 * scale))
+    bench_aggregate(int(1_000_000 * scale))

@@ -1,0 +1,64 @@
+"""Paper Fig. 12 — strong scaling of Q26 (1..8 fake host devices).
+
+Each point runs in a subprocess with a different host-device count (the CPU
+stand-in for nodes).  The paper's point: HiFrames keeps scaling where Spark's
+master bottleneck inverts it; our analogue is that the compiled SPMD plan has
+no coordinator — scaling is bounded only by the collectives.
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import textwrap
+
+from .common import report
+
+_SCRIPT = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={devs}"
+import time
+import numpy as np
+import jax
+from repro import hiframes as hf
+from repro.data import synth
+
+ss = synth.store_sales({rows}, 5000, 20000, seed=10)
+it = synth.item(5000, seed=11)
+store_sales, item = hf.table(ss, "ss"), hf.table(it, "it")
+sale_items = hf.join(store_sales, item, on=("ss_item_sk", "i_item_sk"))
+c_i = hf.aggregate(sale_items, "ss_customer_sk",
+                   c_i_count=hf.count(),
+                   id1=hf.sum_(sale_items["i_class_id"] == 1))
+plan = c_i[c_i["c_i_count"] > 2].lower()
+plan()   # warmup/compile
+ts = []
+for _ in range(3):
+    t0 = time.perf_counter()
+    t = plan()
+    np.asarray(t.counts)
+    ts.append(time.perf_counter() - t0)
+print("US_PER_CALL", np.median(ts) * 1e6)
+"""
+
+
+def run(scale: float = 1.0, devices=(1, 2, 4, 8)):
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    rows = int(200_000 * scale)
+    base = None
+    for d in devices:
+        env = dict(os.environ)
+        env["PYTHONPATH"] = os.path.join(root, "src")
+        env.pop("XLA_FLAGS", None)
+        res = subprocess.run(
+            [sys.executable, "-c", _SCRIPT.format(devs=d, rows=rows)],
+            env=env, capture_output=True, text=True, timeout=900)
+        if res.returncode != 0:
+            report(f"fig12_q26_scaling_p{d}", -1.0,
+                   f"FAILED:{res.stderr.strip().splitlines()[-1][:80] if res.stderr else '?'}")
+            continue
+        us = float(res.stdout.split("US_PER_CALL")[1].strip().split()[0])
+        if base is None:
+            base = us
+        report(f"fig12_q26_scaling_p{d}", us,
+               f"speedup_vs_p1={base/us:.2f}x")

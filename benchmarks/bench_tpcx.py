@@ -1,0 +1,83 @@
+"""Paper Fig. 11 — TPCx-BB Q05 / Q25 / Q26 (relational stages).
+
+Implemented on BigBench-like synthetic tables (data/synth.py).  Q05 uses a
+Zipf-skewed join key — the paper's skew stress where hash partitioning load-
+imbalances (Spark OOMs at SF>50; HiFrames at SF=400).  Our static-capacity
+carrier turns that failure mode into overflow-flag + driver retry, which the
+benchmark exercises and reports.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro import hiframes as hf
+from repro.data import synth
+from repro.runtime import run_with_overflow_retry
+
+from .common import report, timeit
+
+
+def q26(ss, it, min_count=4):
+    store_sales, item = hf.table(ss, "ss"), hf.table(it, "it")
+    sale_items = hf.join(store_sales, item, on=("ss_item_sk", "i_item_sk"))
+    c_i = hf.aggregate(
+        sale_items, "ss_customer_sk",
+        c_i_count=hf.count(),
+        id1=hf.sum_(sale_items["i_class_id"] == 1),
+        id2=hf.sum_(sale_items["i_class_id"] == 2),
+        id3=hf.sum_(sale_items["i_class_id"] == 3))
+    return c_i[c_i["c_i_count"] > min_count]
+
+
+def q25(ss):
+    """Customer value segmentation: frequency (distinct tickets), monetary."""
+    s = hf.table(ss, "ss")
+    return hf.aggregate(
+        s, "ss_customer_sk",
+        frequency=hf.nunique(s["ss_ticket_number"]),
+        totalspend=hf.sum_(s["ss_net_paid"]),
+        maxspend=hf.max_(s["ss_net_paid"]))
+
+
+def q05(wcs, it):
+    """Click-category features per user (logistic-regression assembly)."""
+    clicks, item = hf.table(wcs, "wcs"), hf.table(it, "it")
+    j = hf.join(clicks, item, on=("wcs_item_sk", "i_item_sk"))
+    return hf.aggregate(
+        j, "wcs_user_sk",
+        clicks_in_1=hf.sum_(j["i_category_id"] == 1),
+        clicks_in_2=hf.sum_(j["i_category_id"] == 2),
+        clicks_in_3=hf.sum_(j["i_category_id"] == 3),
+        clicks_in_4=hf.sum_(j["i_category_id"] == 4),
+        total=hf.count())
+
+
+def run(scale: float = 1.0):
+    n_sales = int(400_000 * scale)
+    n_items = int(20_000 * scale)
+    n_cust = int(50_000 * scale)
+
+    ss = synth.store_sales(n_sales, n_items, n_cust, seed=10)
+    it = synth.item(n_items, seed=11)
+
+    plan = q26(ss, it).lower()
+    us = timeit(plan)
+    report(f"fig11_q26_sf{scale}", us, f"rows={n_sales}")
+
+    plan = q25(ss).lower()
+    us = timeit(plan)
+    report(f"fig11_q25_sf{scale}", us, f"rows={n_sales}")
+
+    wcs = synth.web_clickstream(n_sales, n_items, n_cust, seed=12, skew=1.1)
+    # Q05 under skew: run through the overflow-retry driver and report the
+    # number of replans the skew forced (the paper's Q05 story).
+    def build(slack):
+        cfg = hf.ExecConfig(safe_capacities=False, shuffle_slack=slack,
+                            join_expansion=slack, auto_retry=0)
+        return q05(wcs, it).collect(cfg)
+    table, attempts = run_with_overflow_retry(build, base_slack=2.0,
+                                              max_retries=6)
+    plan = q05(wcs, it).lower()       # safe-capacity timing
+    us = timeit(plan)
+    report(f"fig11_q05_skew_sf{scale}", us,
+           f"skew_retries={attempts};rows={table.num_rows()}")

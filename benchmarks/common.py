@@ -1,0 +1,41 @@
+"""Benchmark utilities: timing + CSV reporting (name,us_per_call,derived)."""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+import numpy as np
+
+ROWS: list[tuple[str, float, str]] = []
+
+
+def block(x):
+    return jax.block_until_ready(x) if hasattr(x, "block_until_ready") or \
+        isinstance(x, (list, tuple, dict)) else x
+
+
+def timeit(fn: Callable, *, warmup: int = 1, repeat: int = 3) -> float:
+    """Median wall time per call in microseconds."""
+    for _ in range(warmup):
+        jax.tree.map(lambda a: getattr(a, "block_until_ready", lambda: a)(),
+                     fn())
+    ts = []
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        out = fn()
+        jax.tree.map(lambda a: getattr(a, "block_until_ready", lambda: a)(),
+                     out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)
+
+
+def report(name: str, us: float, derived: str = ""):
+    ROWS.append((name, us, derived))
+    print(f"{name},{us:.1f},{derived}")
+
+
+def flush_rows():
+    out = list(ROWS)
+    ROWS.clear()
+    return out

@@ -1,0 +1,46 @@
+"""Benchmark driver — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  --scale shrinks/grows datasets
+(defaults are CPU-feasible stand-ins for the paper's cluster sizes);
+--skip lets CI drop the slow subprocess scaling runs.
+"""
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=0.25)
+    ap.add_argument("--skip", nargs="*", default=[],
+                    choices=["relational", "analytics", "udf", "tpcx",
+                             "scaling", "kernels"])
+    args = ap.parse_args()
+
+    from . import (bench_analytics, bench_kernels, bench_relational,
+                   bench_scaling, bench_tpcx, bench_udf)
+
+    suites = {
+        "relational": lambda: bench_relational.run(args.scale),
+        "analytics": lambda: bench_analytics.run(args.scale),
+        "udf": lambda: bench_udf.run(args.scale),
+        "tpcx": lambda: bench_tpcx.run(args.scale),
+        "kernels": lambda: bench_kernels.run(args.scale),
+        "scaling": lambda: bench_scaling.run(args.scale),
+    }
+    print("name,us_per_call,derived")
+    failed = []
+    for name, fn in suites.items():
+        if name in args.skip:
+            continue
+        try:
+            fn()
+        except Exception:
+            failed.append(name)
+            traceback.print_exc()
+    if failed:
+        sys.exit(f"benchmark suites failed: {failed}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,106 @@
+"""End-to-end LM training driver: HiFrames data pipeline -> sharded train
+loop with AdamW/ZeRO-1, gradient accumulation, async checkpointing,
+preemption safety, straggler stats.
+
+Defaults run a ~13M-param model for 30 steps on CPU in ~a minute; pass
+--preset 100m --steps 300 for the deliverable-scale run (same code path).
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--preset 100m] [--steps N]
+"""
+import argparse
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.pipeline import PipelineConfig, TokenPipeline
+from repro.data.synth import token_corpus
+from repro.models import lm
+from repro.models.config import ModelConfig
+from repro.optim import OptConfig, adamw
+from repro.runtime import FTConfig, TrainDriver
+
+PRESETS = {
+    "tiny": ModelConfig(name="tiny-lm", family="dense", n_layers=4,
+                        d_model=256, n_heads=4, n_kv_heads=2, d_ff=1024,
+                        vocab=8192, tie_embeddings=True),
+    "100m": ModelConfig(name="lm-100m", family="dense", n_layers=12,
+                        d_model=768, n_heads=12, n_kv_heads=4, d_ff=3072,
+                        vocab=32768, tie_embeddings=True),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="tiny", choices=list(PRESETS))
+    ap.add_argument("--steps", type=int, default=30)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--micro", type=int, default=2)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+
+    cfg = PRESETS[args.preset]
+    print(f"model {cfg.name}: {cfg.param_count()/1e6:.1f}M params")
+
+    ocfg = OptConfig(lr=3e-4, warmup_steps=max(args.steps // 10, 1),
+                     total_steps=args.steps)
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    state = {"params": params, "opt": adamw.init_state(params, ocfg)}
+
+    # HiFrames-powered data pipeline (curation filter + cumsum packing plan)
+    corpus = token_corpus(5_000, cfg.vocab)
+    pipe = TokenPipeline(corpus, PipelineConfig(
+        vocab=cfg.vocab, seq_len=args.seq, global_batch=args.batch))
+    print("pipeline: docs per quality bucket:", dict(zip(
+        pipe.bucket_stats["bucket"].tolist(),
+        pipe.bucket_stats["docs"].tolist())))
+
+    n_micro = args.micro
+
+    @jax.jit
+    def train_step(state, batch):
+        params = state["params"]
+
+        def split(x):
+            return x.reshape(n_micro, x.shape[0] // n_micro, *x.shape[1:])
+        mb = {k: split(v) for k, v in batch.items()}
+
+        def micro(carry, b):
+            g, l = carry
+            loss, grads = jax.value_and_grad(
+                lambda p: lm.loss_fn(p, b, cfg))(params)
+            return (jax.tree.map(jnp.add, g, grads), l + loss), None
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (gsum, lsum), _ = jax.lax.scan(micro, (zeros, 0.0), mb)
+        grads = jax.tree.map(lambda g: g / n_micro, gsum)
+        new_p, new_o, _ = adamw.update(params, grads, state["opt"], ocfg)
+        return {"params": new_p, "opt": new_o}, lsum / n_micro
+
+    batch0 = {k: jnp.asarray(v) for k, v in next(iter(pipe)).items()}
+
+    ckpt_dir = args.ckpt_dir or os.path.join(tempfile.gettempdir(),
+                                             f"repro_{cfg.name}")
+    driver = TrainDriver(FTConfig(ckpt_dir=ckpt_dir, ckpt_every=20),
+                         state, train_step, metadata={"model": cfg.name})
+    if args.resume and driver.maybe_resume():
+        print(f"resumed from step {driver.step}")
+
+    def batches():
+        for b in pipe:
+            yield {k: jnp.asarray(v) for k, v in b.items()}
+
+    res = driver.run(batches(), num_steps=args.steps, log_every=5)
+    pipe.close()
+    print(f"done: {res['steps']} steps, final loss "
+          f"{res['losses'][-1]:.4f} (first {res['losses'][0]:.4f}), "
+          f"{res['stragglers']} straggler steps, "
+          f"{res['mean_step_s']*1e3:.1f} ms/step; checkpoints in {ckpt_dir}")
+    assert res["losses"][-1] < res["losses"][0], "loss must decrease"
+
+
+if __name__ == "__main__":
+    main()

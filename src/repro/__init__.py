@@ -1,0 +1,5 @@
+"""repro — HiFrames on JAX/TPU: distributed data frames + LM training substrate."""
+from . import core
+from .core import api as hiframes  # `from repro import hiframes as hf`
+
+__version__ = "0.1.0"

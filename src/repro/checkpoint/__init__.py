@@ -1,0 +1,2 @@
+from . import ckpt
+from .ckpt import AsyncSaver, latest_step, restore, save

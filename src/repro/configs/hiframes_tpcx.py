@@ -1,0 +1,50 @@
+"""The paper's own workload configurations (TPCx-BB-derived).
+
+Scale factors follow the paper's evaluation section: the micro-benchmarks
+use uniform tables (filter 2B rows / join 0.5M / aggregate 256M at paper
+scale), Q05/Q25/Q26 use BigBench-like tables; Q05 adds the Zipf skew that
+drives the paper's skew/OOM discussion.  ``scaled(sf)`` maps a TPCx-BB-ish
+scale factor to row counts; the benchmark harness defaults to CPU-feasible
+fractions of these.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class TpcxConfig:
+    name: str
+    store_sales_rows: int
+    items: int
+    customers: int
+    clickstream_rows: int
+    skew: float = 0.0            # zipf exponent-1 for wcs_item_sk / Q05
+
+    def scaled(self, f: float) -> "TpcxConfig":
+        return TpcxConfig(
+            self.name,
+            int(self.store_sales_rows * f), max(int(self.items * f), 16),
+            max(int(self.customers * f), 16),
+            int(self.clickstream_rows * f), self.skew)
+
+
+# paper-scale reference points (Fig. 11 / Fig. 12 use SF 100..1000; Q26 at
+# SF1000 has a 1.2B-row fact table)
+SF100 = TpcxConfig("sf100", 120_000_000, 178_000, 990_000, 390_000_000)
+SF1000 = TpcxConfig("sf1000", 1_200_000_000, 500_000, 5_000_000,
+                    3_900_000_000)
+Q05_SKEWED = TpcxConfig("q05skew", 120_000_000, 178_000, 990_000,
+                        390_000_000, skew=1.1)
+
+# CPU-feasible default used by benchmarks/bench_tpcx.py
+LOCAL = TpcxConfig("local", 400_000, 20_000, 50_000, 400_000, skew=1.1)
+
+MICRO = {
+    # paper Fig. 8a row counts (scaled by the harness)
+    "filter_rows": 2_000_000_000,
+    "join_rows": 500_000,
+    "aggregate_rows": 256_000_000,
+    # Fig. 8b series length
+    "analytics_rows": 256_000_000,
+}

@@ -1,0 +1,11 @@
+"""repro.core — HiFrames: compiler-based distributed data frames in JAX.
+
+The paper's primary contribution: a lazy data-frame IR whose relational
+operators are optimized (predicate pushdown, column pruning), distribution-
+inferred over the 1D_BLOCK/1D_VAR/REP semilattice, and lowered into a single
+jitted shard_map SPMD program alongside arbitrary array computation.
+"""
+from . import api, distribution, expr, ir, lower, optimizer, physical, table
+from .api import *  # noqa: F401,F403
+from .lower import ExecConfig
+from .table import DTable

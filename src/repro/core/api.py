@@ -1,0 +1,254 @@
+"""HiFrames user API — data frames tightly integrated with array code.
+
+Mirrors the paper's Table 1 surface:
+
+    import repro.hiframes as hf
+    df  = hf.table({"id": ids, "x": xs})          # DataSource analogue
+    v   = df["x"]                                  # projection -> expression
+    df2 = df[df["id"] < 100]                       # filter
+    df3 = hf.join(df1, df2, on=("id", "cid"))      # join (different key names OK)
+    df4 = hf.aggregate(df1, "id", xc=hf.sum(df1["x"] < 1.0), ym=hf.mean(df1["y"]))
+    df5 = hf.concat(df1, df2)                      # [df1; df2]
+    c   = hf.cumsum(df1, df1["x"])                 # analytics
+    a   = hf.stencil(df1, df1["x"], [1, 2, 1], scale=4.0)   # WMA
+    out = df4.collect()                            # optimize+distribute+jit+run
+
+Every collected column is a plain jax.Array; any jax array can be attached
+with ``with_column`` or referenced directly inside expressions (the paper's
+"any array in the program" rule).
+"""
+from __future__ import annotations
+
+from typing import Any, Sequence
+
+import numpy as np
+
+from . import distribution as D
+from . import ir
+from .expr import (AggExpr, ColRef, Expr, UDF, as_expr, count, first, fn_expr,
+                   max_, mean, min_, nunique, std, sum_, var)
+from .lower import ExecConfig, Lowered, lower
+from .table import DTable
+
+__all__ = [
+    "DataFrame", "table", "join", "aggregate", "concat", "cumsum", "stencil",
+    "sma", "wma", "lag", "lead", "sum_", "mean", "count", "min_", "max_",
+    "var", "std", "first", "nunique", "udf", "ExecConfig", "explain",
+]
+
+
+class DataFrame:
+    """Lazy distributed data frame (wraps a logical plan node).
+
+    ``rep_nodes`` tracks which plan nodes the user pinned to REP via
+    :meth:`replicate` — the set survives joins/aggregates so a broadcast
+    dimension table stays broadcast inside a larger plan."""
+
+    def __init__(self, node: ir.Node, rep_nodes: frozenset = frozenset()):
+        self.node = node
+        self._rep_nodes = frozenset(rep_nodes)
+
+    @property
+    def _replicated(self) -> bool:
+        return self.node.id in self._rep_nodes
+
+    # -- schema ---------------------------------------------------------------
+    @property
+    def schema(self) -> dict[str, np.dtype]:
+        return self.node.schema
+
+    @property
+    def columns(self) -> list[str]:
+        return list(self.node.schema)
+
+    # -- expression building ----------------------------------------------------
+    def __getitem__(self, key):
+        if isinstance(key, str):
+            return ColRef(self.node.id, key)
+        if isinstance(key, Expr):                       # df[pred] -> filter
+            return DataFrame(ir.Filter(self.node, key), self._rep_nodes)
+        if isinstance(key, (list, tuple)):              # df[["a","b"]] -> project
+            cols = {k: ColRef(self.node.id, k) for k in key}
+            return DataFrame(ir.Project(self.node, cols), self._rep_nodes)
+        raise TypeError(key)
+
+    def with_column(self, name: str, e) -> "DataFrame":
+        """Attach a derived column (df[:id3] = expr analogue)."""
+        cols = {k: ColRef(self.node.id, k) for k in self.node.schema}
+        cols[name] = as_expr(e)
+        return DataFrame(ir.Project(self.node, cols), self._rep_nodes)
+
+    def rename(self, mapping: dict[str, str]) -> "DataFrame":
+        cols = {mapping.get(k, k): ColRef(self.node.id, k) for k in self.node.schema}
+        return DataFrame(ir.Project(self.node, cols), self._rep_nodes)
+
+    def select(self, *names: str) -> "DataFrame":
+        return self[list(names)]
+
+    def sort(self, by: str, ascending: bool = True) -> "DataFrame":
+        return DataFrame(ir.Sort(self.node, by, ascending), self._rep_nodes)
+
+    def replicate(self) -> "DataFrame":
+        """Pin this frame to REP (broadcast) — small dimension tables."""
+        return DataFrame(self.node,
+                         frozenset(n.id for n in ir.topo_order(self.node)))
+
+    # -- execution ---------------------------------------------------------------
+    def _force_rep(self) -> set[int]:
+        return set(self._rep_nodes)
+
+    def collect(self, cfg: ExecConfig | None = None, keep: Sequence[str] | None = None,
+                kernels: dict | None = None) -> DTable:
+        """Execute with capacity-overflow auto-retry (doubled expansion —
+        the 1D_VAR static-capacity fault-tolerance hook, DESIGN.md §2)."""
+        import dataclasses as _dc
+        cfg = cfg or ExecConfig()
+        for _attempt in range(max(cfg.auto_retry, 0) + 1):
+            lowered, _ = lower(self.node, cfg, set(keep) if keep else None,
+                               force_rep=self._force_rep(), kernels=kernels)
+            t = lowered()
+            if not t.overflow or _attempt == cfg.auto_retry:
+                return t
+            cfg = _dc.replace(cfg,
+                              join_expansion=max(cfg.join_expansion, 1.0) * 2,
+                              shuffle_slack=cfg.shuffle_slack * 2)
+        return t
+
+    def lower(self, cfg: ExecConfig | None = None, keep: Sequence[str] | None = None,
+              collect_block: bool = False, kernels: dict | None = None) -> Lowered:
+        lowered, _ = lower(self.node, cfg, set(keep) if keep else None,
+                           collect_block=collect_block,
+                           force_rep=self._force_rep(), kernels=kernels)
+        return lowered
+
+    def to_numpy(self, cfg: ExecConfig | None = None) -> dict[str, np.ndarray]:
+        return self.collect(cfg).to_numpy()
+
+    def collect_matrix(self, cols: Sequence[str], cfg: ExecConfig | None = None):
+        """Matrix assembly (the paper's transpose(typed_hcat) pattern): returns
+        a row-sharded (rows, k) float32 matrix + row count, rebalanced to
+        1D_BLOCK as ML algorithms require."""
+        import jax.numpy as jnp
+        lowered, _ = lower(self.node, cfg, set(cols), collect_block=True,
+                           force_rep=self._force_rep())
+        t = lowered()
+        mat = jnp.stack([t.columns[c].astype(jnp.float32) for c in cols], axis=1)
+        return mat, t.counts, t.capacity
+
+    def explain(self, cfg: ExecConfig | None = None) -> str:
+        cfg = cfg or ExecConfig()
+        from . import optimizer as opt
+        root = self.node
+        if cfg.optimize_plan:
+            root, _ = opt.optimize(root)
+        info = D.infer(root, force_rep=self._force_rep(),
+                       broadcast_join=cfg.broadcast_join)
+        root = D.insert_rebalance(root, info)
+        return ir.plan_str(root, info.dists)
+
+    def __repr__(self):
+        return f"DataFrame({list(self.node.schema)})\n{ir.plan_str(self.node)}"
+
+
+# ---------------------------------------------------------------------------
+# constructors / verbs
+# ---------------------------------------------------------------------------
+
+
+def table(columns: dict[str, Any], name: str = "t") -> DataFrame:
+    """Create a data frame from host/device arrays (DataSource analogue)."""
+    lens = {k: len(v) for k, v in columns.items()}
+    if len(set(lens.values())) > 1:
+        raise ValueError(f"column length mismatch: {lens}")
+    return DataFrame(ir.Scan(name, dict(columns)))
+
+
+def join(left: DataFrame, right: DataFrame, on, suffix: str = "_r",
+         how: str = "inner") -> DataFrame:
+    """Equi-join; ``on`` is a name or (left_name, right_name).
+
+    how="left" keeps unmatched left rows (right columns zero-filled; a
+    ``_matched`` int column distinguishes real zeros — the static-shape
+    stand-in for SQL NULLs, documented in DESIGN.md)."""
+    if isinstance(on, str):
+        lo = ro = on
+    else:
+        lo, ro = on
+    if how not in ("inner", "left"):
+        raise ValueError(how)
+    rep = left._rep_nodes | right._rep_nodes
+    node = ir.Join(left.node, right.node, lo, ro, suffix, how)
+    if left._replicated and right._replicated:
+        rep = rep | {node.id}
+    return DataFrame(node, rep)
+
+
+def aggregate(df: DataFrame, by: str, **aggs: AggExpr) -> DataFrame:
+    for k, v in aggs.items():
+        if not isinstance(v, AggExpr):
+            raise TypeError(f"{k} must be an AggExpr (hf.sum/mean/...)")
+    node = ir.Aggregate(df.node, by, dict(aggs))
+    rep = df._rep_nodes | ({node.id} if df._replicated else set())
+    return DataFrame(node, frozenset(rep))
+
+
+def concat(*dfs: DataFrame) -> DataFrame:
+    schemas = [tuple(d.node.schema) for d in dfs]
+    if len(set(schemas)) > 1:
+        raise ValueError(f"schema mismatch in concat: {schemas}")
+    node = ir.Concat(tuple(d.node for d in dfs))
+    rep = frozenset().union(*(d._rep_nodes for d in dfs))
+    if all(d._replicated for d in dfs):
+        rep = rep | {node.id}
+    return DataFrame(node, frozenset(rep))
+
+
+def cumsum(df: DataFrame, e, out: str = "cumsum") -> DataFrame:
+    """Distributed cumulative sum (MPI_Exscan analogue)."""
+    return DataFrame(ir.Window(df.node, "cumsum", as_expr(e), out),
+                     df._rep_nodes)
+
+
+def stencil(df: DataFrame, e, weights: Sequence[float], *, scale: float = 1.0,
+            center: int | None = None, out: str = "stencil") -> DataFrame:
+    """1-D stencil: out[i] = sum_j w[j]/scale * x[i+j-center].
+
+    SMA == stencil(x, [1,1,1], scale=3); WMA == stencil(x, [1,2,1], scale=4).
+    """
+    w = tuple(float(x) / scale for x in weights)
+    c = len(w) // 2 if center is None else center
+    return DataFrame(ir.Window(df.node, "stencil", as_expr(e), out,
+                               weights=w, center=c), df._rep_nodes)
+
+
+def sma(df: DataFrame, e, window: int = 3, out: str = "sma") -> DataFrame:
+    return stencil(df, e, [1.0] * window, scale=float(window), out=out)
+
+
+def wma(df: DataFrame, e, weights: Sequence[float], out: str = "wma") -> DataFrame:
+    return stencil(df, e, weights, scale=float(sum(weights)), out=out)
+
+
+def lag(df: DataFrame, e, n: int = 1, out: str = "lag") -> DataFrame:
+    """SQL lag(): out[i] = x[i-n] across the distributed order (paper Table 1
+    mentions SQL's lag/lead as the window-function alternative to stencils —
+    here they ARE stencils: a one-hot window with offset).  Borders -> 0."""
+    w = [1.0] + [0.0] * n
+    return DataFrame(ir.Window(df.node, "stencil", as_expr(e), out,
+                               weights=tuple(w), center=n), df._rep_nodes)
+
+
+def lead(df: DataFrame, e, n: int = 1, out: str = "lead") -> DataFrame:
+    """SQL lead(): out[i] = x[i+n]; borders -> 0."""
+    w = [0.0] * n + [1.0]
+    return DataFrame(ir.Window(df.node, "stencil", as_expr(e), out,
+                               weights=tuple(w), center=0), df._rep_nodes)
+
+
+def udf(fn, *args) -> UDF:
+    """Lift a jax-traceable elementwise function into an expression."""
+    return fn_expr(fn, *args)
+
+
+def explain(df: DataFrame, cfg: ExecConfig | None = None) -> str:
+    return df.explain(cfg)

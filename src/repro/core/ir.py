@@ -1,0 +1,337 @@
+"""Logical plan IR — the Domain-Pass analogue.
+
+The paper encapsulates relational operations into first-class AST nodes
+(``Expr(:aggregate, ...)``) so that the whole-program compiler can see and
+transform them.  Here each node is an explicit dataclass; a DataFrame wraps a
+node, and ``collect()`` triggers optimize → distribute → lower → jit.
+
+Node ids are globally unique; expression ColRefs name columns as
+(node_id, column_name), which gives the optimizer exact column provenance
+(needed for predicate pushdown through join and for column pruning).
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field, replace
+from typing import Any, Optional
+
+import numpy as np
+
+from .expr import AggExpr, ColRef, Expr
+
+_ids = itertools.count()
+
+
+def fresh_id() -> int:
+    return next(_ids)
+
+
+@dataclass(eq=False)
+class Node:
+    """Base logical node.  ``schema`` maps column name -> numpy dtype."""
+
+    id: int = field(default_factory=fresh_id, init=False)
+
+    @property
+    def children(self) -> tuple["Node", ...]:
+        return ()
+
+    @property
+    def schema(self) -> dict[str, np.dtype]:
+        raise NotImplementedError
+
+    def with_children(self, children: tuple["Node", ...]) -> "Node":
+        raise NotImplementedError
+
+    def short(self) -> str:
+        return type(self).__name__
+
+
+@dataclass(eq=False)
+class Scan(Node):
+    """Leaf: a source table (in-memory arrays or a named dataset)."""
+
+    name: str
+    columns: dict[str, Any]          # name -> array (host or device)
+    _schema: dict[str, np.dtype] = None
+
+    def __post_init__(self):
+        if self._schema is None:
+            self._schema = {k: np.asarray(v[:0] if hasattr(v, "__getitem__") else v).dtype
+                            for k, v in self.columns.items()}
+
+    @property
+    def schema(self):
+        return dict(self._schema)
+
+    def with_children(self, children):
+        assert not children
+        return self
+
+    def short(self):
+        return f"Scan({self.name})"
+
+
+@dataclass(eq=False)
+class Filter(Node):
+    child: Node
+    pred: Expr
+
+    @property
+    def children(self):
+        return (self.child,)
+
+    @property
+    def schema(self):
+        return self.child.schema
+
+    def with_children(self, children):
+        n = replace(self)
+        n.child = children[0]
+        return n
+
+    def short(self):
+        return f"Filter({self.pred})"
+
+
+@dataclass(eq=False)
+class Project(Node):
+    """Column selection / renaming / derived columns.
+
+    ``cols`` maps output name -> Expr over child columns.  Covers projection,
+    column assignment (``df[:id3] = ...``) and renames.
+    """
+
+    child: Node
+    cols: dict[str, Expr]
+    dtypes: dict[str, np.dtype] = None  # resolved lazily at lowering
+
+    @property
+    def children(self):
+        return (self.child,)
+
+    @property
+    def schema(self):
+        if self.dtypes:
+            return dict(self.dtypes)
+        child_schema = self.child.schema
+        out = {}
+        for name, e in self.cols.items():
+            if isinstance(e, ColRef) and e.name in child_schema:
+                out[name] = child_schema[e.name]
+            else:
+                out[name] = np.dtype(np.float32)  # refined at lowering
+        return out
+
+    def with_children(self, children):
+        n = replace(self)
+        n.child = children[0]
+        return n
+
+    def short(self):
+        return f"Project({list(self.cols)})"
+
+
+@dataclass(eq=False)
+class Join(Node):
+    """Inner equi-join (the paper's supported join); key cols may differ."""
+
+    left: Node
+    right: Node
+    left_on: str
+    right_on: str
+    suffix: str = "_r"
+    how: str = "inner"
+
+    @property
+    def children(self):
+        return (self.left, self.right)
+
+    @property
+    def schema(self):
+        ls, rs = self.left.schema, self.right.schema
+        out = dict(ls)
+        for name, dt in rs.items():
+            if name == self.right_on:
+                continue  # key is unified into left_on
+            out[name + self.suffix if name in out else name] = dt
+        if self.how == "left":
+            out["_matched"] = np.dtype(np.int32)
+        return out
+
+    def right_out_name(self, name: str) -> str:
+        return name + self.suffix if name in self.left.schema else name
+
+    def with_children(self, children):
+        n = replace(self)
+        n.left, n.right = children
+        return n
+
+    def short(self):
+        return f"Join({self.left_on}=={self.right_on})"
+
+
+@dataclass(eq=False)
+class Aggregate(Node):
+    """Group-by ``key`` with named aggregations over expressions."""
+
+    child: Node
+    key: str
+    aggs: dict[str, AggExpr]
+
+    @property
+    def children(self):
+        return (self.child,)
+
+    @property
+    def schema(self):
+        ks = self.child.schema[self.key]
+        out = {self.key: ks}
+        for name, agg in self.aggs.items():
+            if agg.fn in ("count", "nunique"):
+                out[name] = np.dtype(np.int32)
+            elif agg.fn in ("mean", "var", "std"):
+                out[name] = np.dtype(np.float32)
+            else:
+                out[name] = np.dtype(np.float32)  # refined at lowering
+        return out
+
+    def with_children(self, children):
+        n = replace(self)
+        n.child = children[0]
+        return n
+
+    def short(self):
+        return f"Aggregate(by={self.key}, {list(self.aggs)})"
+
+
+@dataclass(eq=False)
+class Concat(Node):
+    """Vertical concatenation (UNION ALL); schemas must match."""
+
+    parts: tuple[Node, ...]
+
+    @property
+    def children(self):
+        return tuple(self.parts)
+
+    @property
+    def schema(self):
+        return self.parts[0].schema
+
+    def with_children(self, children):
+        n = replace(self)
+        n.parts = tuple(children)
+        return n
+
+
+@dataclass(eq=False)
+class Window(Node):
+    """Analytics window ops: cumsum or 1-D stencil (SMA/WMA).
+
+    kind='cumsum'  -> out = prefix sums of ``expr``
+    kind='stencil' -> out[i] = sum_j weights[j] * x[i + j - center]
+    Adds column ``out`` to the child's schema.
+    """
+
+    child: Node
+    kind: str
+    expr: Expr
+    out: str
+    weights: tuple[float, ...] = ()
+    center: int = 0
+
+    @property
+    def children(self):
+        return (self.child,)
+
+    @property
+    def schema(self):
+        s = self.child.schema
+        s[self.out] = np.dtype(np.float32)
+        return s
+
+    def with_children(self, children):
+        n = replace(self)
+        n.child = children[0]
+        return n
+
+    def short(self):
+        return f"Window({self.kind}->{self.out})"
+
+
+@dataclass(eq=False)
+class Sort(Node):
+    """Global sort by one key column (sample-sort)."""
+
+    child: Node
+    by: str
+    ascending: bool = True
+
+    @property
+    def children(self):
+        return (self.child,)
+
+    @property
+    def schema(self):
+        return self.child.schema
+
+    def with_children(self, children):
+        n = replace(self)
+        n.child = children[0]
+        return n
+
+
+@dataclass(eq=False)
+class Rebalance(Node):
+    """Inserted by the distribution pass: 1D_VAR -> 1D_BLOCK."""
+
+    child: Node
+
+    @property
+    def children(self):
+        return (self.child,)
+
+    @property
+    def schema(self):
+        return self.child.schema
+
+    def with_children(self, children):
+        n = replace(self)
+        n.child = children[0]
+        return n
+
+
+# ---------------------------------------------------------------------------
+# DAG utilities
+# ---------------------------------------------------------------------------
+
+
+def topo_order(root: Node) -> list[Node]:
+    seen: dict[int, Node] = {}
+    order: list[Node] = []
+
+    def visit(n: Node):
+        if n.id in seen:
+            return
+        seen[n.id] = n
+        for c in n.children:
+            visit(c)
+        order.append(n)
+
+    visit(root)
+    return order
+
+
+def plan_str(root: Node, dists: dict[int, str] | None = None) -> str:
+    """Pretty-printer used by EXPLAIN and the optimizer tests."""
+    lines: list[str] = []
+
+    def rec(n: Node, depth: int):
+        d = f"  [{dists[n.id]}]" if dists and n.id in dists else ""
+        lines.append("  " * depth + f"{n.short()} #{n.id}{d}")
+        for c in n.children:
+            rec(c, depth + 1)
+
+    rec(root, 0)
+    return "\n".join(lines)

@@ -1,0 +1,226 @@
+"""Relational optimizer — the DataFrame-Pass analogue (paper §4.3).
+
+The paper builds a query tree over *only* the relational nodes of a general
+program AST and applies rule-based rewrites after validating them against the
+surrounding array code via liveness.  Here the plan IS the relational DAG
+(array code hangs off it through Project/Window expressions and
+ExternalArray leaves), so validity reduces to: a rewrite must not change the
+multiset of rows feeding any *other* consumer of a shared subplan.  We check
+consumer counts (DAG fan-out) before rewriting — the liveness analogue.
+
+Rules implemented (fixed-point, bottom-up):
+  * filter fusion             Filter(Filter(x,p),q)      -> Filter(x, p&q)
+  * push predicate through project (rename-aware)
+  * push predicate through join (the paper's flagship, Fig. 6)
+  * push predicate through concat
+  * column pruning            narrow Scans/Projects to live columns
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+from . import ir
+from .expr import BinOp, ColRef, Expr
+
+
+def _consumers(root: ir.Node) -> dict[int, int]:
+    counts: dict[int, int] = {}
+    for n in ir.topo_order(root):
+        for c in n.children:
+            counts[c.id] = counts.get(c.id, 0) + 1
+    return counts
+
+
+# ---------------------------------------------------------------------------
+# predicate pushdown
+# ---------------------------------------------------------------------------
+
+
+def _rename_refs(e: Expr, mapping: dict[str, str]) -> Expr:
+    def fix(ref: ColRef) -> Expr:
+        return ColRef(ref.table_id, mapping.get(ref.name, ref.name))
+    return e.map_refs(fix)
+
+
+def _try_push_filter(f: ir.Filter, fanout: dict[int, int]) -> ir.Node | None:
+    child = f.child
+    # Never push through a node another consumer also reads (liveness check —
+    # the other consumer would observe the filtered rows).
+    if fanout.get(child.id, 0) > 1:
+        return None
+    names = {n for (_tid, n) in f.pred.columns()}
+
+    if isinstance(child, ir.Filter):
+        fused = ir.Filter(child.child, BinOp("and", child.pred, f.pred))
+        return fused
+
+    if isinstance(child, ir.Project):
+        # push only if every referenced output column is a pure rename
+        mapping: dict[str, str] = {}
+        for n in names:
+            e = child.cols.get(n)
+            if not isinstance(e, ColRef):
+                return None
+            mapping[n] = e.name
+        new_pred = _rename_refs(f.pred, mapping)
+        return child.with_children((ir.Filter(child.child, new_pred),))
+
+    if isinstance(child, ir.Join):
+        j = child
+        lnames = set(j.left.schema)
+        rnames_out = {j.right_out_name(n): n for n in j.right.schema
+                      if n != j.right_on}
+        # the unified key column may be pushed to either side
+        if names <= (lnames | {j.left_on}):
+            nl = ir.Filter(j.left, f.pred)
+            return j.with_children((nl, j.right))
+        if names <= (set(rnames_out) | {j.left_on}):
+            mapping = dict(rnames_out)
+            mapping[j.left_on] = j.right_on
+            np_ = _rename_refs(f.pred, mapping)
+            nr = ir.Filter(j.right, np_)
+            return j.with_children((j.left, nr))
+        return None
+
+    if isinstance(child, ir.Concat):
+        parts = tuple(ir.Filter(p, f.pred) for p in child.parts)
+        return child.with_children(parts)
+
+    return None
+
+
+def push_predicates(root: ir.Node) -> tuple[ir.Node, int]:
+    """Apply pushdown rules to fixed point; returns (new_root, n_rewrites)."""
+    n_rewrites = 0
+    changed = True
+    while changed:
+        changed = False
+        fanout = _consumers(root)
+        memo: dict[int, ir.Node] = {}
+
+        def rec(n: ir.Node) -> ir.Node:
+            nonlocal changed, n_rewrites
+            if n.id in memo:
+                return memo[n.id]
+            new_children = tuple(rec(c) for c in n.children)
+            out = n if new_children == n.children else n.with_children(new_children)
+            if isinstance(out, ir.Filter):
+                pushed = _try_push_filter(out, fanout)
+                if pushed is not None:
+                    changed = True
+                    n_rewrites += 1
+                    out = pushed
+            memo[n.id] = out
+            return out
+
+        root = rec(root)
+    return root, n_rewrites
+
+
+# ---------------------------------------------------------------------------
+# column pruning (whole-plan liveness; paper: DCE removes unused columns)
+# ---------------------------------------------------------------------------
+
+
+def _required_columns(root: ir.Node, keep: set[str] | None) -> dict[int, set[str]]:
+    """For every node, the set of its output columns actually consumed."""
+    req: dict[int, set[str]] = {root.id: set(keep) if keep else set(root.schema)}
+    for n in reversed(ir.topo_order(root)):
+        need = req.setdefault(n.id, set(n.schema))
+        if isinstance(n, ir.Filter):
+            child_need = set(need) | {c for (_t, c) in n.pred.columns()}
+            req.setdefault(n.child.id, set()).update(child_need)
+        elif isinstance(n, ir.Project):
+            child_need = set()
+            for out_name, e in n.cols.items():
+                if out_name in need:
+                    child_need |= {c for (_t, c) in e.columns()}
+            req.setdefault(n.child.id, set()).update(child_need)
+        elif isinstance(n, ir.Join):
+            lneed, rneed = {n.left_on}, {n.right_on}
+            lschema = n.left.schema
+            for out_name in need:
+                if out_name == n.left_on:
+                    continue
+                if out_name in lschema:
+                    lneed.add(out_name)
+                else:
+                    base = out_name
+                    if out_name.endswith(n.suffix) and out_name[: -len(n.suffix)] in lschema:
+                        base = out_name[: -len(n.suffix)]
+                    rneed.add(base)
+            req.setdefault(n.left.id, set()).update(lneed)
+            req.setdefault(n.right.id, set()).update(rneed)
+        elif isinstance(n, ir.Aggregate):
+            child_need = {n.key}
+            for name, agg in n.aggs.items():
+                if name in need and agg.expr is not None:
+                    child_need |= {c for (_t, c) in agg.expr.columns()}
+            req.setdefault(n.child.id, set()).update(child_need)
+        elif isinstance(n, ir.Window):
+            child_need = (set(need) - {n.out}) | {c for (_t, c) in n.expr.columns()}
+            req.setdefault(n.child.id, set()).update(child_need)
+        elif isinstance(n, ir.Sort):
+            req.setdefault(n.child.id, set()).update(set(need) | {n.by})
+        elif isinstance(n, ir.Concat):
+            for c in n.parts:
+                req.setdefault(c.id, set()).update(need)
+        elif isinstance(n, ir.Rebalance):
+            req.setdefault(n.child.id, set()).update(need)
+    return req
+
+
+def prune_columns(root: ir.Node, keep: set[str] | None = None) -> tuple[ir.Node, int]:
+    """Narrow Scan and Project nodes to live columns."""
+    req = _required_columns(root, keep)
+    pruned = 0
+    memo: dict[int, ir.Node] = {}
+
+    def rec(n: ir.Node) -> ir.Node:
+        nonlocal pruned
+        if n.id in memo:
+            return memo[n.id]
+        need = req.get(n.id, set(n.schema))
+        if isinstance(n, ir.Scan):
+            live = {k: v for k, v in n.columns.items() if k in need}
+            if len(live) < len(n.columns):
+                pruned += len(n.columns) - len(live)
+                out = ir.Scan(n.name, live,
+                              {k: v for k, v in n._schema.items() if k in live})
+            else:
+                out = n
+        else:
+            new_children = tuple(rec(c) for c in n.children)
+            out = n if new_children == n.children else n.with_children(new_children)
+            if isinstance(out, ir.Project):
+                live_cols = {k: v for k, v in out.cols.items() if k in need}
+                if len(live_cols) < len(out.cols):
+                    pruned += len(out.cols) - len(live_cols)
+                    out = ir.Project(out.child, live_cols)
+            elif isinstance(out, ir.Aggregate):
+                live_aggs = {k: v for k, v in out.aggs.items()
+                             if k in need or k == out.key}
+                if len(live_aggs) < len(out.aggs):
+                    pruned += len(out.aggs) - len(live_aggs)
+                    out = ir.Aggregate(out.child, out.key, live_aggs)
+        memo[n.id] = out
+        return out
+
+    return rec(root), pruned
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+
+
+def optimize(root: ir.Node, keep: set[str] | None = None,
+             enable: tuple[str, ...] = ("pushdown", "prune")) -> tuple[ir.Node, dict]:
+    stats = {"pushdown": 0, "pruned_columns": 0}
+    if "pushdown" in enable:
+        root, k = push_predicates(root)
+        stats["pushdown"] = k
+    if "prune" in enable:
+        root, p = prune_columns(root, keep)
+        stats["pruned_columns"] = p
+    return root, stats

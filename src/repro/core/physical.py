@@ -1,0 +1,522 @@
+"""Physical operators — the CGen analogue (paper §4.5), re-thought for TPU.
+
+Every function in this module is *per-shard* code: it runs inside a single
+``jax.shard_map`` region spanning the whole query plan, operating on one
+shard's ``(capacity,)`` column slices plus a scalar valid-row ``count``.
+Collectives (`lax.all_to_all`, `lax.all_gather`, `lax.ppermute`, `lax.psum`)
+replace the paper's MPI calls:
+
+  MPI_Alltoallv  -> fixed-capacity bucketed all_to_all + count vector
+  MPI_Alltoall   -> (the count exchange folds into the same all_to_all)
+  MPI_Exscan     -> ppermute ladder / all_gather-of-scalars exclusive scan
+  Isend/Irecv    -> ppermute halo exchange (XLA emits async start/done pairs)
+
+All shapes are static; validity is tracked with counts and masks (DESIGN.md
+§2).  Key sentinel for sorts is the dtype max, so padding sorts to the end.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+Axes = tuple[str, ...]
+
+
+# ---------------------------------------------------------------------------
+# small helpers
+# ---------------------------------------------------------------------------
+
+def nshards(axes: Axes) -> int:
+    return int(np.prod([lax.axis_size(a) for a in axes]))
+
+
+def my_rank(axes: Axes):
+    return lax.axis_index(axes)
+
+
+def valid_mask(count, cap: int):
+    return jnp.arange(cap, dtype=jnp.int32) < count
+
+
+def _sentinel(dtype) -> jnp.ndarray:
+    dtype = jnp.dtype(dtype)
+    if jnp.issubdtype(dtype, jnp.floating):
+        return jnp.array(jnp.finfo(dtype).max, dtype)
+    return jnp.array(jnp.iinfo(dtype).max, dtype)
+
+
+def hash_u32(x: jax.Array) -> jax.Array:
+    """Lowbias32-style integer mix; floats are bitcast first."""
+    if jnp.issubdtype(x.dtype, jnp.floating):
+        x = lax.bitcast_convert_type(x.astype(jnp.float32), jnp.uint32)
+    else:
+        x = x.astype(jnp.uint32)
+    x = (x ^ (x >> 16)) * np.uint32(0x7FEB352D)
+    x = (x ^ (x >> 15)) * np.uint32(0x846CA68B)
+    x = x ^ (x >> 16)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# compaction (filter backend) — paper: "filter requires no communication"
+# ---------------------------------------------------------------------------
+
+def compact(cols: dict[str, jax.Array], keep: jax.Array, cap_out: int,
+            prefix_fn=None):
+    """Move rows where ``keep`` into the prefix of fresh (cap_out,) buffers.
+
+    Returns (cols_out, count_out, overflow).  Rows beyond cap_out are dropped
+    and flagged — the driver's retry hook (fault tolerance for capacity
+    planning, DESIGN.md §2).  ``prefix_fn`` routes the slot-assignment scan
+    through the stream_compact Pallas kernel.
+    """
+    keep = keep.astype(jnp.int32)
+    incl = prefix_fn(keep) if prefix_fn is not None else jnp.cumsum(keep)
+    dest = incl - 1
+    total = dest[-1] + 1 if keep.shape[0] else jnp.int32(0)
+    dest = jnp.where(keep > 0, dest, cap_out)          # parked -> dropped
+    overflow = total > cap_out
+    out = {}
+    for name, v in cols.items():
+        buf = jnp.zeros((cap_out,), v.dtype)
+        out[name] = buf.at[dest].set(v, mode="drop")
+    return out, jnp.minimum(total, cap_out).astype(jnp.int32), overflow
+
+
+# ---------------------------------------------------------------------------
+# exchange (MPI_Alltoallv analogue) — backbone of shuffle/join/aggregate,
+# and of MoE expert-parallel dispatch (models/moe.py reuses this).
+# ---------------------------------------------------------------------------
+
+def exchange(cols: dict[str, jax.Array], count, dest: jax.Array, *,
+             axes: Axes, bucket_cap: int, cap_out: int,
+             partition_fn=None, prefix_fn=None):
+    """Route row i of this shard to shard ``dest[i]``.
+
+    Static-shape plan: rows are stably grouped by destination into a
+    (P, bucket_cap) buffer per column, exchanged with one all_to_all, then
+    compacted into a (cap_out,) valid-prefix buffer.  Counts ride along as a
+    (P,) vector through the same all_to_all.  Stability: row order within a
+    (src, dst) pair is preserved and receives are concatenated in src order,
+    so global row order is preserved for order-sensitive users (rebalance).
+    """
+    P = nshards(axes) if axes else 1
+    valid = valid_mask(count, dest.shape[0])
+    dest = jnp.where(valid, dest.astype(jnp.int32), P)
+
+    if P == 1:
+        # single shard: no collective; just clamp into the output capacity.
+        return compact(cols, valid, cap_out, prefix_fn=prefix_fn)
+
+    if partition_fn is not None:
+        # hash_partition Pallas kernel: one streaming pass, no argsort, and
+        # rows scatter from their ORIGINAL positions (stability for free).
+        slot, send_counts = partition_fn(dest, P)
+        sdest, reorder = dest, None
+    else:
+        order = jnp.argsort(dest, stable=True)
+        sdest = dest[order]
+        send_counts = jnp.bincount(dest, length=P + 1)[:P].astype(jnp.int32)
+        offs = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                                jnp.cumsum(send_counts)[:-1]])
+        slot = jnp.arange(sdest.shape[0], dtype=jnp.int32) - offs[jnp.clip(sdest, 0, P - 1)]
+        reorder = order
+    in_range = sdest < P
+    overflow_send = jnp.any(in_range & (slot >= bucket_cap))
+    scatter_slot = jnp.where(in_range & (slot < bucket_cap), slot, bucket_cap)
+
+    sent = jnp.minimum(send_counts, bucket_cap)
+    recv_counts = lax.all_to_all(sent.reshape(P, 1), axes, 0, 0).reshape(P)
+
+    recv = {}
+    for name, v in cols.items():
+        buf = jnp.zeros((P, bucket_cap + 1), v.dtype)
+        src = v if reorder is None else v[reorder]
+        buf = buf.at[sdest, scatter_slot].set(src, mode="drop")
+        buf = buf[:, :bucket_cap]
+        recv[name] = lax.all_to_all(buf, axes, 0, 0)
+
+    slot_idx = jnp.arange(bucket_cap, dtype=jnp.int32)[None, :]
+    keep = (slot_idx < recv_counts[:, None]).reshape(-1)
+    flat = {k: v.reshape(-1) for k, v in recv.items()}
+    out, count_out, overflow_recv = compact(flat, keep, cap_out, prefix_fn=prefix_fn)
+    return out, count_out, overflow_send | overflow_recv
+
+
+def shuffle_by_key(cols: dict[str, jax.Array], count, key_name: str, *,
+                   axes: Axes, bucket_cap: int, cap_out: int,
+                   partition_fn=None, prefix_fn=None):
+    """Hash-partition rows so equal keys land on the same shard."""
+    P = nshards(axes) if axes else 1
+    dest = (hash_u32(cols[key_name]) % np.uint32(P)).astype(jnp.int32)
+    return exchange(cols, count, dest, axes=axes, bucket_cap=bucket_cap,
+                    cap_out=cap_out, partition_fn=partition_fn,
+                    prefix_fn=prefix_fn)
+
+
+# ---------------------------------------------------------------------------
+# local sort (bitonic via lax.sort — the TPU-native Timsort replacement)
+# ---------------------------------------------------------------------------
+
+def local_sort(cols: dict[str, jax.Array], count, key_name: str,
+               extra_keys: Sequence[str] = ()):
+    """Stable sort of valid rows by key (padding sorts to the end)."""
+    cap = cols[key_name].shape[0]
+    valid = valid_mask(count, cap)
+    keys = []
+    for kn in (key_name, *extra_keys):
+        keys.append(jnp.where(valid, cols[kn], _sentinel(cols[kn].dtype)))
+    # stable tiebreaker: original index
+    keys.append(jnp.arange(cap, dtype=jnp.int32))
+    names = list(cols)
+    operands = keys + [cols[n] for n in names]
+    res = lax.sort(tuple(operands), num_keys=len(keys))
+    sorted_keys = dict(zip((key_name, *extra_keys), res[: len(keys) - 1]))
+    sorted_cols = dict(zip(names, res[len(keys):]))
+    # masked key columns come back with sentinels; restore real values where valid
+    for kn, kv in sorted_keys.items():
+        sorted_cols[kn] = jnp.where(valid, kv, jnp.zeros((), kv.dtype))
+    return sorted_cols, sorted_keys[key_name]
+
+
+# ---------------------------------------------------------------------------
+# merge join (sort-merge with searchsorted expansion; duplicate keys OK)
+# ---------------------------------------------------------------------------
+
+def merge_join(lcols, lcount, rcols, rcount, lkey: str, rkey: str, *,
+               cap_out: int, r_suffix_map: dict[str, str], how: str = "inner"):
+    """Equi-join of two locally sorted shards (inner or left-outer).
+
+    Expansion trick: per-left-row match counts -> prefix sums -> each output
+    slot s maps back to (left row, offset within its match range) with two
+    searchsorteds.  Left-outer: unmatched rows get count 1 and zero-filled
+    right columns plus a ``_matched`` indicator (the static-shape NULL).
+    Fully static shapes; overflow flagged.
+    """
+    lcap = lcols[lkey].shape[0]
+    rcap = rcols[rkey].shape[0]
+    lvalid = valid_mask(lcount, lcap)
+    rvalid = valid_mask(rcount, rcap)
+    lk = jnp.where(lvalid, lcols[lkey], _sentinel(lcols[lkey].dtype))
+    rk = jnp.where(rvalid, rcols[rkey], _sentinel(rcols[rkey].dtype))
+
+    lo = jnp.searchsorted(rk, lk, side="left")
+    hi = jnp.searchsorted(rk, lk, side="right")
+    hi = jnp.minimum(hi, rcount)
+    lo = jnp.minimum(lo, rcount)
+    matches = (hi - lo).astype(jnp.int32)
+    cnt = jnp.where(lvalid, matches, 0)
+    if how == "left":
+        cnt = jnp.where(lvalid & (matches == 0), 1, cnt)
+
+    incl = jnp.cumsum(cnt)
+    excl = incl - cnt
+    total = incl[-1] if lcap else jnp.int32(0)
+    overflow = total > cap_out
+
+    s = jnp.arange(cap_out, dtype=jnp.int32)
+    li = jnp.searchsorted(incl, s, side="right")
+    li_c = jnp.clip(li, 0, lcap - 1)
+    matched = matches[li_c] > 0
+    ri = lo[li_c] + (s - excl[li_c])
+    ri_c = jnp.clip(ri, 0, rcap - 1)
+    out_valid = s < jnp.minimum(total, cap_out)
+    r_valid = out_valid & (matched if how == "left" else True)
+
+    out = {}
+    for name, v in lcols.items():
+        out[name] = jnp.where(out_valid, v[li_c], jnp.zeros((), v.dtype))
+    for name, v in rcols.items():
+        if name == rkey:
+            continue
+        out[r_suffix_map.get(name, name)] = jnp.where(
+            r_valid, v[ri_c], jnp.zeros((), v.dtype))
+    if how == "left":
+        out["_matched"] = (out_valid & matched).astype(jnp.int32)
+    return out, jnp.minimum(total, cap_out).astype(jnp.int32), overflow
+
+
+# ---------------------------------------------------------------------------
+# segmented aggregation (group-by backend; sorted-key TPU idiom)
+# ---------------------------------------------------------------------------
+
+def segment_aggregate(key_sorted: jax.Array, count, values: dict[str, tuple[str, jax.Array]],
+                      *, cap_out: int, segsum_fn=None):
+    """Aggregate ``values`` over runs of equal (sorted) keys.
+
+    values: name -> (fn, value_array) with fn in {sum, mean, count, min, max,
+    var, std, first, nunique}.  Returns ({key, **aggs}, n_groups, overflow).
+    """
+    cap = key_sorted.shape[0]
+    valid = valid_mask(count, cap)
+    prev = jnp.concatenate([jnp.full((1,), True),
+                            key_sorted[1:] != key_sorted[:-1]])
+    seg_start = valid & prev
+    seg_id = jnp.cumsum(seg_start.astype(jnp.int32)) - 1
+    seg_id = jnp.where(valid, seg_id, cap_out)          # padding -> dropped
+    n_seg = jnp.sum(seg_start.astype(jnp.int32))
+    overflow = n_seg > cap_out
+
+    def ssum(x):
+        if x.dtype == jnp.bool_:
+            x = x.astype(jnp.int32)      # sum(:x < 1.0) counts True rows
+        if segsum_fn is not None and jnp.issubdtype(x.dtype, jnp.floating):
+            # segment_reduce Pallas kernel (scan-difference at boundaries)
+            return segsum_fn(x, seg_id, valid, cap_out)
+        return jax.ops.segment_sum(jnp.where(valid, x, jnp.zeros((), x.dtype)),
+                                   seg_id, num_segments=cap_out + 1)[:cap_out]
+
+    def smin(x):
+        big = _sentinel(x.dtype)
+        return jax.ops.segment_min(jnp.where(valid, x, big), seg_id,
+                                   num_segments=cap_out + 1)[:cap_out]
+
+    def smax(x):
+        if jnp.issubdtype(x.dtype, jnp.floating):
+            small = jnp.array(jnp.finfo(x.dtype).min, x.dtype)
+        else:
+            small = jnp.array(jnp.iinfo(x.dtype).min, x.dtype)
+        return jax.ops.segment_max(jnp.where(valid, x, small), seg_id,
+                                   num_segments=cap_out + 1)[:cap_out]
+
+    ones = valid.astype(jnp.int32)
+    group_n = jax.ops.segment_sum(ones, seg_id, num_segments=cap_out + 1)[:cap_out]
+
+    out: dict[str, jax.Array] = {}
+    out["__key__"] = jax.ops.segment_max(
+        jnp.where(valid, key_sorted,
+                  jnp.array(jnp.iinfo(jnp.int32).min, key_sorted.dtype)
+                  if jnp.issubdtype(key_sorted.dtype, jnp.integer)
+                  else jnp.array(jnp.finfo(key_sorted.dtype).min, key_sorted.dtype)),
+        seg_id, num_segments=cap_out + 1)[:cap_out]
+
+    for name, (fn, x) in values.items():
+        if fn == "count":
+            out[name] = group_n
+        elif fn == "sum":
+            out[name] = ssum(x)
+        elif fn == "mean":
+            out[name] = ssum(x.astype(jnp.float32)) / jnp.maximum(group_n, 1)
+        elif fn == "min":
+            out[name] = smin(x)
+        elif fn == "max":
+            out[name] = smax(x)
+        elif fn in ("var", "std"):
+            xf = x.astype(jnp.float32)
+            m = ssum(xf) / jnp.maximum(group_n, 1)
+            m2 = ssum(xf * xf) / jnp.maximum(group_n, 1)
+            v = jnp.maximum(m2 - m * m, 0.0)
+            out[name] = jnp.sqrt(v) if fn == "std" else v
+        elif fn == "first":
+            first_idx = jax.ops.segment_min(
+                jnp.where(valid, jnp.arange(cap, dtype=jnp.int32), cap),
+                seg_id, num_segments=cap_out + 1)[:cap_out]
+            out[name] = x[jnp.clip(first_idx, 0, cap - 1)]
+        elif fn == "nunique":
+            # x must be sorted within segments (lowering sorts by (key, x)).
+            vprev = jnp.concatenate([jnp.full((1,), True), x[1:] != x[:-1]])
+            boundary = (seg_start | vprev) & valid
+            out[name] = jax.ops.segment_sum(boundary.astype(jnp.int32), seg_id,
+                                            num_segments=cap_out + 1)[:cap_out]
+        else:
+            raise ValueError(fn)
+    gvalid = jnp.arange(cap_out, dtype=jnp.int32) < jnp.minimum(n_seg, cap_out)
+    for name in out:
+        out[name] = jnp.where(gvalid, out[name], jnp.zeros((), out[name].dtype))
+    return out, jnp.minimum(n_seg, cap_out).astype(jnp.int32), overflow
+
+
+# ---------------------------------------------------------------------------
+# distributed scans (MPI_Exscan analogue)
+# ---------------------------------------------------------------------------
+
+def exscan_scalar(v, axes: Axes, method: str = "allgather"):
+    """Exclusive prefix-sum of a per-shard scalar across shards."""
+    P = nshards(axes)
+    if P == 1:
+        return jnp.zeros_like(v)
+    if method == "ladder" and len(axes) == 1:
+        # Hillis–Steele ladder over ppermute: log2(P) hops on the ICI ring.
+        x = v
+        shift = 1
+        while shift < P:
+            y = lax.ppermute(x, axes[0],
+                             perm=[(i, i + shift) for i in range(P - shift)])
+            x = x + y
+            shift *= 2
+        return x - v
+    idx = my_rank(axes)
+    allv = lax.all_gather(v, axes, tiled=False)          # (P, ...)
+    ranks = jnp.arange(P)
+    mask = (ranks < idx).astype(allv.dtype)
+    return jnp.tensordot(mask, allv, axes=1)
+
+
+def dist_cumsum(x: jax.Array, count, axes: Axes, method: str = "allgather",
+                prefix_fn=None):
+    """Distributed cumulative sum over the valid prefix of each shard."""
+    valid = valid_mask(count, x.shape[0])
+    xz = jnp.where(valid, x, jnp.zeros((), x.dtype))
+    local = prefix_fn(xz) if prefix_fn is not None else jnp.cumsum(xz)
+    total = local[-1] if x.shape[0] else jnp.zeros((), x.dtype)
+    base = exscan_scalar(total, axes, method=method)
+    return local + base
+
+
+# ---------------------------------------------------------------------------
+# 1-D stencil with halo exchange (SMA / WMA)
+# ---------------------------------------------------------------------------
+
+def halo_exchange(x: jax.Array, count, k_left: int, k_right: int, axes: Axes):
+    """Count-aware halo exchange over the valid prefixes.
+
+    Each shard's valid rows are the prefix ``x[:count]``; the global array is
+    the concatenation of the prefixes.  The left halo is the left neighbor's
+    *valid tail* ``x[count-k : count]``; the right halo is the right
+    neighbor's (masked) head ``x[:k]``.  Zeros at the global borders.  The
+    window radius must not exceed the smallest non-empty shard count (true
+    for 1D_BLOCK layouts with radius << block — asserted at plan time).
+    """
+    P = nshards(axes) if axes else 1
+    cap = x.shape[0]
+    xz = jnp.where(valid_mask(count, cap), x, jnp.zeros((), x.dtype))
+    left = jnp.zeros((k_left,), x.dtype)
+    right = jnp.zeros((k_right,), x.dtype)
+    if P == 1:
+        return left, right
+    my_tail = lax.dynamic_slice(
+        xz, (jnp.maximum(count - k_left, 0),), (max(k_left, 1),))[:k_left] \
+        if k_left else jnp.zeros((0,), x.dtype)
+    my_head = xz[:k_right] if k_right else jnp.zeros((0,), x.dtype)
+    if len(axes) == 1:
+        ax = axes[0]
+        if k_left:
+            left = lax.ppermute(my_tail, ax,
+                                perm=[(i, i + 1) for i in range(P - 1)])
+        if k_right:
+            right = lax.ppermute(my_head, ax,
+                                 perm=[(i + 1, i) for i in range(P - 1)])
+    else:
+        # multi-axis fallback: gather edges, select flat neighbors
+        idx = my_rank(axes)
+        if k_left:
+            edges = lax.all_gather(my_tail, axes)         # (P, k)
+            left = jnp.where(idx > 0, edges[jnp.maximum(idx - 1, 0)], left)
+        if k_right:
+            edges = lax.all_gather(my_head, axes)
+            right = jnp.where(idx < P - 1,
+                              edges[jnp.minimum(idx + 1, P - 1)], right)
+    return left, right
+
+
+def stencil1d(x: jax.Array, count, weights: Sequence[float], center: int,
+              axes: Axes, kernel_fn=None):
+    """out[i] = sum_j w[j] * x[i + j - center] over the distributed valid
+    prefix, halos from neighbors (paper's SMA/WMA; MPI_Isend/Irecv analogue).
+
+    ``kernel_fn(ext, weights, center) -> out`` lets the Pallas kernel
+    (kernels/stencil1d) replace the jnp sliding-window fallback.
+    """
+    w = np.asarray(weights, dtype=np.float32)
+    k_left, k_right = center, len(w) - 1 - center
+    cap = x.shape[0]
+    xf = x.astype(jnp.float32)
+    left, right = halo_exchange(xf, count, k_left, k_right, axes)
+    # ext[k_left + i] = x[i] (valid rows), right halo lands AT the dynamic
+    # position k_left + count so windows never straddle padding.
+    ext = jnp.zeros((cap + k_left + k_right,), jnp.float32)
+    xz = jnp.where(valid_mask(count, cap), xf, 0.0)
+    ext = lax.dynamic_update_slice(ext, xz, (k_left,))
+    if k_right:
+        ext = lax.dynamic_update_slice(ext, right, (k_left + count,))
+    if k_left:
+        ext = lax.dynamic_update_slice(ext, left, (0,))
+    if kernel_fn is not None:
+        out = kernel_fn(ext, w, center)
+    else:
+        out = jnp.zeros((cap,), jnp.float32)
+        for j, wj in enumerate(w):
+            out = out + np.float32(wj) * lax.dynamic_slice(ext, (j,), (cap,))
+    return jnp.where(valid_mask(count, cap), out, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# rebalance (1D_VAR -> 1D_BLOCK) and sample sort
+# ---------------------------------------------------------------------------
+
+def rebalance(cols: dict[str, jax.Array], count, *, axes: Axes,
+              bucket_cap: int, cap_out: int, partition_fn=None, prefix_fn=None):
+    """Even out row counts across shards, preserving global row order."""
+    P = nshards(axes) if axes else 1
+    cap = next(iter(cols.values())).shape[0]
+    if P == 1:
+        return compact(cols, valid_mask(count, cap), cap_out, prefix_fn=prefix_fn)
+    counts = lax.all_gather(count, axes)                 # (P,)
+    total = jnp.sum(counts)
+    base = exscan_scalar(count, axes)
+    block = (total + P - 1) // P                          # ceil
+    g = base + jnp.arange(cap, dtype=jnp.int32)
+    dest = jnp.where(valid_mask(count, cap),
+                     g // jnp.maximum(block, 1), P).astype(jnp.int32)
+    out, cnt, ovf = exchange(cols, count, dest, axes=axes,
+                             bucket_cap=bucket_cap, cap_out=cap_out,
+                             partition_fn=partition_fn, prefix_fn=prefix_fn)
+    return out, cnt, ovf
+
+
+def sample_sort(cols: dict[str, jax.Array], count, key_name: str, *,
+                axes: Axes, bucket_cap: int, cap_out: int, n_samples: int = 64,
+                ascending: bool = True):
+    """Global sort: local sort -> splitter selection -> route -> local sort."""
+    P = nshards(axes) if axes else 1
+    scols, skey = local_sort(cols, count, key_name)
+    cap = skey.shape[0]
+    if P > 1:
+        # sample evenly from the valid prefix
+        pos = (jnp.arange(n_samples, dtype=jnp.int32) *
+               jnp.maximum(count, 1)) // n_samples
+        samples = jnp.where(count > 0, skey[jnp.clip(pos, 0, cap - 1)],
+                            _sentinel(skey.dtype))
+        allsamp = lax.all_gather(samples, axes).reshape(-1)   # (P*n,)
+        allsamp = jnp.sort(allsamp)
+        # P-1 splitters at even quantiles
+        qpos = (jnp.arange(1, P, dtype=jnp.int32) * allsamp.shape[0]) // P
+        splitters = allsamp[qpos]
+        key_vals = jnp.where(valid_mask(count, cap), scols[key_name],
+                             _sentinel(skey.dtype))
+        dest = jnp.searchsorted(splitters, key_vals, side="right").astype(jnp.int32)
+        if not ascending:
+            dest = (P - 1) - dest
+    else:
+        dest = jnp.zeros((cap,), jnp.int32)
+    out, cnt, ovf = exchange(scols, count, dest, axes=axes,
+                             bucket_cap=bucket_cap, cap_out=cap_out)
+    out, _ = local_sort(out, cnt, key_name)
+    if not ascending:
+        # reverse valid prefix
+        capo = out[key_name].shape[0]
+        idx = jnp.where(valid_mask(cnt, capo),
+                        jnp.maximum(cnt - 1, 0) - jnp.arange(capo, dtype=jnp.int32),
+                        jnp.arange(capo, dtype=jnp.int32))
+        idx = jnp.clip(idx, 0, capo - 1)
+        out = {k: v[idx] for k, v in out.items()}
+    return out, cnt, ovf
+
+
+# ---------------------------------------------------------------------------
+# concat
+# ---------------------------------------------------------------------------
+
+def concat(parts: Sequence[tuple[dict[str, jax.Array], jax.Array]], cap_out: int):
+    """Vertical concat of per-shard tables (counts add; padding squeezed)."""
+    names = list(parts[0][0])
+    stacked = {n: jnp.concatenate([p[0][n] for p in parts]) for n in names}
+    keep = jnp.concatenate([valid_mask(c, p[next(iter(p))].shape[0])
+                            for p, c in parts])
+    return compact(stacked, keep, cap_out)

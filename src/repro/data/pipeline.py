@@ -1,0 +1,102 @@
+"""Training data pipeline built ON TOP of HiFrames — the integration story.
+
+The paper's thesis is that relational preprocessing and array/ML computation
+belong in one compiled program.  Here the LM training pipeline uses HiFrames
+verbs for its relational stages:
+
+  1. corpus curation: FILTER documents by length/quality (compiled filter),
+  2. curriculum stats: AGGREGATE per-quality-bucket token counts,
+  3. sequence packing plan: CUMSUM of document lengths (the paper's scan
+     pattern) assigns every document a contiguous token offset,
+
+and only then materializes token batches.  A background thread prefetches
+(double-buffering) so the accelerator never waits on batch assembly —
+compute/IO overlap at the pipeline level.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro import hiframes as hf
+
+
+@dataclass
+class PipelineConfig:
+    vocab: int
+    seq_len: int
+    global_batch: int
+    min_len: int = 64
+    min_quality: float = 0.2
+    prefetch: int = 2
+    seed: int = 0
+
+
+class TokenPipeline:
+    """Iterator of {tokens, labels} batches from a curated document table."""
+
+    def __init__(self, corpus: dict[str, np.ndarray], cfg: PipelineConfig,
+                 exec_cfg=None):
+        self.cfg = cfg
+        df = hf.table(corpus, name="corpus")
+        # 1. curation filter (compiled; 1D_VAR output)
+        cur = df[(df["length"] >= cfg.min_len) &
+                 (df["quality"] > cfg.min_quality)]
+        # 3. packing plan: cumulative token offsets (MPI_Exscan pattern)
+        packed = hf.cumsum(cur, cur["length"], out="offset")
+        t = packed.collect(exec_cfg)
+        cols = t.to_numpy()
+        self.doc_len = cols["length"]
+        self.doc_seed = cols["seed"]
+        self.doc_offset = cols["offset"] - cols["length"]   # exclusive
+        self.total_tokens = int(cols["offset"][-1]) if len(cols["offset"]) else 0
+        # 2. curriculum stats (compiled aggregate) — exposed for logging
+        sdf = hf.table({"bucket": (cols["quality"] * 10).astype(np.int32),
+                        "length": cols["length"]}, name="stats")
+        sagg = hf.aggregate(sdf, "bucket", tokens=hf.sum_(sdf["length"]),
+                            docs=hf.count()).collect(exec_cfg).to_numpy()
+        self.bucket_stats = sagg
+        self._rng = np.random.default_rng(cfg.seed)
+        self._q: queue.Queue = queue.Queue(maxsize=cfg.prefetch)
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._producer, daemon=True)
+        self._thread.start()
+
+    # -- batch assembly ------------------------------------------------------
+    def _make_batch(self):
+        cfg = self.cfg
+        n = cfg.global_batch
+        toks = np.empty((n, cfg.seq_len + 1), np.int32)
+        # sample documents proportional to length; generate tokens from seed
+        idx = self._rng.integers(0, len(self.doc_len), n)
+        for i, d in enumerate(idx):
+            rng = np.random.default_rng(int(self.doc_seed[d]) + 7919 * i)
+            toks[i] = rng.integers(0, cfg.vocab, cfg.seq_len + 1)
+        return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+    def _producer(self):
+        while not self._stop.is_set():
+            batch = self._make_batch()
+            while not self._stop.is_set():
+                try:
+                    self._q.put(batch, timeout=0.1)
+                    break
+                except queue.Full:
+                    continue
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        return self._q.get()
+
+    def close(self):
+        self._stop.set()
+        try:
+            while True:
+                self._q.get_nowait()
+        except queue.Empty:
+            pass

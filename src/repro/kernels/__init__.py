@@ -1,0 +1,38 @@
+"""Pallas TPU kernels for HiFrames hot spots.
+
+Each subpackage ships three files:
+  <name>.py — the pl.pallas_call kernel with explicit BlockSpec VMEM tiling
+  ops.py    — jit'd wrapper (interpret=True on CPU, compiled on TPU)
+  ref.py    — pure-jnp oracle used by the shape/dtype sweep tests
+
+``kernel_table()`` returns the hook dict consumed by core.lower.Lowered:
+  stencil1d      — SMA/WMA windowed weighted sum       (paper Fig. 8b)
+  stream_compact — filter compaction prefix-scan       (paper Fig. 8a)
+  segment_reduce — sorted-run aggregation scan          (paper Fig. 8a)
+  hash_partition — shuffle bucket rank/histogram        (paper §4.5)
+"""
+import jax
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def interpret_default() -> bool:
+    return not on_tpu()
+
+
+def kernel_table(interpret: bool | None = None) -> dict:
+    from .hash_partition import ops as hp
+    from .segment_reduce import ops as sr
+    from .stencil1d import ops as st
+    from .stream_compact import ops as sc
+
+    it = interpret_default() if interpret is None else interpret
+    return {
+        "stencil1d": lambda ext, w, center: st.stencil1d(ext, w, interpret=it),
+        "prefix_sum": lambda x: sc.prefix_sum(x, interpret=it),
+        "segment_sums": lambda v, seg_id, valid, nseg: sr.segment_sums(
+            v, seg_id, valid, nseg, interpret=it),
+        "hash_partition": lambda dest, P: hp.bucket_ranks(dest, P, interpret=it),
+    }

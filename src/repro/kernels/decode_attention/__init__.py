@@ -1,0 +1,2 @@
+from . import ops, ref
+from .decode_attention import decode_attention_pallas

@@ -1,0 +1,97 @@
+"""Pallas kernel: fused single-token GQA decode attention.
+
+The §Roofline analysis shows batched decode is KV-cache-bandwidth bound
+(EXPERIMENTS.md §Perf cell 3): each token must stream the whole local cache
+once.  This kernel fuses q·K, online softmax, and ·V into ONE pass over the
+cache so the bandwidth floor is met with no intermediate (B,H,S) score
+materialization in HBM.
+
+Tiling: grid (B, S/S_BLK); TPU executes the grid sequentially in row-major
+order, so the S-blocks of one batch row run back-to-back and carry the
+online-softmax state (m, l, acc) in VMEM scratch, reset at block 0.  Each
+step streams a (S_BLK, Hkv, hd) tile of K and V through VMEM; q for the
+current row (Hkv, G, hd) stays resident.  GQA is computed grouped (no KV
+head repetition).  Entries at positions >= ``length`` are masked.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+S_BLK = 512
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+            *, n_blocks: int, scale: float):
+    sb = pl.program_id(1)
+
+    @pl.when(sb == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -1e30)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0]                                   # (Hkv, G, hd)
+    k = k_ref[0]                                   # (S_BLK, Hkv, hd)
+    v = v_ref[0]
+    length = len_ref[0]
+
+    s = jax.lax.dot_general(                        # scores (Hkv, G, S_BLK)
+        q.astype(jnp.float32), k.astype(jnp.float32),
+        (((2,), (2,)), ((0,), (1,)))) * np.float32(scale)
+    pos = sb * S_BLK + jax.lax.broadcasted_iota(jnp.int32, s.shape, 2)
+    s = jnp.where(pos < length, s, -1e30)
+
+    m_prev = m_ref[...]                            # (Hkv, G)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=2))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[..., None])              # (Hkv, G, S_BLK)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=2)
+    pv = jax.lax.dot_general(                      # (Hkv, G, hd)
+        p, v.astype(jnp.float32), (((2,), (0,)), ((0,), (1,))))
+    acc_ref[...] = acc_ref[...] * alpha[..., None] + pv
+    m_ref[...] = m_new
+
+    @pl.when(sb == n_blocks - 1)
+    def _finish():
+        o_ref[0] = (acc_ref[...] /
+                    jnp.maximum(l_ref[...], 1e-30)[..., None]
+                    ).astype(o_ref.dtype)
+
+
+def decode_attention_pallas(q, k, v, length, interpret: bool = True):
+    """q: (B, Hkv, G, hd); k/v: (B, S, Hkv, hd); length: (B,) valid prefix.
+
+    Returns (B, Hkv, G, hd) attention output."""
+    b, hkv, g, hd = q.shape
+    s = k.shape[1]
+    nb = -(-s // S_BLK)
+    pad = nb * S_BLK - s
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    scale = 1.0 / np.sqrt(hd)
+    out = pl.pallas_call(
+        functools.partial(_kernel, n_blocks=nb, scale=scale),
+        grid=(b, nb),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i, j: (i,)),
+            pl.BlockSpec((1, hkv, g, hd), lambda i, j: (i, 0, 0, 0)),
+            pl.BlockSpec((1, S_BLK, hkv, hd), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, S_BLK, hkv, hd), lambda i, j: (i, j, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, hkv, g, hd), lambda i, j: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((hkv, g), jnp.float32),      # running max
+            pltpu.VMEM((hkv, g), jnp.float32),      # running denom
+            pltpu.VMEM((hkv, g, hd), jnp.float32),  # running numerator
+        ],
+        interpret=interpret,
+    )(length, q, k, v)
+    return out

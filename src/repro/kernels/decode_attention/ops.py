@@ -1,0 +1,11 @@
+"""jit'd wrapper for the decode-attention kernel."""
+import functools
+
+import jax
+
+from .decode_attention import decode_attention_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def decode_attention(q, k, v, length, interpret: bool = True):
+    return decode_attention_pallas(q, k, v, length, interpret=interpret)

@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for decode attention."""
+import jax.numpy as jnp
+import numpy as np
+
+
+def decode_attention_ref(q, k, v, length):
+    """q: (B, Hkv, G, hd); k/v: (B, S, Hkv, hd); length: (B,)."""
+    hd = q.shape[-1]
+    s = jnp.einsum("bhgd,bshd->bhgs", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / np.sqrt(hd)
+    mask = jnp.arange(k.shape[1])[None, None, None, :] < \
+        length[:, None, None, None]
+    s = jnp.where(mask, s, -1e30)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+    return jnp.einsum("bhgs,bshd->bhgd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)

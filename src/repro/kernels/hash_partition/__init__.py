@@ -1,0 +1,2 @@
+from . import ops, ref
+from .hash_partition import bucket_ranks_pallas

@@ -1,0 +1,11 @@
+"""jit'd wrapper for the hash_partition kernel."""
+import functools
+
+import jax
+
+from .hash_partition import bucket_ranks_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("P", "interpret"))
+def bucket_ranks(dest, P: int, interpret: bool = True):
+    return bucket_ranks_pallas(dest, P, interpret=interpret)

@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for hash_partition bucket ranks."""
+import jax.numpy as jnp
+
+
+def bucket_ranks_ref(dest, P: int):
+    """Stable within-bucket rank of every row + per-bucket counts."""
+    n = dest.shape[0]
+    onehot = (dest[:, None] == jnp.arange(P, dtype=dest.dtype)[None, :]).astype(jnp.int32)
+    excl = jnp.cumsum(onehot, axis=0) - onehot
+    ranks = jnp.sum(excl * onehot, axis=1)
+    counts = jnp.sum(onehot, axis=0)
+    return ranks, counts

@@ -1,0 +1,2 @@
+from . import ops, ref
+from .segment_reduce import value_scan_pallas

@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for segment_reduce."""
+import jax
+import jax.numpy as jnp
+
+
+def segment_sums_ref(values, seg_id, valid, num_segments: int):
+    """Per-segment sums; seg_id must be sorted and consecutive from 0."""
+    v = jnp.where(valid, values.astype(jnp.float32), 0.0)
+    sid = jnp.where(valid, seg_id, num_segments)
+    return jax.ops.segment_sum(v, sid, num_segments=num_segments + 1)[:num_segments]

@@ -1,0 +1,47 @@
+"""Pallas kernel: segmented reduction over sorted runs (aggregate backend).
+
+The TPU replacement for the paper's hash-table aggregation: after the shuffle
+and local sort, rows with equal keys are contiguous runs.  The kernel computes
+a carried inclusive prefix-sum of the values (float32 accumulation); the
+wrapper then derives every run's sum as the difference of the scan at run
+boundaries — one sequential pass over HBM-streamed blocks, no scatter in the
+inner loop (scatters are the VPU's weakness; boundary gathers are tiny).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BLOCK = 2048
+
+
+def _scan_kernel(v_ref, o_ref, carry):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        carry[0] = jnp.zeros((), jnp.float32)
+
+    v = v_ref[...].astype(jnp.float32)
+    c = jnp.cumsum(v)
+    o_ref[...] = c + carry[0]
+    carry[0] = carry[0] + c[-1]
+
+
+def value_scan_pallas(values: jax.Array, interpret: bool = True) -> jax.Array:
+    """Inclusive f32 prefix sum of values (the kernel phase)."""
+    n = values.shape[0]
+    nb = max(1, -(-n // BLOCK))
+    vp = jnp.pad(values.astype(jnp.float32), (0, nb * BLOCK - n))
+    out = pl.pallas_call(
+        _scan_kernel,
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((BLOCK,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((nb * BLOCK,), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((1,), jnp.float32)],
+        interpret=interpret,
+    )(vp)
+    return out[:n]

@@ -1,0 +1,2 @@
+from . import ops, ref
+from .stencil1d import stencil1d_pallas

@@ -1,0 +1,15 @@
+"""jit'd wrapper for the stencil1d Pallas kernel."""
+import functools
+
+import jax
+
+from .stencil1d import stencil1d_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("w", "interpret"))
+def _stencil(ext, w: tuple[float, ...], interpret: bool):
+    return stencil1d_pallas(ext, w, interpret=interpret)
+
+
+def stencil1d(ext, weights, interpret: bool = True):
+    return _stencil(ext, tuple(float(x) for x in weights), interpret)

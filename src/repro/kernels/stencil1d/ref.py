@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the stencil1d kernel."""
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+
+def stencil1d_ref(ext, weights):
+    """out[i] = sum_j w[j] * ext[i+j]."""
+    K = len(weights)
+    n = ext.shape[0] - (K - 1)
+    ext = ext.astype(jnp.float32)
+    out = jnp.zeros((n,), jnp.float32)
+    for j, wj in enumerate(weights):
+        out = out + np.float32(wj) * lax.dynamic_slice(ext, (j,), (n,))
+    return out

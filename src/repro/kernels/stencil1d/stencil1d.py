@@ -1,0 +1,59 @@
+"""Pallas kernel: 1-D weighted window (SMA/WMA) — the paper's stencil op.
+
+Tiling: the extended array ``ext`` (local shard + exchanged halos, length
+n + K - 1) is processed in blocks of ``BLOCK`` output elements.  Each grid
+step loads its (BLOCK,) slice of ext plus a (K-1,) tail (the first K-1
+elements of the next block) into VMEM and computes the weighted window sum
+with K static shifted adds — MXU-free, pure VPU, unit-stride lane access.
+Weights are compile-time constants folded into the kernel body.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+BLOCK = 2048  # multiple of the 8x128 VREG tile; ~8KB f32 per operand in VMEM
+
+
+def _kernel(x_ref, tail_ref, o_ref, *, weights: tuple[float, ...]):
+    K = len(weights)
+    x = x_ref[...]
+    if K > 1:
+        ext = jnp.concatenate([x, tail_ref[0, :]])
+    else:
+        ext = x
+    acc = np.float32(weights[0]) * ext[0:BLOCK]
+    for j in range(1, K):
+        acc = acc + np.float32(weights[j]) * ext[j:j + BLOCK]
+    o_ref[...] = acc
+
+
+def stencil1d_pallas(ext: jax.Array, weights: tuple[float, ...],
+                     interpret: bool = True) -> jax.Array:
+    """out[i] = sum_j w[j] * ext[i+j], for i in [0, len(ext) - K + 1)."""
+    K = len(weights)
+    n = ext.shape[0] - (K - 1)
+    nb = max(1, -(-n // BLOCK))
+    ext_p = jnp.pad(ext.astype(jnp.float32), (0, nb * BLOCK + K - 1 - ext.shape[0]))
+    x = ext_p[: nb * BLOCK]
+    if K > 1:
+        idx = (jnp.arange(nb)[:, None] + 1) * BLOCK + jnp.arange(K - 1)[None, :]
+        tails = ext_p[idx]                       # (nb, K-1) — tiny halo table
+    else:
+        tails = jnp.zeros((nb, 1), jnp.float32)
+    out = pl.pallas_call(
+        functools.partial(_kernel, weights=tuple(weights)),
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((1, max(K - 1, 1)), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((nb * BLOCK,), jnp.float32),
+        interpret=interpret,
+    )(x, tails)
+    return out[:n]

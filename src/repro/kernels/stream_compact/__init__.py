@@ -1,0 +1,2 @@
+from . import ops, ref
+from .stream_compact import prefix_sum_pallas

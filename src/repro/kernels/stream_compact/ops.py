@@ -1,0 +1,22 @@
+"""jit'd wrappers for the stream_compact kernel."""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .stream_compact import prefix_sum_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def prefix_sum(x, interpret: bool = True):
+    return prefix_sum_pallas(x, interpret=interpret)
+
+
+def compact(values, keep, cap_out: int, interpret: bool = True):
+    """Full compaction using the kernel for slot assignment."""
+    keep_i = keep.astype(jnp.int32)
+    incl = prefix_sum(keep_i, interpret=interpret)
+    dest = jnp.where(keep_i > 0, incl - 1, cap_out)
+    out = jnp.zeros((cap_out,), values.dtype).at[dest].set(values, mode="drop")
+    total = incl[-1] if incl.shape[0] else jnp.int32(0)
+    return out, jnp.minimum(total, cap_out)

@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the stream_compact prefix-sum kernel."""
+import jax.numpy as jnp
+
+
+def prefix_sum_ref(x):
+    return jnp.cumsum(x)
+
+
+def compact_ref(values, keep, cap_out):
+    """Oracle for full compaction: kept values moved to a dense prefix."""
+    keep_i = keep.astype(jnp.int32)
+    dest = jnp.cumsum(keep_i) - 1
+    dest = jnp.where(keep_i > 0, dest, cap_out)
+    out = jnp.zeros((cap_out,), values.dtype).at[dest].set(values, mode="drop")
+    return out, jnp.minimum(jnp.sum(keep_i), cap_out)

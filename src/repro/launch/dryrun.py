@@ -1,0 +1,354 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# NOTE: the two lines above MUST run before any other import — jax locks the
+# device count at first init.  (This also forces the docstring below them.)
+
+_DOC = """Multi-pod dry-run: lower + compile every (architecture x input-shape)
+cell on the production meshes and extract the roofline terms.
+
+Run:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-0.6b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] --out runs/dryrun
+
+Per cell this produces:
+  * compiled.memory_analysis()  -> bytes per device (proves it fits / doesn't)
+  * compiled.cost_analysis()    -> per-device HLO FLOPs & bytes
+  * collective bytes parsed from the post-SPMD HLO text
+  * an L-extrapolation pair (layers scanned => XLA costs the While body ONCE;
+    we compile L_small/L_big variants and scale the per-layer delta — see
+    EXPERIMENTS.md §Dry-run methodology)
+and dumps JSON consumed by launch/roofline.py.
+"""
+import argparse
+import json
+import re
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs
+from repro.launch import steps as steps_mod
+from repro.launch.mesh import make_production_mesh, mesh_chip_count
+from repro.models import sharding as shard_mod
+from repro.optim import OptConfig
+
+# ---------------------------------------------------------------------------
+# HLO collective-byte accounting
+# ---------------------------------------------------------------------------
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Sum per-device operand bytes of every collective op in the partitioned
+    module.  Start/done pairs are counted once (on the -start)."""
+    out = {k: 0 for k in _COLLECTIVES}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        # match "  %name = TYPE[dims] op-name(" or fused start variants
+        m = re.match(r"%?[\w.\-]+\s*=\s*(\([^)]*\)|[\w\[\],{}\s]*?)\s*"
+                     r"([a-z\-]+)(-start)?\(", ls)
+        if not m:
+            continue
+        op = m.group(2)
+        if m.group(3) == "-start" or op.endswith("-done"):
+            base = op.replace("-done", "")
+            if op.endswith("-done"):
+                continue  # counted at start
+            op = base
+        if op not in _COLLECTIVES:
+            continue
+        out[op] += _shape_bytes(m.group(1))
+        out["count"] += 1
+    return out
+
+
+# ---------------------------------------------------------------------------
+# cell lowering
+# ---------------------------------------------------------------------------
+
+
+def _logits_sharding(mesh, cfg, batch):
+    return NamedSharding(mesh, shard_mod.fit_spec(
+        mesh, (batch, cfg.vocab),
+        (shard_mod.dp_axes(mesh), "model")))
+
+
+def lower_cell(arch: str, shape_name: str, mesh, *,
+               cfg_override=None, n_micro=None, moe_impl: str = "gspmd",
+               fsdp: bool = False):
+    """Lower one (arch, shape) on the given mesh; returns (lowered, meta)."""
+    cfg = cfg_override or configs.get_config(arch)
+    if moe_impl != "gspmd":
+        from repro.models import moe as moe_mod
+        moe_mod.set_ep_mesh(mesh)
+        cfg = cfg.replace(moe_impl=moe_impl)
+    if getattr(cfg, "attn_batch_shard", False):
+        from repro.models import lm as lm_mod
+        lm_mod.set_tp_mesh(mesh)
+    if getattr(cfg, "attn_seq_shard", False) or \
+            getattr(cfg, "cache_update", "dus") == "masked":
+        from repro.models import layers as layers_mod
+        layers_mod.set_tp_mesh(mesh)
+    shape = configs.SHAPES[shape_name]
+    ocfg = OptConfig(state_dtype="bfloat16" if cfg.param_count() > 2e11
+                     else "float32", zero1=True)
+    cell = steps_mod.cell_shardings(cfg, shape, mesh, ocfg, fsdp=fsdp)
+    rep = NamedSharding(mesh, P())
+
+    if shape.kind == "train":
+        nm = n_micro if n_micro is not None else steps_mod.micro_batches(cfg, shape, mesh)
+        fn = steps_mod.make_train_step(cfg, ocfg, n_micro=nm)
+        state_specs = {"params": cell["param_specs"], "opt": cell["opt_specs"]}
+        state_sh = {"params": cell["params"], "opt": cell["opt_sh"]}
+        jf = jax.jit(fn, in_shardings=(state_sh, cell["input_sh"]),
+                     out_shardings=(state_sh, rep))
+        lowered = jf.lower(state_specs, cell["inputs"])
+        meta = {"n_micro": nm}
+    elif shape.kind == "prefill":
+        fn = steps_mod.make_prefill_step(cfg, shape.seq)
+        csh = shard_mod.cache_shardings(mesh, steps_mod.cache_specs(cfg, shape))
+        jf = jax.jit(fn, in_shardings=(cell["params"], cell["input_sh"]),
+                     out_shardings=(_logits_sharding(mesh, cfg, shape.batch), csh))
+        lowered = jf.lower(cell["param_specs"], cell["inputs"])
+        meta = {}
+    else:  # decode
+        fn = steps_mod.make_decode_step(cfg)
+        csh = cell["cache_sh"]
+        jf = jax.jit(fn, in_shardings=(cell["params"], cell["input_sh"]["token"], csh),
+                     out_shardings=(_logits_sharding(mesh, cfg, shape.batch), csh))
+        lowered = jf.lower(cell["param_specs"], cell["inputs"]["token"],
+                           cell["cache_specs"])
+        meta = {}
+    return lowered, cfg, meta
+
+
+def analyse(lowered, compiled) -> dict:
+    cost = compiled.cost_analysis() or {}
+    try:
+        mem = compiled.memory_analysis()
+        mem_d = {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+            "generated_code_bytes": getattr(mem, "generated_code_size_in_bytes", None),
+        }
+    except Exception as e:  # pragma: no cover
+        mem_d = {"error": str(e)}
+    text = compiled.as_text()
+    coll = collective_bytes(text)
+    return {
+        "flops_per_device": cost.get("flops", 0.0),
+        "bytes_per_device": cost.get("bytes accessed", 0.0),
+        "memory": mem_d,
+        "collectives": coll,
+    }
+
+
+# ---------------------------------------------------------------------------
+# L-extrapolation (scan bodies are costed once by XLA)
+# ---------------------------------------------------------------------------
+
+
+def l_pair(cfg, seq: int = 4096):
+    """(cfg_small, cfg_big, units_small, units_big, units_full).
+
+    The pair is compiled with unroll_scans=True (XLA costs While bodies once)
+    and coarser KV/SSM chunks to bound unrolled-HLO size (zamba2's 64-chunk
+    scan x 12 unrolled layers otherwise explodes compile time; chunk size
+    does not change FLOPs/bytes totals)."""
+    cfg = cfg.replace(unroll_scans=True,
+                      kv_chunk=max(1024, seq // 16))
+    if cfg.family in ("ssm", "hybrid"):
+        cfg = cfg.replace(ssm_chunk=max(cfg.ssm_chunk, seq // 4, 256))
+    f = cfg.family
+    if f == "moe":
+        fd = max(cfg.first_dense_layers, 0)
+        return (cfg.replace(n_layers=fd + 1), cfg.replace(n_layers=fd + 2),
+                fd + 1, fd + 2, cfg.n_layers)
+    if f == "hybrid":
+        p = cfg.shared_attn_period or cfg.n_layers
+        return (cfg.replace(n_layers=p), cfg.replace(n_layers=2 * p),
+                p, 2 * p, cfg.n_layers)
+    if f == "encdec":
+        return (cfg.replace(n_layers=1, n_enc_layers=1),
+                cfg.replace(n_layers=2, n_enc_layers=2), 1, 2, cfg.n_layers)
+    return (cfg.replace(n_layers=1), cfg.replace(n_layers=2), 1, 2,
+            cfg.n_layers)
+
+
+def extrapolate(c_small: dict, c_big: dict, us: int, ub: int, uf: int,
+                n_micro: int = 1) -> dict:
+    """Total-cost estimate from the L-pair (per device)."""
+    out = {}
+    for key in ("flops_per_device", "bytes_per_device"):
+        delta = (c_big[key] - c_small[key]) / max(ub - us, 1)
+        out[key] = (c_small[key] + delta * (uf - us)) * n_micro
+    coll = {}
+    for k in _COLLECTIVES:
+        delta = (c_big["collectives"][k] - c_small["collectives"][k]) / max(ub - us, 1)
+        coll[k] = (c_small["collectives"][k] + delta * (uf - us)) * n_micro
+    out["collective_bytes_per_device"] = coll
+    out["collective_total"] = float(sum(coll.values()))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool, out_dir: str,
+             skip_full: bool = False, skip_extrap: bool = False,
+             verbose: bool = True, moe_impl: str = "gspmd") -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh_chip_count(mesh)
+    cfg = configs.get_config(arch)
+    shape = configs.SHAPES[shape_name]
+    ok, why = configs.shape_applicable(cfg, shape)
+    tag = f"{arch}/{shape_name}/{'2pod' if multi_pod else '1pod'}"
+    if not ok:
+        rec = {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+               "skipped": why}
+        _dump(out_dir, tag, rec)
+        if verbose:
+            print(f"[dryrun] {tag}: {why}")
+        return rec
+
+    t0 = time.time()
+    rec: dict[str, Any] = {"arch": arch, "shape": shape_name,
+                           "multi_pod": multi_pod, "chips": chips}
+
+    rec["moe_impl"] = moe_impl
+    # 1. FULL config compile — proves lowering + sharding + memory
+    if not skip_full:
+        lowered, _, meta = lower_cell(arch, shape_name, mesh, moe_impl=moe_impl)
+        compiled = lowered.compile()
+        rec["full"] = analyse(lowered, compiled)
+        rec["full"]["compile_s"] = round(time.time() - t0, 2)
+        rec.update(meta)
+        if verbose:
+            m = rec["full"]["memory"]
+            print(f"[dryrun] {tag}: compiled in {rec['full']['compile_s']}s; "
+                  f"args={_gb(m.get('argument_bytes'))} "
+                  f"temp={_gb(m.get('temp_bytes'))} "
+                  f"flops/dev={rec['full']['flops_per_device']:.3e}")
+
+    # 2. L-extrapolation pair (cheap compiles; true total cost).
+    # The multi-pod pass proves the pod axis shards (full compile above);
+    # the roofline table is single-pod only, so extrapolation can be skipped.
+    if skip_extrap:
+        rec["wall_s"] = round(time.time() - t0, 2)
+        _dump(out_dir, tag, rec)
+        return rec
+    small, big, us, ub, uf = l_pair(cfg, seq=shape.seq)
+    res = []
+    for c in (small, big):
+        # NOTE: train L-pairs run with n_micro=1 over the FULL global batch,
+        # so their costs are already whole-step costs — no micro scaling.
+        lw, _, _ = lower_cell(arch, shape_name, mesh, cfg_override=c,
+                              n_micro=1 if shape.kind == "train" else None,
+                              moe_impl=moe_impl)
+        res.append(analyse(lw, lw.compile()))
+    rec["l_extrap"] = extrapolate(res[0], res[1], us, ub, uf, n_micro=1)
+    rec["l_pair"] = {"small": res[0], "big": res[1],
+                     "units": [us, ub, uf], "n_micro_scale": 1}
+    rec["wall_s"] = round(time.time() - t0, 2)
+    _dump(out_dir, tag, rec)
+    if verbose:
+        print(f"[dryrun] {tag}: extrapolated flops/dev="
+              f"{rec['l_extrap']['flops_per_device']:.3e} "
+              f"coll={_gb(rec['l_extrap']['collective_total'])} "
+              f"({rec['wall_s']}s total)")
+    return rec
+
+
+def _gb(x):
+    return "n/a" if x is None else f"{x/2**30:.2f}GiB"
+
+
+def _dump(out_dir: str, tag: str, rec: dict):
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, tag.replace("/", "__") + ".json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1, default=float)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--skip-full", action="store_true",
+                    help="only the L-extrapolation compiles (fast)")
+    ap.add_argument("--resume", action="store_true",
+                    help="skip cells whose JSON already exists")
+    ap.add_argument("--moe-impl", default="gspmd", choices=["gspmd", "ep"])
+    ap.add_argument("--skip-extrap", action="store_true",
+                    help="full compile only (multi-pod proof pass)")
+    ap.add_argument("--tag", default="", help="suffix for output filenames")
+    ap.add_argument("--out", default="runs/dryrun")
+    args = ap.parse_args()
+
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    cells = []
+    if args.all:
+        for a in configs.ARCH_IDS:
+            for s in configs.SHAPES:
+                cells.append((a, s))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells.append((args.arch, args.shape))
+
+    failures = []
+    for mp in meshes:
+        for a, s in cells:
+            tag = f"{a}__{s}__{'2pod' if mp else '1pod'}.json"
+            if args.resume and os.path.exists(os.path.join(args.out, tag)):
+                continue
+            try:
+                run_cell(a, s, multi_pod=mp, out_dir=args.out,
+                         skip_full=args.skip_full, skip_extrap=args.skip_extrap,
+                         moe_impl=args.moe_impl)
+            except Exception as e:  # noqa: BLE001
+                print(f"[dryrun] FAIL {a}/{s}/mp={mp}: {type(e).__name__}: {e}")
+                failures.append((a, s, mp, str(e)))
+    if failures:
+        raise SystemExit(f"{len(failures)} dry-run cells failed: "
+                         + "; ".join(f"{a}/{s}" for a, s, _, _ in failures))
+    print("[dryrun] all requested cells compiled")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS (not module constants) so importing this module never
+touches jax device state — the dry-run sets XLA_FLAGS before first init.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single pod (256 chips) or 2x16x16 (2 pods, 512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(model_axis: int = 1, pod_axis: int = 0):
+    """Mesh over whatever devices exist (tests/examples).
+
+    Shapes to (data, model) or (pod, data, model) with the requested model
+    axis; data absorbs the rest.
+    """
+    devs = np.array(jax.devices())
+    n = len(devs)
+    assert n % max(model_axis, 1) == 0
+    if pod_axis:
+        data = n // (model_axis * pod_axis)
+        return Mesh(devs.reshape(pod_axis, data, model_axis),
+                    ("pod", "data", "model"))
+    data = n // max(model_axis, 1)
+    return Mesh(devs.reshape(data, max(model_axis, 1)), ("data", "model"))
+
+
+def mesh_chip_count(mesh: Mesh) -> int:
+    return int(np.prod(list(mesh.shape.values())))

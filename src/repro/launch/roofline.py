@@ -1,0 +1,190 @@
+"""Roofline analysis — reads the dry-run JSONs and derives the three terms.
+
+    compute term    = HLO_FLOPs   / (chips x 197 TFLOP/s bf16)
+    memory term     = HLO_bytes   / (chips x 819 GB/s HBM)
+    collective term = coll_bytes  / (chips x 50 GB/s per-link ICI)
+
+HLO quantities come from the L-extrapolated unrolled compiles (per-device,
+so the chip division is implicit); collective bytes are summed over
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+operands in the post-SPMD module.  MODEL_FLOPS is the analytic 6·N_active·D
+(train) or 2·N_active·D (inference); the ratio against HLO_FLOPs exposes
+remat/dispatch/resharding waste.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.roofline --in runs/dryrun --md
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+from repro import configs
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # B/s / chip
+ICI_BW = 50e9                # B/s / link (per-device collective bytes / link)
+HBM_CAP = 16 * 2**30         # v5e
+
+# wire-traffic factors: ring all-reduce moves ~2x its operand bytes
+# (reduce-scatter + all-gather phases); the others move ~1x.
+WIRE_FACTOR = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+               "all-to-all": 1.0, "collective-permute": 1.0}
+
+
+def model_flops_cell(cfg, shape) -> float:
+    """Analytic useful FLOPs per device per step."""
+    n_act = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.batch * shape.seq
+        total = 6.0 * n_act * tokens
+    elif shape.kind == "prefill":
+        tokens = shape.batch * shape.seq
+        total = 2.0 * n_act * tokens
+    else:  # decode: one token per sequence + KV-cache attention reads
+        total = 2.0 * n_act * shape.batch
+        if cfg.family not in ("ssm",):
+            kv = 2 * cfg.n_kv_heads * cfg.hd
+            att_layers = cfg.n_layers if cfg.family != "hybrid" else \
+                -(-cfg.n_layers // (cfg.shared_attn_period or cfg.n_layers))
+            total += 2.0 * shape.batch * shape.seq * kv * att_layers \
+                * (cfg.n_heads // max(cfg.n_kv_heads, 1))
+    return total
+
+
+def _re_extrapolate(rec: dict) -> dict:
+    """Recompute total cost from the raw L-pair (the pair is compiled over
+    the FULL global batch, so costs are whole-step — no micro scaling)."""
+    lp = rec["l_pair"]
+    us, ub, uf = lp["units"]
+    out = {}
+    for key in ("flops_per_device", "bytes_per_device"):
+        delta = (lp["big"][key] - lp["small"][key]) / max(ub - us, 1)
+        out[key] = lp["small"][key] + delta * (uf - us)
+    coll = {}
+    for k in ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+              "collective-permute"):
+        delta = (lp["big"]["collectives"][k] - lp["small"]["collectives"][k]) \
+            / max(ub - us, 1)
+        coll[k] = lp["small"]["collectives"][k] + delta * (uf - us)
+    out["collective_bytes_per_device"] = coll
+    return out
+
+
+def analyse_record(rec: dict) -> dict | None:
+    if "skipped" in rec:
+        return None
+    cfg = configs.get_config(rec["arch"])
+    shape = configs.SHAPES[rec["shape"]]
+    chips = rec["chips"]
+    ex = _re_extrapolate(rec)
+    flops_dev = ex["flops_per_device"]
+    bytes_dev = ex["bytes_per_device"]
+    coll_dev = sum(WIRE_FACTOR.get(k, 1.0) * v
+                   for k, v in ex["collective_bytes_per_device"].items())
+
+    t_comp = flops_dev / PEAK_FLOPS
+    t_mem = bytes_dev / HBM_BW
+    t_coll = coll_dev / ICI_BW
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+
+    mf = model_flops_cell(cfg, shape) / chips
+    mem = rec.get("full", {}).get("memory", {})
+    resident = (mem.get("argument_bytes") or 0)
+    peak = resident + (mem.get("temp_bytes") or 0)
+
+    return {
+        "arch": rec["arch"], "shape": rec["shape"],
+        "mesh": "2x16x16" if rec["multi_pod"] else "16x16",
+        "chips": chips,
+        "t_compute_s": t_comp, "t_memory_s": t_mem, "t_collective_s": t_coll,
+        "dominant": dominant,
+        "roofline_fraction": t_comp / bound if bound > 0 else 0.0,
+        "model_flops_per_dev": mf,
+        "hlo_flops_per_dev": flops_dev,
+        "useful_ratio": mf / flops_dev if flops_dev else 0.0,
+        "hbm_resident_gib": resident / 2**30,
+        "hbm_peak_gib": peak / 2**30,
+        "fits_hbm": peak <= HBM_CAP,
+        "n_micro": rec.get("n_micro", 1),
+        "collectives": ex.get("collective_bytes_per_device", {}),
+    }
+
+
+def load(in_dir: str, mesh_filter: str | None = "1pod"):
+    rows, skips = [], []
+    for path in sorted(glob.glob(os.path.join(in_dir, "*.json"))):
+        if mesh_filter and mesh_filter not in path:
+            continue
+        with open(path) as f:
+            rec = json.load(f)
+        if "skipped" in rec:
+            skips.append(rec)
+            continue
+        r = analyse_record(rec)
+        if r:
+            rows.append(r)
+    return rows, skips
+
+
+def what_would_help(r: dict) -> str:
+    d = r["dominant"]
+    if d == "collective":
+        big = max(r["collectives"], key=lambda k: r["collectives"].get(k, 0)) \
+            if r["collectives"] else "?"
+        return f"cut {big} volume (resharding/dispatch schedule)"
+    if d == "memory":
+        return "fuse/bigger per-step tiles; reduce remat traffic"
+    return "already compute-bound; raise useful_ratio " \
+           f"({r['useful_ratio']:.2f})"
+
+
+def to_markdown(rows, skips) -> str:
+    hdr = ("| arch | shape | mesh | compute s | memory s | collective s | "
+           "dominant | roofline frac | useful ratio | HBM GiB (resident/peak) "
+           "| fits | next lever |\n"
+           "|---|---|---|---|---|---|---|---|---|---|---|---|\n")
+    lines = []
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['t_compute_s']:.3e} | {r['t_memory_s']:.3e} "
+            f"| {r['t_collective_s']:.3e} | **{r['dominant']}** "
+            f"| {r['roofline_fraction']:.2f} | {r['useful_ratio']:.2f} "
+            f"| {r['hbm_resident_gib']:.1f}/{r['hbm_peak_gib']:.1f} "
+            f"| {'Y' if r['fits_hbm'] else 'N'} | {what_would_help(r)} |")
+    for s in skips:
+        lines.append(f"| {s['arch']} | {s['shape']} | — | — | — | — | — | — "
+                     f"| — | — | — | {s['skipped']} |")
+    return hdr + "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--in", dest="in_dir", default="runs/dryrun")
+    ap.add_argument("--mesh", default="1pod", choices=["1pod", "2pod", "all"])
+    ap.add_argument("--md", action="store_true")
+    ap.add_argument("--json-out", default=None)
+    args = ap.parse_args()
+
+    rows, skips = load(args.in_dir,
+                       None if args.mesh == "all" else f"{args.mesh}")
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump(rows, f, indent=1)
+    if args.md:
+        print(to_markdown(rows, skips))
+    else:
+        for r in rows:
+            print(f"{r['arch']:20s} {r['shape']:12s} {r['dominant']:10s} "
+                  f"frac={r['roofline_fraction']:.2f} "
+                  f"useful={r['useful_ratio']:.2f} "
+                  f"peak={r['hbm_peak_gib']:.1f}GiB")
+
+
+if __name__ == "__main__":
+    main()

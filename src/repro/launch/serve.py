@@ -1,0 +1,78 @@
+"""Serving launcher: batched prefill + decode for any --arch (reduced on CPU).
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --reduced \
+        --requests 4 --new-tokens 8
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.launch import steps as S
+from repro.launch.mesh import make_local_mesh
+from repro.models import lm, whisper
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=configs.ARCH_IDS)
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--new-tokens", type=int, default=8)
+    args = ap.parse_args()
+
+    cfg = configs.get_reduced(args.arch)
+    B, Sp, T = args.requests, args.prompt_len, args.new_tokens
+    max_seq = Sp + T
+    rng = np.random.default_rng(0)
+
+    if cfg.family == "encdec":
+        params = whisper.init_params(cfg, jax.random.PRNGKey(0))
+        frames = jnp.asarray(rng.normal(size=(B, cfg.enc_frames, cfg.d_model))
+                             .astype(np.float32), jnp.bfloat16)
+        toks = jnp.asarray(rng.integers(0, cfg.vocab, (B, Sp)).astype(np.int32))
+        t0 = time.perf_counter()
+        lg, cache = whisper.prefill(params, frames, toks, cfg, max_seq)
+        step = jax.jit(S.make_decode_step(cfg))
+        outs = []
+        tok = jnp.argmax(lg, -1)[:, None].astype(jnp.int32)
+        for _ in range(T):
+            outs.append(np.asarray(tok[:, 0]))
+            lg, cache = step(params, tok, cache)
+            tok = jnp.argmax(lg, -1)[:, None].astype(jnp.int32)
+        dt = time.perf_counter() - t0
+    else:
+        params = lm.init_params(cfg, jax.random.PRNGKey(0))
+        prompts = jnp.asarray(rng.integers(0, cfg.vocab, (B, Sp)).astype(np.int32))
+        prefill = jax.jit(S.make_prefill_step(cfg, max_seq))
+        step = jax.jit(S.make_decode_step(cfg))
+        batch = {"tokens": prompts}
+        if cfg.family == "vlm":
+            batch = {"inputs_embeds": jnp.zeros((B, Sp, cfg.d_model), jnp.bfloat16),
+                     "positions": jnp.broadcast_to(
+                         jnp.arange(Sp, dtype=jnp.int32)[None, None], (3, B, Sp))}
+        t0 = time.perf_counter()
+        lg, cache = prefill(params, batch)
+        outs = []
+        tok = jnp.argmax(lg, -1)[:, None].astype(jnp.int32)
+        for _ in range(T):
+            outs.append(np.asarray(tok[:, 0]))
+            lg, cache = step(params, tok, cache)
+            tok = jnp.argmax(lg, -1)[:, None].astype(jnp.int32)
+        dt = time.perf_counter() - t0
+
+    gen = np.stack(outs, axis=1)
+    print(f"{args.arch} (reduced): {B} reqs, prompt {Sp}, generated {T} "
+          f"tokens each in {dt*1e3:.0f} ms")
+    print("req0:", gen[0])
+    assert gen.shape == (B, T) and np.isfinite(gen).all()
+
+
+if __name__ == "__main__":
+    main()

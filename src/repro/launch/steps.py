@@ -1,0 +1,217 @@
+"""Step builders: train / prefill / decode with full sharding specs.
+
+``input_specs(cfg, shape)`` returns ShapeDtypeStruct stand-ins for every
+model input of an (architecture x shape) cell — weak-type-correct, shardable,
+zero allocation — exactly what the multi-pod dry-run lowers against.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import ShapeSpec
+from repro.models import lm, sharding, whisper
+from repro.models.config import ModelConfig
+from repro.optim import OptConfig, adamw
+
+# gradient-accumulation factors: big models microbatch the 256-seq global
+# batch so per-layer live activations stay within HBM (see DESIGN.md §5).
+DEFAULT_MICRO = {
+    "kimi-k2-1t-a32b": 16, "yi-34b": 8, "qwen2.5-32b": 8,
+    "zamba2-7b": 4, "falcon-mamba-7b": 4, "deepseek-moe-16b": 4,
+}
+
+
+def micro_batches(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh | None = None) -> int:
+    m = DEFAULT_MICRO.get(cfg.name, 1)
+    # per-micro batch must still cover the dp axes
+    if mesh is not None:
+        dpn = int(np.prod([mesh.shape[a] for a in sharding.dp_axes(mesh)]))
+        while m > 1 and (shape.batch // m) % dpn != 0:
+            m //= 2
+    return max(m, 1)
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStructs — no allocation)
+# ---------------------------------------------------------------------------
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict[str, Any]:
+    B, S = shape.batch, shape.seq
+    cdt = jnp.dtype(cfg.compute_dtype)
+    i32 = jnp.int32
+    sd = jax.ShapeDtypeStruct
+    if shape.kind == "train":
+        if cfg.family == "vlm":
+            return {"inputs_embeds": sd((B, S, cfg.d_model), cdt),
+                    "positions": sd((3, B, S), i32),
+                    "labels": sd((B, S), i32)}
+        if cfg.family == "encdec":
+            return {"frames": sd((B, cfg.enc_frames, cfg.d_model), cdt),
+                    "tokens": sd((B, S), i32), "labels": sd((B, S), i32)}
+        return {"tokens": sd((B, S), i32), "labels": sd((B, S), i32)}
+    if shape.kind == "prefill":
+        if cfg.family == "vlm":
+            return {"inputs_embeds": sd((B, S, cfg.d_model), cdt),
+                    "positions": sd((3, B, S), i32)}
+        if cfg.family == "encdec":
+            return {"frames": sd((B, cfg.enc_frames, cfg.d_model), cdt),
+                    "tokens": sd((B, S), i32)}
+        return {"tokens": sd((B, S), i32)}
+    if shape.kind == "decode":
+        return {"token": sd((B, 1), i32)}
+    raise ValueError(shape.kind)
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeSpec):
+    if cfg.family == "encdec":
+        return whisper.init_cache_specs(cfg, shape.batch, shape.seq)
+    return lm.init_cache_specs(cfg, shape.batch, shape.seq)
+
+
+# ---------------------------------------------------------------------------
+# loss wrappers (uniform across families)
+# ---------------------------------------------------------------------------
+
+
+def make_loss_fn(cfg: ModelConfig):
+    if cfg.family == "encdec":
+        return functools.partial(whisper.loss_fn, cfg=cfg)
+    return functools.partial(lm.loss_fn, cfg=cfg)
+
+
+# ---------------------------------------------------------------------------
+# step builders
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(cfg: ModelConfig, ocfg: OptConfig, n_micro: int = 1):
+    """(state, batch) -> (state, loss) with gradient accumulation."""
+    loss_fn = make_loss_fn(cfg)
+
+    def train_step(state, batch):
+        params = state["params"]
+
+        def split(x):
+            return x.reshape(n_micro, x.shape[0] // n_micro, *x.shape[1:])
+
+        if n_micro > 1:
+            mbatch = {k: (split(v) if k != "positions" else
+                          v.reshape(v.shape[0], n_micro, v.shape[1] // n_micro,
+                                    *v.shape[2:]).swapaxes(0, 1))
+                      for k, v in batch.items()}
+
+            def micro(carry, mb):
+                gsum, lsum = carry
+                loss, g = jax.value_and_grad(lambda p: loss_fn(p, mb))(params)
+                return (jax.tree.map(jnp.add, gsum, g), lsum + loss), None
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, lsum), _ = jax.lax.scan(micro, (zeros, 0.0), mbatch,
+                                           unroll=cfg.unroll_scans)
+            grads = jax.tree.map(lambda g: g / n_micro, gsum)
+            loss = lsum / n_micro
+        else:
+            loss, grads = jax.value_and_grad(lambda p: loss_fn(p, batch))(params)
+
+        new_params, new_opt, _stats = adamw.update(params, grads, state["opt"], ocfg)
+        return {"params": new_params, "opt": new_opt}, loss
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, max_seq: int):
+    """(params, batch) -> (last_logits, caches)."""
+    if cfg.family == "encdec":
+        def prefill(params, batch):
+            return whisper.prefill(params, batch["frames"], batch["tokens"],
+                                   cfg, max_seq)
+        return prefill
+
+    def prefill(params, batch):
+        b = (batch.get("tokens") if batch.get("tokens") is not None
+             else batch["inputs_embeds"]).shape[0]
+        caches = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                              lm.init_cache_specs(cfg, b, max_seq))
+        logits, caches, _ = lm.forward(
+            params, batch.get("tokens"), cfg, caches=caches,
+            positions=batch.get("positions"),
+            inputs_embeds=batch.get("inputs_embeds"), q_offset=0)
+        return logits[:, -1], caches
+    return prefill
+
+
+def make_decode_step(cfg: ModelConfig):
+    if cfg.family == "encdec":
+        def step(params, token, caches):
+            return whisper.decode_step(params, token, caches, cfg)
+        return step
+
+    def step(params, token, caches):
+        positions = None
+        if cfg.mrope:
+            if cfg.family in ("dense", "vlm", "moe"):
+                idx = caches["layers"]["index"][0]
+            else:
+                idx = caches["shared"]["grp"]["index"][0]
+            b = token.shape[0]
+            positions = jnp.broadcast_to(
+                jnp.full((1, 1), 0, jnp.int32) + idx, (b, 1))
+            positions = jnp.broadcast_to(positions[None], (3, b, 1))
+        return lm.decode_step(params, token, caches, cfg, positions=positions)
+    return step
+
+
+# ---------------------------------------------------------------------------
+# sharding bundles for a cell
+# ---------------------------------------------------------------------------
+
+
+def model_param_specs(cfg: ModelConfig):
+    if cfg.family == "encdec":
+        return whisper.param_specs(cfg)
+    return lm.param_specs(cfg)
+
+
+def cell_shardings(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh,
+                   ocfg: OptConfig | None = None, fsdp: bool = False):
+    """All NamedShardings a dry-run cell needs.
+
+    fsdp=True additionally shards PARAMETERS over the data axes (ZeRO-3 /
+    FSDP via GSPMD: weights are all-gathered per use and freed) — required
+    for kimi-k2's 1T parameters, whose TP=16 shard alone is 128 GiB/device.
+    """
+    pspecs = model_param_specs(cfg)
+    psh = sharding.param_shardings(cfg, mesh, pspecs)
+    if fsdp:
+        psh = jax.tree.map(
+            lambda sh, sp: NamedSharding(
+                mesh, adamw.zero1_spec(mesh, sh.spec, sp.shape)),
+            psh, pspecs)
+    out = {"params": psh, "param_specs": pspecs}
+    ins = input_specs(cfg, shape)
+    out["inputs"] = ins
+    out["input_sh"] = {k: NamedSharding(mesh, sharding.batch_spec(mesh, k, v.shape))
+                       for k, v in ins.items()}
+    if shape.kind == "decode":
+        cs = cache_specs(cfg, shape)
+        out["cache_specs"] = cs
+        out["cache_sh"] = sharding.cache_shardings(mesh, cs)
+    if shape.kind == "train" and ocfg is not None:
+        os_ = adamw.state_specs(pspecs, ocfg)
+        osh = {"m": jax.tree.map(lambda s, p: NamedSharding(
+                   mesh, adamw.zero1_spec(mesh, p.spec, s.shape) if ocfg.zero1
+                   else p.spec), os_["m"], psh),
+               "step": NamedSharding(mesh, P())}
+        osh["v"] = osh["m"]
+        if ocfg.use_master:
+            osh["master"] = osh["m"]
+        out["opt_specs"] = os_
+        out["opt_sh"] = osh
+    return out

@@ -1,0 +1,3 @@
+"""Model zoo: decoder-only LM families + whisper enc-dec + sharding rules."""
+from . import config, layers, lm, moe, sharding, ssm, whisper
+from .config import ModelConfig

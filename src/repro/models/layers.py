@@ -1,0 +1,321 @@
+"""Transformer building blocks: norms, RoPE/M-RoPE, GQA attention, SwiGLU.
+
+All modules are pure functions over parameter pytrees (stacked over layers by
+the callers and scanned), bf16 compute with f32 normalization/softmax
+accumulation.  Attention is GSPMD-friendly: plain einsum under 4k sequence,
+chunked online-softmax (flash-style lax.scan over KV blocks) above — O(chunk)
+memory, identical FLOPs, compiles on CPU and runs on TPU.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from .config import ModelConfig
+
+ATTN_CHUNK_THRESHOLD = 8192   # plain softmax below, chunked above
+KV_CHUNK = 1024
+
+# TP mesh registry for sharding-constraint perf paths (set by launcher).
+_TP_MESH = None
+
+
+def set_tp_mesh(mesh):
+    global _TP_MESH
+    _TP_MESH = mesh
+
+
+def _pin_cache_sharding(ck, cv, cfg):
+    """Pin the per-layer KV cache slice to its canonical layout (batch over
+    dp, SEQUENCE over model) so the scan's ys stacking never permutes it —
+    GSPMD otherwise returns the attention-read resharding to the carry."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    mesh = _TP_MESH
+    if mesh is None or "model" not in mesh.axis_names or             cfg.cache_update != "masked":
+        return ck, cv
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    ok_b = ck.shape[0] % max(
+        1, int(np.prod([mesh.shape[a] for a in dp]))) == 0
+    ok_s = ck.shape[1] % mesh.shape["model"] == 0
+    spec = P(dp if ok_b else None, "model" if ok_s else None, None, None)
+    sh = NamedSharding(mesh, spec)
+    return (jax.lax.with_sharding_constraint(ck, sh),
+            jax.lax.with_sharding_constraint(cv, sh))
+
+
+def _seq_shard_qkv(q, k, v, cfg):
+    """§Perf lever (attn_seq_shard): shard the QUERY sequence over "model",
+    replicate KV — every softmax/weighted-sum stays device-local; the only
+    added comm is the per-layer KV broadcast + output re-shard, instead of
+    head-misaligned resharding storms (yi-34b: 56 heads on a 16-way axis)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    mesh = _TP_MESH
+    if not (cfg.attn_seq_shard and mesh is not None
+            and "model" in mesh.axis_names):
+        return q, k, v
+    if q.shape[1] % mesh.shape["model"] != 0 or q.shape[1] == 1:
+        return q, k, v
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    qs = NamedSharding(mesh, P(dp, "model", None, None, None))
+    kv = NamedSharding(mesh, P(dp, None, None, None))
+    return (jax.lax.with_sharding_constraint(q, qs),
+            jax.lax.with_sharding_constraint(k, kv),
+            jax.lax.with_sharding_constraint(v, kv))
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, scale, eps):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * lax.rsqrt(var + eps)
+    if scale is not None:
+        y = y * scale.astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def nonparam_layernorm(x, eps):
+    """OLMo's non-parametric LayerNorm: normalize, no learned scale/bias."""
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    return ((xf - mu) * lax.rsqrt(var + eps)).astype(x.dtype)
+
+
+def norm(x, scale, cfg: ModelConfig):
+    if cfg.nonparam_ln:
+        return nonparam_layernorm(x, cfg.norm_eps)
+    return rmsnorm(x, scale, cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings (standard + M-RoPE)
+# ---------------------------------------------------------------------------
+
+def rope_freqs(hd: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (B, S, H, hd); positions: (B, S) int32."""
+    hd = x.shape[-1]
+    inv = rope_freqs(hd, theta)                       # (hd/2,)
+    ang = positions.astype(jnp.float32)[..., None] * inv       # (B, S, hd/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x, positions3, theta: float, sections: tuple[int, int, int]):
+    """Qwen2-VL M-RoPE: frequency slots are split into (t, h, w) sections,
+    each rotated by its own position stream.  positions3: (3, B, S)."""
+    hd = x.shape[-1]
+    inv = rope_freqs(hd, theta)                       # (hd/2,)
+    sec = np.asarray(sections)
+    assert sec.sum() == hd // 2, (sections, hd)
+    sec_id = np.repeat(np.arange(3), sec)             # (hd/2,) which stream
+    pos = positions3.astype(jnp.float32)              # (3, B, S)
+    # per-frequency position: pick the stream for each slot
+    p = pos[sec_id]                                   # (hd/2, B, S)
+    ang = jnp.moveaxis(p, 0, -1) * inv                # (B, S, hd/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+def attention_scores(q, k, v, causal: bool, q_offset=0):
+    """Plain grouped attention: q (B,Sq,Hkv,G,hd), k/v (B,Sk,Hkv,hd).
+
+    GQA is computed WITHOUT materializing repeated KV heads: the group axis G
+    rides on the query side of the einsum (saves n_rep x KV memory — the
+    decode-path working set).
+    """
+    hd = q.shape[-1]
+    scale = 1.0 / np.sqrt(hd)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", q, k).astype(jnp.float32) * scale
+    if causal:
+        sq, sk = q.shape[1], k.shape[1]
+        qi = jnp.arange(sq)[:, None] + q_offset
+        ki = jnp.arange(sk)[None, :]
+        scores = jnp.where(qi >= ki, scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhgqk,bkhd->bqhgd", p, v)
+
+
+def attention_chunked(q, k, v, causal: bool, q_offset=0, kv_chunk: int = KV_CHUNK,
+                      unroll: bool = False):
+    """Flash-style online-softmax over KV chunks (O(chunk) memory).
+
+    q (B,Sq,Hkv,G,hd), k/v (B,Sk,Hkv,hd).  Implemented as lax.scan so the
+    32k/500k shapes compile without materializing (Sq, Sk) score tensors.
+    """
+    b, sq, hkv, g, hd = q.shape
+    sk = k.shape[1]
+    nchunks = -(-sk // kv_chunk)
+    pad = nchunks * kv_chunk - sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(b, nchunks, kv_chunk, hkv, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, nchunks, kv_chunk, hkv, hd).transpose(1, 0, 2, 3, 4)
+    scale = 1.0 / np.sqrt(hd)
+    qi = jnp.arange(sq)[:, None] + q_offset
+
+    def step(carry, xs):
+        m, l, o = carry
+        kb, vb, ci = xs
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", q, kb).astype(jnp.float32) * scale
+        ki = ci * kv_chunk + jnp.arange(kv_chunk)[None, :]
+        mask = ki <= (qi if causal else jnp.full_like(qi, sk))
+        mask = mask & (ki < sk)                      # drop padding keys
+        s = jnp.where(mask[None, None, None, :, :], s, -1e30)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        o_new = o * alpha[..., None] + jnp.einsum(
+            "bhgqk,bkhd->bhgqd", p.astype(q.dtype), vb).astype(jnp.float32)
+        return (m_new, l_new, o_new), None
+
+    m0 = jnp.full((b, hkv, g, sq), -1e30, jnp.float32)
+    l0 = jnp.zeros((b, hkv, g, sq), jnp.float32)
+    o0 = jnp.zeros((b, hkv, g, sq, hd), jnp.float32)
+    (m, l, o), _ = lax.scan(step, (m0, l0, o0),
+                            (kc, vc, jnp.arange(nchunks)), unroll=unroll)
+    o = o / jnp.maximum(l[..., None], 1e-30)
+    return o.transpose(0, 3, 1, 2, 4).astype(q.dtype)   # (B, Sq, Hkv, G, hd)
+
+
+@dataclasses.dataclass
+class AttnParams:
+    """Parameter name conventions for one attention block (per layer)."""
+    # wq: (d, H*hd), wk/wv: (d, Hkv*hd), wo: (H*hd, d)
+    # optional: bq/bk/bv, q_norm/k_norm scales
+
+
+def attention_block(p: dict, x, cfg: ModelConfig, positions, cache=None,
+                    layer_cross_kv=None):
+    """Full attention: projections + rope + (cached) attention + out proj.
+
+    cache: None (train/prefill-full) or dict {k, v, index} for decode —
+    k/v (B, Skv, Hkv, hd) ring buffers, index = current length (scalar).
+    Returns (out, new_cache).
+    """
+    b, s, d = x.shape
+    h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    dt = x.dtype
+    q = x @ p["wq"].astype(dt)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(dt)
+    q = q.reshape(b, s, h, hd)
+    if layer_cross_kv is None:
+        k = x @ p["wk"].astype(dt)
+        v = x @ p["wv"].astype(dt)
+        if cfg.qkv_bias:
+            k = k + p["bk"].astype(dt)
+            v = v + p["bv"].astype(dt)
+        k = k.reshape(b, s, hkv, hd)
+        v = v.reshape(b, s, hkv, hd)
+    else:
+        k, v = layer_cross_kv                         # pre-computed cross KV
+
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        if layer_cross_kv is None:
+            k = rmsnorm(k, p["k_norm"], cfg.norm_eps)
+
+    causal = layer_cross_kv is None
+    if layer_cross_kv is None and positions is not None:
+        if cfg.mrope:
+            q = apply_mrope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+            k = apply_mrope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+        else:
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+
+    new_cache = None
+    if cache is not None and layer_cross_kv is None:
+        # decode: write the new K/V at cache["index"], attend over the buffer
+        idx = cache["index"]
+        if cfg.cache_update == "masked" and s == 1:
+            # elementwise one-token write: each device applies its local
+            # slice of the iota mask — NO resharding of a seq-sharded cache
+            # (vs dynamic_update_slice at a dynamic index, which GSPMD
+            # lowers to a full cache permute+all-reduce per layer).
+            sel = (jnp.arange(cache["k"].shape[1], dtype=jnp.int32)
+                   == idx)[None, :, None, None]
+            ck = jnp.where(sel, k.astype(cache["k"].dtype), cache["k"])
+            cv = jnp.where(sel, v.astype(cache["v"].dtype), cache["v"])
+        else:
+            ck = lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                          (0, idx, 0, 0))
+            cv = lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                          (0, idx, 0, 0))
+        ck, cv = _pin_cache_sharding(ck, cv, cfg)
+        new_cache = {"k": ck, "v": cv, "index": idx + s}
+        k, v = ck.astype(dt), cv.astype(dt)
+        skv = k.shape[1]
+        # mask beyond current length via "causal" with q_offset = idx
+        q_offset = idx
+    else:
+        q_offset = 0
+
+    n_rep = h // hkv
+    qg = q.reshape(b, s, hkv, n_rep, hd)
+    qg, k, v = _seq_shard_qkv(qg, k, v, cfg)
+    is_causal = causal or cache is not None
+    # single-token decode always uses the direct path: scores are (B,H,1,S)
+    # (tiny per device with S model-sharded) and GSPMD turns the softmax over
+    # the sharded S into the flash-decoding max/sum combine.  The chunked
+    # path would instead ring-permute every cache chunk (measured: ~2 GiB of
+    # collective-permute per layer per token — EXPERIMENTS.md §Perf).
+    if s == 1 and cfg.attn_decode_kernel and cache is not None:
+        # fused Pallas decode kernel: one streaming pass over the cache,
+        # VMEM-carried online softmax (kernels/decode_attention)
+        from ..kernels.decode_attention import ops as da_ops
+        from ..kernels import interpret_default
+        length = jnp.broadcast_to(q_offset + 1, (b,)).astype(jnp.int32)
+        o = da_ops.decode_attention(qg[:, 0], k, v, length,
+                                    interpret=interpret_default())
+        out = o[:, None]                              # (B, 1, Hkv, G, hd)
+    elif s == 1 or (k.shape[1] <= ATTN_CHUNK_THRESHOLD
+                    and s <= ATTN_CHUNK_THRESHOLD):
+        out = attention_scores(qg, k, v, causal=is_causal, q_offset=q_offset)
+    else:
+        out = attention_chunked(qg, k, v, causal=is_causal, q_offset=q_offset,
+                                kv_chunk=cfg.kv_chunk,
+                                unroll=cfg.unroll_scans)
+    out = out.reshape(b, s, h * hd) @ p["wo"].astype(dt)
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def swiglu(p: dict, x, dt=None):
+    dt = dt or x.dtype
+    g = jax.nn.silu(x @ p["w_gate"].astype(dt))
+    u = x @ p["w_up"].astype(dt)
+    return (g * u) @ p["w_down"].astype(dt)
+
+
+def gelu_mlp(p: dict, x, dt=None):
+    """2-matrix GELU MLP (whisper-style)."""
+    dt = dt or x.dtype
+    return jax.nn.gelu(x @ p["w_up"].astype(dt)) @ p["w_down"].astype(dt)

@@ -1,0 +1,455 @@
+"""Decoder-only LM covering the dense / moe / ssm / hybrid / vlm families.
+
+Layers are scanned (stacked params, lax.scan) to keep HLO small — one While
+body per homogeneous block type; heterogeneous structure (MoE first-dense
+layers, Zamba's shared attention block) is expressed as a short unrolled
+Python loop of scans.  Decode carries caches through the same scans.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from . import moe as moe_mod
+from . import ssm as ssm_mod
+from .config import ModelConfig
+from .layers import attention_block, norm, swiglu
+
+# TP mesh registry (set by the launcher) for sharding-constraint perf paths.
+_TP_MESH = None
+
+
+def set_tp_mesh(mesh):
+    global _TP_MESH
+    _TP_MESH = mesh
+
+
+def _attn_dp_constraint(x, cfg):
+    """§Perf lever: when heads don't divide the model axis (yi-34b: 56 heads
+    on 16), Megatron-style head TP degenerates into per-layer activation
+    resharding (measured: 35 GiB all-reduce/layer).  Instead run attention
+    DATA-parallel over (dp x model): batch sharded across every chip, the
+    (much smaller) per-layer attention weights all-gathered FSDP-style."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    mesh = _TP_MESH
+    if not (cfg.attn_batch_shard and mesh is not None
+            and "model" in mesh.axis_names):
+        return x, None
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    all_ax = dp + ("model",)
+    total = 1
+    for a in all_ax:
+        total *= mesh.shape[a]
+    if x.shape[0] % total != 0:
+        return x, None
+    inner = NamedSharding(mesh, P(all_ax, None, None))
+    outer = NamedSharding(mesh, P(dp, None, None))
+    return jax.lax.with_sharding_constraint(x, inner), outer
+
+
+def _dt(cfg: ModelConfig):
+    return jnp.dtype(cfg.compute_dtype)
+
+
+def _pdt(cfg: ModelConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+# ---------------------------------------------------------------------------
+# parameter shapes / init / specs
+# ---------------------------------------------------------------------------
+
+
+def _attn_shapes(cfg: ModelConfig) -> dict[str, tuple]:
+    d, h, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    s = {"wq": (d, h * hd), "wk": (d, hkv * hd), "wv": (d, hkv * hd),
+         "wo": (h * hd, d)}
+    if cfg.qkv_bias:
+        s |= {"bq": (h * hd,), "bk": (hkv * hd,), "bv": (hkv * hd,)}
+    if cfg.qk_norm:
+        s |= {"q_norm": (hd,), "k_norm": (hd,)}
+    return s
+
+
+def _mlp_shapes(d: int, ff: int) -> dict[str, tuple]:
+    return {"w_gate": (d, ff), "w_up": (d, ff), "w_down": (ff, d)}
+
+
+def _ln_shapes(cfg: ModelConfig, names: tuple[str, ...]) -> dict[str, tuple]:
+    if cfg.nonparam_ln:
+        return {}
+    return {n: (cfg.d_model,) for n in names}
+
+
+def param_shapes(cfg: ModelConfig) -> dict:
+    """Nested dict of parameter shapes (pre-stacking: per-layer dicts carry a
+    leading L dim added here)."""
+    d, V = cfg.d_model, cfg.vocab
+    out: dict[str, Any] = {"embed": (V, d)}
+    if not cfg.tie_embeddings:
+        out["lm_head"] = (V, d)
+    out["final_ln"] = (d,)
+
+    def stack(shapes: dict, L: int) -> dict:
+        return jax.tree.map(lambda s: (L, *s), shapes,
+                            is_leaf=lambda x: isinstance(x, tuple))
+
+    if cfg.family in ("dense", "vlm"):
+        layer = {"attn": _attn_shapes(cfg), "mlp": _mlp_shapes(d, cfg.d_ff)}
+        layer |= _ln_shapes(cfg, ("ln1", "ln2"))
+        out["layers"] = stack(layer, cfg.n_layers)
+    elif cfg.family == "moe":
+        nl = cfg.n_layers - cfg.first_dense_layers
+        layer = {"attn": _attn_shapes(cfg), "moe": moe_mod.moe_param_shapes(cfg)}
+        layer |= _ln_shapes(cfg, ("ln1", "ln2"))
+        out["layers"] = stack(layer, nl)
+        if cfg.first_dense_layers:
+            dl = {"attn": _attn_shapes(cfg),
+                  "mlp": _mlp_shapes(d, cfg.d_ff_first_dense)}
+            dl |= _ln_shapes(cfg, ("ln1", "ln2"))
+            out["dense_layers"] = stack(dl, cfg.first_dense_layers)
+    elif cfg.family == "ssm":
+        layer = {"mamba": ssm_mod.mamba1_param_shapes(cfg)}
+        layer |= _ln_shapes(cfg, ("ln1",))
+        out["layers"] = stack(layer, cfg.n_layers)
+    elif cfg.family == "hybrid":
+        mshapes = (ssm_mod.mamba1_param_shapes if cfg.mamba_version == 1
+                   else ssm_mod.mamba2_param_shapes)
+        layer = {"mamba": mshapes(cfg)}
+        layer |= _ln_shapes(cfg, ("ln1",))
+        out["layers"] = stack(layer, cfg.n_layers)
+        shared = {"attn": _attn_shapes(cfg), "mlp": _mlp_shapes(d, cfg.d_ff)}
+        shared |= _ln_shapes(cfg, ("ln1", "ln2"))
+        out["shared_block"] = shared
+    else:
+        raise ValueError(cfg.family)
+    return out
+
+
+def param_specs(cfg: ModelConfig):
+    """ShapeDtypeStruct pytree — used by the dry-run (no allocation)."""
+    pdt = _pdt(cfg)
+    return jax.tree.map(lambda s: jax.ShapeDtypeStruct(s, pdt),
+                        param_shapes(cfg),
+                        is_leaf=lambda x: isinstance(x, tuple))
+
+
+def init_params(cfg: ModelConfig, key):
+    """Real initialization (smoke tests / the ~100M example run)."""
+    shapes = param_shapes(cfg)
+    leaves, treedef = jax.tree.flatten(shapes, is_leaf=lambda x: isinstance(x, tuple))
+    keys = jax.random.split(key, len(leaves))
+    pdt = _pdt(cfg)
+
+    def init_one(shape, k):
+        if len(shape) <= 2 and (shape[-1:] == (cfg.d_model,) or len(shape) == 1):
+            # norms / biases / 1-d params
+            if "int" in str(pdt):
+                return jnp.zeros(shape, pdt)
+            return jnp.ones(shape, pdt) if len(shape) == 1 else \
+                jax.random.normal(k, shape, pdt) * 0.02
+        fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+        return (jax.random.normal(k, shape) * (1.0 / np.sqrt(fan_in))).astype(pdt)
+
+    inits = [init_one(s, k) for s, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, inits)
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+
+def _transformer_block(lp, x, cfg: ModelConfig, positions, cache=None,
+                       mlp_fn=None):
+    xa = norm(x, lp.get("ln1"), cfg)
+    xa, outer = _attn_dp_constraint(xa, cfg)
+    h, new_cache = attention_block(
+        lp["attn"], xa, cfg, positions, cache=cache)
+    if outer is not None:
+        h = jax.lax.with_sharding_constraint(h, outer)
+    x = x + h
+    y = (mlp_fn or (lambda p_, v: swiglu(p_, v)))(lp, norm(x, lp.get("ln2"), cfg))
+    if isinstance(y, tuple):
+        y, aux = y
+    else:
+        aux = 0.0
+    return x + y, new_cache, aux
+
+
+def _mamba_block(lp, x, cfg: ModelConfig, state=None):
+    fwd = ssm_mod.mamba1_forward if cfg.mamba_version == 1 else ssm_mod.mamba2_forward
+    h, new_state = fwd(lp["mamba"], norm(x, lp.get("ln1"), cfg), cfg, state=state)
+    return x + h, new_state
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill); cache-threaded scan for decode
+# ---------------------------------------------------------------------------
+
+
+def _scan_blocks(params_stacked, x, body, caches=None, remat=False,
+                 unroll=False):
+    """Scan a homogeneous stack of layers, threading optional caches.
+
+    remat=True wraps the body in jax.checkpoint (rematerialization): the
+    backward pass recomputes layer internals from the (B,S,d) carry instead
+    of saving L x per-layer activations — the standard memory/compute trade
+    that makes the 4k-train shapes fit HBM (accounted in §Roofline via the
+    MODEL_FLOPS/HLO_FLOPs ratio).
+    """
+    if caches is None:
+        def f(carry, lp):
+            y, _c, aux = body(lp, carry, None)
+            return y, aux
+        if remat:
+            f = jax.checkpoint(f)
+        x, auxs = lax.scan(f, x, params_stacked, unroll=unroll)
+        return x, None, jnp.sum(auxs) if auxs is not None else 0.0
+
+    def f(carry, xs):
+        lp, cache = xs
+        y, new_cache, aux = body(lp, carry, cache)
+        return y, (new_cache, aux)
+    x, (new_caches, auxs) = lax.scan(f, x, (params_stacked, caches),
+                                     unroll=unroll)
+    return x, new_caches, jnp.sum(auxs)
+
+
+def forward(params, tokens, cfg: ModelConfig, *, positions=None,
+            inputs_embeds=None, caches=None, q_offset=None):
+    """Shared forward.  tokens: (B, S) int32 (or inputs_embeds for vlm).
+
+    caches: None for train/prefill-logits; a cache pytree for decode.
+    Returns (logits, new_caches, aux_loss).
+    """
+    cdt = _dt(cfg)
+    if inputs_embeds is not None:
+        x = inputs_embeds.astype(cdt)
+        b, s = x.shape[:2]
+    else:
+        b, s = tokens.shape
+        x = params["embed"].astype(cdt)[tokens]
+    if positions is None:
+        base = jnp.arange(s, dtype=jnp.int32)[None, :] + (
+            q_offset if q_offset is not None else 0)
+        positions = jnp.broadcast_to(base, (b, s))
+        if cfg.mrope:
+            positions = jnp.broadcast_to(positions[None], (3, b, s))
+
+    total_aux = 0.0
+    new_caches: dict[str, Any] = {}
+    remat = (cfg.remat == "block") and caches is None
+    unroll = cfg.unroll_scans
+
+    if cfg.family in ("dense", "vlm"):
+        def body(lp, h, cache):
+            return _transformer_block(lp, h, cfg, positions, cache=cache,
+                                      mlp_fn=lambda p_, v: swiglu(p_["mlp"], v))
+        x, nc, aux = _scan_blocks(params["layers"], x, body,
+                                  None if caches is None else caches["layers"],
+                                  remat=remat, unroll=unroll)
+        new_caches["layers"] = nc
+        total_aux += aux
+
+    elif cfg.family == "moe":
+        if cfg.first_dense_layers:
+            def dbody(lp, h, cache):
+                return _transformer_block(lp, h, cfg, positions, cache=cache,
+                                          mlp_fn=lambda p_, v: swiglu(p_["mlp"], v))
+            x, ncd, aux = _scan_blocks(
+                params["dense_layers"], x, dbody,
+                None if caches is None else caches["dense_layers"],
+                remat=remat, unroll=unroll)
+            new_caches["dense_layers"] = ncd
+            total_aux += aux
+
+        def mbody(lp, h, cache):
+            return _transformer_block(lp, h, cfg, positions, cache=cache,
+                                      mlp_fn=lambda p_, v: moe_mod.moe_block(p_["moe"], v, cfg))
+        x, ncm, aux = _scan_blocks(params["layers"], x, mbody,
+                                   None if caches is None else caches["layers"],
+                                   remat=remat, unroll=unroll)
+        new_caches["layers"] = ncm
+        total_aux += aux
+
+    elif cfg.family == "ssm":
+        def sbody(lp, h, state):
+            y, ns = _mamba_block(lp, h, cfg, state=state)
+            return y, ns, 0.0
+        x, ns, _ = _scan_blocks(params["layers"], x, sbody,
+                                None if caches is None else caches["layers"],
+                                remat=remat, unroll=unroll)
+        new_caches["layers"] = ns
+
+    elif cfg.family == "hybrid":
+        # Zamba structure: groups of `period` Mamba2 layers with ONE weight-
+        # shared attention+MLP block applied between groups.  Lowered as a
+        # scan over GROUPS (shared weights closed over, so every group body
+        # is identical -> a single While in HLO); the tail (L % period
+        # layers + one final shared application) is scanned separately.
+        period = cfg.shared_attn_period or cfg.n_layers
+        L = cfg.n_layers
+        n_groups, tail = divmod(L, period)
+
+        def hbody(lp, h, state):
+            y, ns = _mamba_block(lp, h, cfg, state=state)
+            return y, ns, 0.0
+
+        def shared_apply(h, sc):
+            return _transformer_block(
+                params["shared_block"], h, cfg, positions, cache=sc,
+                mlp_fn=lambda p_, v: swiglu(p_["mlp"], v))
+
+        def regroup(a):
+            return a[: n_groups * period].reshape(
+                n_groups, period, *a.shape[1:])
+
+        grp = jax.tree.map(regroup, params["layers"])
+        tail_p = jax.tree.map(lambda a: a[n_groups * period:], params["layers"])
+
+        def group_body(h, xs):
+            lp_grp, cache_grp, sc = xs
+            h, ns, _ = _scan_blocks(lp_grp, h, hbody, cache_grp,
+                                    remat=False, unroll=unroll)
+            h, nsc, _ = shared_apply(h, sc)
+            return h, (ns, nsc)
+
+        if remat:
+            group_body = jax.checkpoint(group_body)
+
+        if caches is None:
+            xs = (grp, None, None)
+            # scan needs concrete xs leaves; build dummy Nones via length
+            def gb(h, lp_grp):
+                h, ns, _ = _scan_blocks(lp_grp, h, hbody, None,
+                                        remat=False, unroll=unroll)
+                h, _nsc, _ = shared_apply(h, None)
+                return h, None
+            if remat:
+                gb = jax.checkpoint(gb)
+            x, _ = lax.scan(gb, x, grp, unroll=unroll)
+            new_caches["layers"] = None
+            new_caches["shared"] = None
+            if tail:
+                x, _, _ = _scan_blocks(tail_p, x, hbody, None,
+                                       remat=remat, unroll=unroll)
+                x, _, _ = shared_apply(x, None)
+        else:
+            cache_grp = jax.tree.map(regroup, caches["layers"])
+            x, (ns_grp, nsc_grp) = lax.scan(
+                group_body, x, (grp, cache_grp, caches["shared"]["grp"]),
+                unroll=unroll)
+            ns_flat = jax.tree.map(
+                lambda a: a.reshape(n_groups * period, *a.shape[2:]), ns_grp)
+            new_shared = {"grp": nsc_grp}
+            if tail:
+                tail_cache = jax.tree.map(lambda a: a[n_groups * period:],
+                                          caches["layers"])
+                x, ns_tail, _ = _scan_blocks(tail_p, x, hbody, tail_cache,
+                                             remat=False, unroll=unroll)
+                x, nsc_tail, _ = shared_apply(x, caches["shared"]["tail"])
+                ns_flat = jax.tree.map(lambda a, b: jnp.concatenate([a, b]),
+                                       ns_flat, ns_tail)
+                new_shared["tail"] = nsc_tail
+            new_caches["layers"] = ns_flat
+            new_caches["shared"] = new_shared
+    else:
+        raise ValueError(cfg.family)
+
+    x = norm(x, params.get("final_ln"), cfg)
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,vd->bsv", x, head.astype(cdt))
+    return logits, (new_caches if caches is not None else None), total_aux
+
+
+# ---------------------------------------------------------------------------
+# losses / steps
+# ---------------------------------------------------------------------------
+
+
+def loss_fn(params, batch, cfg: ModelConfig):
+    """Causal LM loss.  batch: {tokens (B,S), labels (B,S)} (+ vlm extras)."""
+    logits, _, aux = forward(
+        params, batch.get("tokens"), cfg,
+        positions=batch.get("positions"),
+        inputs_embeds=batch.get("inputs_embeds"))
+    labels = batch["labels"]
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    ll = (logz - gold) * mask
+    loss = jnp.sum(ll) / jnp.maximum(jnp.sum(mask), 1.0)
+    return loss + 0.01 * aux
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+
+
+def init_cache_specs(cfg: ModelConfig, batch: int, max_seq: int):
+    """ShapeDtypeStruct pytree of the decode cache."""
+    cdt = _dt(cfg)
+    hkv, hd = cfg.n_kv_heads, cfg.hd
+
+    def attn_cache(n):
+        return {
+            "k": jax.ShapeDtypeStruct((n, batch, max_seq, hkv, hd), cdt),
+            "v": jax.ShapeDtypeStruct((n, batch, max_seq, hkv, hd), cdt),
+            "index": jax.ShapeDtypeStruct((n,), jnp.int32),
+        }
+
+    def ssm_cache(n):
+        conv_s, h_s = ssm_mod.ssm_state_shapes(cfg, batch)
+        return (jax.ShapeDtypeStruct((n, *conv_s), cdt),
+                jax.ShapeDtypeStruct((n, *h_s), jnp.float32))
+
+    if cfg.family in ("dense", "vlm"):
+        return {"layers": attn_cache(cfg.n_layers)}
+    if cfg.family == "moe":
+        out = {"layers": attn_cache(cfg.n_layers - cfg.first_dense_layers)}
+        if cfg.first_dense_layers:
+            out["dense_layers"] = attn_cache(cfg.first_dense_layers)
+        return out
+    if cfg.family == "ssm":
+        return {"layers": ssm_cache(cfg.n_layers)}
+    if cfg.family == "hybrid":
+        period = cfg.shared_attn_period or cfg.n_layers
+        n_groups, tail = divmod(cfg.n_layers, period)
+        shared = {"grp": attn_cache(n_groups)}
+        if tail:
+            a = attn_cache(1)
+            shared["tail"] = jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct(s.shape[1:], s.dtype), a)
+        return {"layers": ssm_cache(cfg.n_layers), "shared": shared}
+    raise ValueError(cfg.family)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int):
+    specs = init_cache_specs(cfg, batch, max_seq)
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), specs)
+
+
+def decode_step(params, token, caches, cfg: ModelConfig, positions=None):
+    """One-token decode.  token: (B, 1) int32.  Returns (logits, caches).
+
+    Attention caches are stacked (L, ...) pytrees; lax.scan slices one layer's
+    {k, v, index-scalar} per step and restacks the updates — the cache flows
+    through the same scan as the parameters.
+    """
+    if cfg.family in ("dense", "vlm", "moe"):
+        idx = caches["layers"]["index"][0]
+    elif cfg.family == "hybrid":
+        idx = caches["shared"]["grp"]["index"][0]
+    else:
+        idx = None  # SSM: position-free
+    logits, new_caches, _ = forward(params, token, cfg, caches=caches,
+                                    q_offset=idx, positions=positions)
+    return logits[:, -1], new_caches

@@ -1,0 +1,133 @@
+"""Sharding rules: parameter/batch/cache PartitionSpecs for the production mesh.
+
+Megatron-style tensor parallelism on the "model" axis (column-parallel in-
+projections, row-parallel out-projections), experts sharded for EP, vocab
+sharded for the embedding/head, decode KV caches sharded along SEQUENCE on
+"model" (GSPMD turns softmax over the sharded axis into the flash-decoding
+max/sum combine), batch over ("pod","data") for DP.
+
+Every rule degrades gracefully: a dim that does not divide its mesh axes is
+replicated (e.g. qwen2-vl's 12 heads on a 16-way model axis shard the fused
+head*dim projections, which DO divide).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .config import ModelConfig
+
+
+def dp_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _axsize(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        return mesh.shape[axes]
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def fit_spec(mesh: Mesh, shape: tuple, want: tuple) -> P:
+    """Drop sharding on dims that don't divide their axes."""
+    out = []
+    for dim, ax in zip(shape, want):
+        if ax is None or dim % _axsize(mesh, ax) != 0:
+            out.append(None)
+        else:
+            out.append(ax)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+# -- parameters ---------------------------------------------------------------
+
+_COL_PARALLEL = ("wq", "wk", "wv", "bq", "bk", "bv", "w_gate", "w_up",
+                 "in_proj", "w_dtx", "w_B", "w_C", "w_dt", "enc_in_proj")
+_ROW_PARALLEL = ("wo", "w_down", "out_proj")
+_VOCAB = ("embed", "lm_head")
+_CHANNEL = ("conv_w", "conv_b", "A_log", "D", "dt_bias")
+
+
+def param_spec_for(mesh: Mesh, path: tuple[str, ...], shape: tuple) -> P:
+    name = path[-1]
+    in_experts = "experts" in path
+    if in_experts:
+        # (L, E, d, ff): EP — shard experts
+        want = [None] * len(shape)
+        want[1] = "model"
+        return fit_spec(mesh, shape, tuple(want))
+    if name in _VOCAB:
+        return fit_spec(mesh, shape, ("model", None))
+    if name in _COL_PARALLEL:
+        want = [None] * len(shape)
+        want[-1] = "model"
+        return fit_spec(mesh, shape, tuple(want))
+    if name in _ROW_PARALLEL:
+        want = [None] * len(shape)
+        want[-2] = "model"
+        return fit_spec(mesh, shape, tuple(want))
+    if name in _CHANNEL:
+        # (L, din, ...) — shard the channel dim
+        want = [None] * len(shape)
+        if len(shape) >= 2:
+            want[1] = "model"
+        return fit_spec(mesh, shape, tuple(want))
+    return P()  # norms, router, scalars: replicated
+
+
+def param_shardings(cfg: ModelConfig, mesh: Mesh, specs) -> Any:
+    """Map a param pytree (arrays or ShapeDtypeStructs) to NamedShardings."""
+    def one(path, leaf):
+        names = tuple(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        return NamedSharding(mesh, param_spec_for(mesh, names, leaf.shape))
+    return jax.tree_util.tree_map_with_path(one, specs)
+
+
+# -- batches ------------------------------------------------------------------
+
+
+def batch_spec(mesh: Mesh, name: str, shape: tuple) -> P:
+    dp = dp_axes(mesh)
+    if name == "positions" and len(shape) == 3:      # (3, B, S) mrope
+        return fit_spec(mesh, shape, (None, dp, None))
+    if len(shape) >= 2:
+        return fit_spec(mesh, shape, (dp,) + (None,) * (len(shape) - 1))
+    return P()
+
+
+def batch_shardings(mesh: Mesh, batch_specs: dict) -> dict:
+    return {k: NamedSharding(mesh, batch_spec(mesh, k, v.shape))
+            for k, v in batch_specs.items() if v is not None}
+
+
+# -- decode caches ------------------------------------------------------------
+
+
+def cache_spec_for(mesh: Mesh, path: tuple[str, ...], shape: tuple) -> P:
+    dp = dp_axes(mesh)
+    name = path[-1]
+    if name in ("k", "v", "xk", "xv"):
+        # (L, B, S, hkv, hd): batch over dp, SEQUENCE over model
+        return fit_spec(mesh, shape, (None, dp, "model", None, None)[:len(shape)])
+    if name == "index":
+        return P()
+    # ssm states: (L, B, ..., din/H, ...) — shard channels on model
+    if len(shape) >= 3:
+        want = [None, dp] + [None] * (len(shape) - 2)
+        want[2] = "model"
+        return fit_spec(mesh, shape, tuple(want))
+    return P()
+
+
+def cache_shardings(mesh: Mesh, specs) -> Any:
+    def one(path, leaf):
+        names = tuple(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        return NamedSharding(mesh, cache_spec_for(mesh, names, leaf.shape))
+    return jax.tree_util.tree_map_with_path(one, specs)

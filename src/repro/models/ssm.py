@@ -1,0 +1,205 @@
+"""Selective state-space blocks: Mamba1 (falcon-mamba) and Mamba2/SSD (zamba2).
+
+Training/prefill uses a CHUNKED scan: an outer lax.scan over sequence chunks
+carries the (B, din, state) recurrent state; inside a chunk the linear
+recurrence h_t = dA_t h_{t-1} + dBx_t is evaluated with an associative scan —
+O(B·chunk·din·state) live memory instead of O(B·S·din·state), which is what
+makes the 4k-train and 500k-decode shapes fit (DESIGN.md §5).
+
+Decode is O(1) in context length: the entire "KV cache" is the SSM state plus
+a (conv_kernel-1)-deep convolution tail — the reason the long_500k shape runs
+for the SSM/hybrid architectures only.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from .config import ModelConfig
+
+
+def _assoc_combine(a, b):
+    """Compose linear recurrences h -> A h + b."""
+    a1, b1 = a
+    a2, b2 = b
+    return a2 * a1, a2 * b1 + b2
+
+
+def _causal_conv(x, w, b, kernel: int):
+    """Depthwise causal conv1d: x (B, S, din), w (din, k), b (din,)."""
+    pad = jnp.pad(x, ((0, 0), (kernel - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(kernel):
+        out = out + pad[:, i:i + x.shape[1], :].astype(jnp.float32) * \
+            w[kernel - 1 - i].astype(jnp.float32)
+    return (out + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def dt_rank(cfg: ModelConfig) -> int:
+    return max(1, cfg.d_model // 16)
+
+
+# ---------------------------------------------------------------------------
+# Mamba1
+# ---------------------------------------------------------------------------
+
+def mamba1_forward(p: dict, x, cfg: ModelConfig, state=None):
+    """x: (B, S, d).  state: None (train) or (conv_tail, h) for decode.
+
+    Returns (y, new_state)."""
+    b, s, d = x.shape
+    din, st, k = cfg.din, cfg.ssm_state, cfg.conv_kernel
+    dt = x.dtype
+    xz = x @ p["in_proj"].astype(dt)                  # (B, S, 2*din)
+    x1, z = jnp.split(xz, 2, axis=-1)
+
+    if state is None:
+        x1 = _causal_conv(x1, p["conv_w"].T, p["conv_b"], k)
+        conv_tail_new = None
+    else:
+        conv_tail, h0 = state
+        # decode: prepend cached tail, conv over the last k samples
+        seq = jnp.concatenate([conv_tail, x1], axis=1)     # (B, k-1+s, din)
+        x1 = _causal_conv(seq, p["conv_w"].T, p["conv_b"], k)[:, k - 1:, :]
+        conv_tail_new = seq[:, -(k - 1):, :]
+    x1 = jax.nn.silu(x1)
+
+    # input-dependent SSM parameters
+    dt_lr = x1 @ p["w_dtx"].astype(dt)                 # (B, S, rank)
+    delta = jax.nn.softplus(
+        (dt_lr @ p["w_dt"].astype(dt)).astype(jnp.float32)
+        + p["dt_bias"].astype(jnp.float32))            # (B, S, din) f32
+    Bm = (x1 @ p["w_B"].astype(dt)).astype(jnp.float32)    # (B, S, st)
+    Cm = (x1 @ p["w_C"].astype(dt)).astype(jnp.float32)    # (B, S, st)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))       # (din, st)
+
+    x1f = x1.astype(jnp.float32)
+
+    def chunk(h, xs):
+        xc, dc, bc, cc = xs                            # (B, c, ...)
+        dA = jnp.exp(dc[..., None] * A)                # (B, c, din, st)
+        dBx = (dc * xc)[..., None] * bc[:, :, None, :]  # (B, c, din, st)
+        cumA, cumB = lax.associative_scan(_assoc_combine, (dA, dBx), axis=1)
+        hs = cumA * h[:, None] + cumB                  # (B, c, din, st)
+        y = jnp.einsum("bcds,bcs->bcd", hs, cc)
+        return hs[:, -1], y
+
+    if state is None and s > 1:
+        c = min(cfg.ssm_chunk, s)
+        nch = -(-s // c)
+        pad = nch * c - s
+        def pads(a):
+            return jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2))
+        xs = tuple(a.reshape(b, nch, c, *a.shape[2:]).transpose(1, 0, 2, *range(3, a.ndim + 1))
+                   for a in map(pads, (x1f, delta, Bm, Cm)))
+        h0 = jnp.zeros((b, din, st), jnp.float32)
+        h_last, ys = lax.scan(chunk, h0, xs, unroll=cfg.unroll_scans)
+        y = ys.transpose(1, 0, 2, 3).reshape(b, nch * c, din)[:, :s]
+        new_state = None
+    else:
+        h0 = jnp.zeros((b, din, st), jnp.float32) if state is None else state[1]
+        h_last, y = chunk(h0, (x1f, delta, Bm, Cm))
+        new_state = (conv_tail_new, h_last) if state is not None else None
+
+    y = y + x1f * p["D"].astype(jnp.float32)
+    y = (y.astype(dt) * jax.nn.silu(z))
+    out = y @ p["out_proj"].astype(dt)
+    return out, new_state
+
+
+def mamba1_param_shapes(cfg: ModelConfig) -> dict[str, tuple]:
+    din, st, d, k = cfg.din, cfg.ssm_state, cfg.d_model, cfg.conv_kernel
+    r = dt_rank(cfg)
+    return {
+        "in_proj": (d, 2 * din), "conv_w": (din, k), "conv_b": (din,),
+        "w_dtx": (din, r), "w_dt": (r, din), "dt_bias": (din,),
+        "w_B": (din, st), "w_C": (din, st),
+        "A_log": (din, st), "D": (din,), "out_proj": (din, d),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 (SSD): per-head scalar decay, shared B/C across head channels
+# ---------------------------------------------------------------------------
+
+def mamba2_forward(p: dict, x, cfg: ModelConfig, state=None):
+    """Simplified SSD block (scalar A per head).  x: (B, S, d)."""
+    b, s, d = x.shape
+    din, st, k = cfg.din, cfg.ssm_state, cfg.conv_kernel
+    hd = cfg.mamba_headdim
+    H = din // hd
+    dt = x.dtype
+    xz = x @ p["in_proj"].astype(dt)
+    x1, z = jnp.split(xz, 2, axis=-1)
+
+    if state is None:
+        x1 = _causal_conv(x1, p["conv_w"].T, p["conv_b"], k)
+        conv_tail_new = None
+    else:
+        conv_tail, h0 = state
+        seq = jnp.concatenate([conv_tail, x1], axis=1)
+        x1 = _causal_conv(seq, p["conv_w"].T, p["conv_b"], k)[:, k - 1:, :]
+        conv_tail_new = seq[:, -(k - 1):, :]
+    x1 = jax.nn.silu(x1)
+
+    delta = jax.nn.softplus(
+        (x1 @ p["w_dt"].astype(dt)).astype(jnp.float32)
+        + p["dt_bias"].astype(jnp.float32))            # (B, S, H)
+    Bm = (x1 @ p["w_B"].astype(dt)).astype(jnp.float32)    # (B, S, st)
+    Cm = (x1 @ p["w_C"].astype(dt)).astype(jnp.float32)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))       # (H,)
+    xh = x1.astype(jnp.float32).reshape(b, s, H, hd)
+
+    def chunk(h, xs):
+        xc, dc, bc, cc = xs                            # (B,c,H,hd) (B,c,H) (B,c,st)
+        dA = jnp.exp(dc * A)                           # (B, c, H)
+        dBx = jnp.einsum("bch,bchp,bcs->bchps", dc, xc, bc)   # (B,c,H,hd,st)
+        cumA, cumB = lax.associative_scan(
+            _assoc_combine, (dA[..., None, None], dBx), axis=1)
+        hs = cumA * h[:, None] + cumB                  # (B,c,H,hd,st)
+        y = jnp.einsum("bchps,bcs->bchp", hs, cc)
+        return hs[:, -1], y
+
+    if state is None and s > 1:
+        c = min(cfg.ssm_chunk, s)
+        nch = -(-s // c)
+        pad = nch * c - s
+        def pads(a):
+            return jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2))
+        xs = tuple(a.reshape(b, nch, c, *a.shape[2:]).transpose(1, 0, 2, *range(3, a.ndim + 1))
+                   for a in map(pads, (xh, delta, Bm, Cm)))
+        h0 = jnp.zeros((b, H, hd, st), jnp.float32)
+        h_last, ys = lax.scan(chunk, h0, xs, unroll=cfg.unroll_scans)
+        y = ys.transpose(1, 0, 2, 3, 4).reshape(b, nch * c, H, hd)[:, :s]
+        new_state = None
+    else:
+        h0 = jnp.zeros((b, H, hd, st), jnp.float32) if state is None else state[1]
+        h_last, y = chunk(h0, (xh, delta, Bm, Cm))
+        new_state = (conv_tail_new, h_last) if state is not None else None
+
+    y = y.reshape(b, s, din) + x1.astype(jnp.float32) * p["D"].astype(jnp.float32)
+    y = y.astype(dt) * jax.nn.silu(z)
+    out = y @ p["out_proj"].astype(dt)
+    return out, new_state
+
+
+def mamba2_param_shapes(cfg: ModelConfig) -> dict[str, tuple]:
+    din, st, d, k = cfg.din, cfg.ssm_state, cfg.d_model, cfg.conv_kernel
+    H = din // cfg.mamba_headdim
+    return {
+        "in_proj": (d, 2 * din), "conv_w": (din, k), "conv_b": (din,),
+        "w_dt": (din, H), "dt_bias": (H,),
+        "w_B": (din, st), "w_C": (din, st),
+        "A_log": (H,), "D": (din,), "out_proj": (din, d),
+    }
+
+
+def ssm_state_shapes(cfg: ModelConfig, batch: int) -> tuple[tuple, tuple]:
+    """(conv_tail, h) shapes for one layer's decode state."""
+    din, st, k = cfg.din, cfg.ssm_state, cfg.conv_kernel
+    if cfg.mamba_version == 2:
+        H = din // cfg.mamba_headdim
+        return ((batch, k - 1, din), (batch, H, cfg.mamba_headdim, st))
+    return ((batch, k - 1, din), (batch, din, st))

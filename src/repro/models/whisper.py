@@ -1,0 +1,209 @@
+"""Whisper-style encoder-decoder backbone (audio frontend is a STUB).
+
+Per the assignment, only the transformer backbone is modeled: ``input_specs``
+provides precomputed mel-frame embeddings (B, enc_frames, d) — the conv
+frontend is out of scope.  Positions are sinusoidal (the original uses
+learned tables; swapping to sinusoids decouples parameter shapes from the
+assigned 32k decoder sequence lengths — noted in DESIGN.md).
+
+Decoder layers carry BOTH a causal self-attention cache and a cross-attention
+KV computed once from the encoder output at prefill.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from .config import ModelConfig
+from .layers import attention_block, gelu_mlp, rmsnorm
+from .lm import _attn_shapes, _dt, _pdt
+
+
+def _sinusoid(seq: int, d: int, offset=0):
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None] + offset
+    div = jnp.exp(-np.log(10000.0) * jnp.arange(0, d, 2, jnp.float32) / d)
+    ang = pos * div
+    out = jnp.zeros((seq, d), jnp.float32)
+    out = out.at[:, 0::2].set(jnp.sin(ang)).at[:, 1::2].set(jnp.cos(ang))
+    return out
+
+
+def param_shapes(cfg: ModelConfig) -> dict:
+    d, V = cfg.d_model, cfg.vocab
+    enc_layer = {"attn": _attn_shapes(cfg),
+                 "ln1": (d,), "ln2": (d,),
+                 "mlp": {"w_up": (d, cfg.d_ff), "w_down": (cfg.d_ff, d)}}
+    dec_layer = {"attn": _attn_shapes(cfg), "xattn": _attn_shapes(cfg),
+                 "ln1": (d,), "ln2": (d,), "ln3": (d,),
+                 "mlp": {"w_up": (d, cfg.d_ff), "w_down": (cfg.d_ff, d)}}
+
+    def stack(shapes, L):
+        return jax.tree.map(lambda s: (L, *s), shapes,
+                            is_leaf=lambda x: isinstance(x, tuple))
+
+    return {
+        "embed": (V, d),
+        "enc_in_proj": (d, d),            # stub frontend projection
+        "enc_layers": stack(enc_layer, cfg.n_enc_layers),
+        "enc_final_ln": (d,),
+        "dec_layers": stack(dec_layer, cfg.n_layers),
+        "final_ln": (d,),
+    }
+
+
+def param_specs(cfg: ModelConfig):
+    pdt = _pdt(cfg)
+    return jax.tree.map(lambda s: jax.ShapeDtypeStruct(s, pdt),
+                        param_shapes(cfg), is_leaf=lambda x: isinstance(x, tuple))
+
+
+def init_params(cfg: ModelConfig, key):
+    shapes = param_shapes(cfg)
+    leaves, treedef = jax.tree.flatten(shapes, is_leaf=lambda x: isinstance(x, tuple))
+    keys = jax.random.split(key, len(leaves))
+    pdt = _pdt(cfg)
+
+    def init_one(shape, k):
+        if len(shape) == 1 or (len(shape) == 2 and shape[-1] == cfg.d_model
+                               and shape[0] == cfg.n_layers):
+            return jnp.ones(shape, pdt)
+        fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+        return (jax.random.normal(k, shape) * (1.0 / np.sqrt(fan_in))).astype(pdt)
+
+    return jax.tree.unflatten(treedef, [init_one(s, k) for s, k in zip(leaves, keys)])
+
+
+def encode(params, frames, cfg: ModelConfig):
+    """frames: (B, F, d) stub embeddings -> encoder states (B, F, d)."""
+    cdt = _dt(cfg)
+    x = frames.astype(cdt) @ params["enc_in_proj"].astype(cdt)
+    x = x + _sinusoid(x.shape[1], cfg.d_model).astype(cdt)[None]
+
+    # non-causal self attention: reuse the cross-attn path with KV = self
+    def enc_body(h, lp):
+        a, _ = _encoder_self_attn(lp["attn"], rmsnorm(h, lp["ln1"], cfg.norm_eps), cfg)
+        h = h + a
+        h = h + gelu_mlp(lp["mlp"], rmsnorm(h, lp["ln2"], cfg.norm_eps))
+        return h, None
+
+    if cfg.remat == "block":
+        enc_body = jax.checkpoint(enc_body)
+    x, _ = lax.scan(enc_body, x, params["enc_layers"],
+                    unroll=cfg.unroll_scans)
+    return rmsnorm(x, params["enc_final_ln"], cfg.norm_eps)
+
+
+def _encoder_self_attn(p, x, cfg):
+    """Bidirectional self-attention (reuses the cross-attn path with KV=self)."""
+    b, s, d = x.shape
+    hkv, hd = cfg.n_kv_heads, cfg.hd
+    dt = x.dtype
+    k = (x @ p["wk"].astype(dt)).reshape(b, s, hkv, hd)
+    v = (x @ p["wv"].astype(dt)).reshape(b, s, hkv, hd)
+    return attention_block(p, x, cfg, positions=None, layer_cross_kv=(k, v))
+
+
+def _cross_kv(p, enc, cfg):
+    b, f, d = enc.shape
+    hkv, hd = cfg.n_kv_heads, cfg.hd
+    dt = enc.dtype
+    k = (enc @ p["wk"].astype(dt)).reshape(b, f, hkv, hd)
+    v = (enc @ p["wv"].astype(dt)).reshape(b, f, hkv, hd)
+    return k, v
+
+
+def decode_forward(params, tokens, enc_states, cfg: ModelConfig, *,
+                   caches=None, q_offset=None):
+    """Decoder forward (teacher forcing when caches=None, else one-step)."""
+    cdt = _dt(cfg)
+    b, s = tokens.shape
+    x = params["embed"].astype(cdt)[tokens]
+    off = q_offset if q_offset is not None else 0
+    x = x + _sinusoid(s, cfg.d_model, offset=off).astype(cdt)[None]
+
+    def body(h, xs):
+        if caches is None:
+            lp = xs
+            cache = None
+        else:
+            lp, cache = xs
+        a, nc = attention_block(lp["attn"], rmsnorm(h, lp["ln1"], cfg.norm_eps),
+                                cfg, positions=None,
+                                cache=cache["self"] if cache else None)
+        h = h + a
+        kv = _cross_kv(lp["xattn"], enc_states, cfg) if caches is None else \
+            (cache["xk"], cache["xv"])
+        ca, _ = attention_block(lp["xattn"], rmsnorm(h, lp["ln2"], cfg.norm_eps),
+                                cfg, positions=None, layer_cross_kv=kv)
+        h = h + ca
+        h = h + gelu_mlp(lp["mlp"], rmsnorm(h, lp["ln3"], cfg.norm_eps))
+        if caches is None:
+            return h, None
+        return h, {"self": nc, "xk": cache["xk"], "xv": cache["xv"]}
+
+    if caches is None:
+        if cfg.remat == "block":
+            body = jax.checkpoint(body)
+        x, _ = lax.scan(body, x, params["dec_layers"], unroll=cfg.unroll_scans)
+        new_caches = None
+    else:
+        x, new_caches = lax.scan(body, x, (params["dec_layers"], caches),
+                                 unroll=cfg.unroll_scans)
+    x = rmsnorm(x, params["final_ln"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,vd->bsv", x, params["embed"].astype(cdt))
+    return logits, new_caches
+
+
+def loss_fn(params, batch, cfg: ModelConfig):
+    """batch: {frames (B,F,d), tokens (B,S), labels (B,S)}."""
+    enc = encode(params, batch["frames"], cfg)
+    logits, _ = decode_forward(params, batch["tokens"], enc, cfg)
+    labels = batch["labels"]
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    return jnp.sum((logz - gold) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def init_cache_specs(cfg: ModelConfig, batch: int, max_seq: int):
+    cdt = _dt(cfg)
+    hkv, hd = cfg.n_kv_heads, cfg.hd
+    L, F = cfg.n_layers, cfg.enc_frames
+    return {
+        "self": {"k": jax.ShapeDtypeStruct((L, batch, max_seq, hkv, hd), cdt),
+                 "v": jax.ShapeDtypeStruct((L, batch, max_seq, hkv, hd), cdt),
+                 "index": jax.ShapeDtypeStruct((L,), jnp.int32)},
+        "xk": jax.ShapeDtypeStruct((L, batch, F, hkv, hd), cdt),
+        "xv": jax.ShapeDtypeStruct((L, batch, F, hkv, hd), cdt),
+    }
+
+
+def prefill(params, frames, tokens, cfg: ModelConfig, max_seq: int):
+    """Encode + build caches + teacher-force the prompt tokens."""
+    b, s = tokens.shape
+    enc = encode(params, frames, cfg)
+    specs = init_cache_specs(cfg, b, max_seq)
+    caches = jax.tree.map(lambda sp: jnp.zeros(sp.shape, sp.dtype), specs)
+    xk, xv = _stacked_cross_kv(params, enc, cfg)   # cross KV once per layer
+    caches = {"self": caches["self"], "xk": xk, "xv": xv}
+    logits, caches = decode_forward(params, tokens, enc, cfg, caches=caches,
+                                    q_offset=0)
+    return logits[:, -1], caches
+
+
+def _stacked_cross_kv(params, enc, cfg):
+    def one(lp):
+        return _cross_kv(lp, enc, cfg)
+    return jax.lax.map(one, params["dec_layers"]["xattn"])
+
+
+def decode_step(params, token, caches, cfg: ModelConfig):
+    idx = caches["self"]["index"][0]
+    logits, new_caches = decode_forward(params, token, None, cfg,
+                                        caches=caches, q_offset=idx)
+    return logits[:, -1], new_caches

@@ -1,0 +1,2 @@
+from . import adamw, compression
+from .adamw import OptConfig

@@ -1,0 +1,2 @@
+from . import ft
+from .ft import FTConfig, TrainDriver, run_with_overflow_retry

@@ -1,0 +1,141 @@
+"""Fault-tolerance runtime: preemption-safe training driver, straggler stats,
+capacity-overflow retry for the data-frame layer.
+
+On a real pod this process runs per host; here the same control flow runs
+single-process.  The three mechanisms the paper's deployment story needs:
+
+1. Checkpoint/restart (HPAT provides this for iterative ML; §2.5): periodic
+   async checkpoints + SIGTERM/SIGINT handler that writes a final checkpoint
+   before exit (preemption-safe on spot/maintenance events).
+2. Straggler detection: per-step wall-time EMA; steps slower than
+   ``straggler_factor``x the EMA are counted and surfaced — the hook where a
+   cluster controller would trigger hot-spare swap / re-layout.
+3. Shuffle-capacity overflow retry: the static-capacity Alltoallv carrier
+   (DESIGN.md §2) flags overflow instead of corrupting; the driver re-plans
+   with doubled slack and re-executes — turning a hard distributed failure
+   mode into a bounded retry.
+"""
+from __future__ import annotations
+
+import dataclasses
+import signal
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import numpy as np
+
+from ..checkpoint import AsyncSaver, latest_step, restore
+
+
+@dataclass
+class FTConfig:
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    ckpt_every: int = 50
+    keep: int = 3
+    straggler_factor: float = 3.0
+    max_retries: int = 3
+
+
+@dataclass
+class StepStats:
+    times: list = field(default_factory=list)
+    ema: float = 0.0
+    stragglers: int = 0
+
+    def record(self, dt: float, factor: float) -> bool:
+        self.times.append(dt)
+        straggler = self.ema > 0 and dt > factor * self.ema
+        self.ema = dt if self.ema == 0 else 0.9 * self.ema + 0.1 * dt
+        self.stragglers += int(straggler)
+        return straggler
+
+
+class TrainDriver:
+    """Preemption-safe step loop around a compiled train_step."""
+
+    def __init__(self, cfg: FTConfig, state, step_fn: Callable,
+                 shardings=None, metadata: dict | None = None):
+        self.cfg = cfg
+        self.state = state
+        self.step_fn = step_fn
+        self.shardings = shardings
+        self.metadata = metadata or {}
+        self.saver = AsyncSaver(cfg.ckpt_dir, keep=cfg.keep)
+        self.stats = StepStats()
+        self.step = 0
+        self._preempted = False
+        self._old_handlers = {}
+
+    # -- preemption ---------------------------------------------------------
+    def _handler(self, signum, frame):
+        self._preempted = True
+
+    def install_signal_handlers(self):
+        for sig in (signal.SIGTERM, signal.SIGINT):
+            self._old_handlers[sig] = signal.signal(sig, self._handler)
+
+    def restore_signal_handlers(self):
+        for sig, h in self._old_handlers.items():
+            signal.signal(sig, h)
+
+    # -- resume ---------------------------------------------------------------
+    def maybe_resume(self):
+        last = latest_step(self.cfg.ckpt_dir)
+        if last is not None:
+            self.state, self.step, meta = restore(
+                self.cfg.ckpt_dir, self.state, shardings=self.shardings)
+            return True
+        return False
+
+    # -- main loop -------------------------------------------------------------
+    def run(self, batches, num_steps: int, log_every: int = 10,
+            log_fn=print) -> dict:
+        self.install_signal_handlers()
+        losses = []
+        try:
+            for batch in batches:
+                if self.step >= num_steps or self._preempted:
+                    break
+                t0 = time.perf_counter()
+                self.state, loss = self.step_fn(self.state, batch)
+                loss = float(loss)
+                dt = time.perf_counter() - t0
+                straggler = self.stats.record(dt, self.cfg.straggler_factor)
+                self.step += 1
+                losses.append(loss)
+                if straggler:
+                    log_fn(f"[ft] straggler step {self.step}: {dt:.3f}s "
+                           f"(ema {self.stats.ema:.3f}s)")
+                if self.step % log_every == 0:
+                    log_fn(f"step {self.step} loss {loss:.4f} {dt*1e3:.1f}ms")
+                if self.step % self.cfg.ckpt_every == 0:
+                    self.saver.save(self.step, self.state, self.metadata)
+            if self._preempted:
+                log_fn(f"[ft] preemption signal — checkpointing at step {self.step}")
+            self.saver.save(self.step, self.state, self.metadata)
+            self.saver.wait()
+        finally:
+            self.restore_signal_handlers()
+        return {"steps": self.step, "losses": losses,
+                "stragglers": self.stats.stragglers,
+                "mean_step_s": float(np.mean(self.stats.times)) if self.stats.times else 0.0}
+
+
+def run_with_overflow_retry(build_and_run: Callable[[float], Any],
+                            base_slack: float = 2.0, max_retries: int = 3):
+    """Retry hook for 1D_VAR capacity overflow (DESIGN.md §2).
+
+    ``build_and_run(slack)`` must return a DTable; if its overflow flag is
+    set, the plan is rebuilt with doubled slack.  Raises after max_retries.
+    """
+    slack = base_slack
+    for attempt in range(max_retries + 1):
+        table = build_and_run(slack)
+        if not getattr(table, "overflow", False):
+            return table, attempt
+        slack *= 2.0
+    raise RuntimeError(
+        f"shuffle capacity overflow persisted after {max_retries} retries "
+        f"(final slack {slack/2}) — data skew exceeds plan bounds (cf. paper "
+        f"Q05 skew discussion)")

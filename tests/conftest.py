@@ -1,0 +1,18 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — smoke tests and benches must
+see 1 device; multi-device tests spawn subprocesses (tests/test_distributed.py).
+"""
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def make_table(rng, n, n_keys=37):
+    return {
+        "id": rng.integers(0, n_keys, n).astype(np.int32),
+        "x": rng.normal(size=n).astype(np.float32),
+        "y": rng.normal(size=n).astype(np.float32),
+    }

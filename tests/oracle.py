@@ -1,0 +1,81 @@
+"""NumPy oracles for the relational operators (pandas-free reference)."""
+from __future__ import annotations
+
+import numpy as np
+
+
+def o_filter(cols: dict, mask: np.ndarray) -> dict:
+    return {k: v[mask] for k, v in cols.items()}
+
+
+def o_join(left: dict, right: dict, lkey: str, rkey: str, suffix="_r") -> dict:
+    """Inner equi-join preserving all matches (order-insensitive compare)."""
+    li, ri = [], []
+    rpos: dict = {}
+    for j, k in enumerate(right[rkey]):
+        rpos.setdefault(int(k), []).append(j)
+    for i, k in enumerate(left[lkey]):
+        for j in rpos.get(int(k), ()):
+            li.append(i)
+            ri.append(j)
+    li, ri = np.array(li, np.int64), np.array(ri, np.int64)
+    out = {k: v[li] for k, v in left.items()}
+    for k, v in right.items():
+        if k == rkey:
+            continue
+        name = k + suffix if k in left else k
+        out[name] = v[ri]
+    return out
+
+
+def o_aggregate(cols: dict, key: str, aggs: dict[str, tuple]) -> dict:
+    """aggs: name -> (fn, value_array_or_None)."""
+    keys = cols[key]
+    uids = np.unique(keys)
+    out = {key: uids}
+    for name, (fn, vals) in aggs.items():
+        res = []
+        for u in uids:
+            m = keys == u
+            if fn == "sum":
+                res.append(np.sum(vals[m]))
+            elif fn == "mean":
+                res.append(np.mean(vals[m]))
+            elif fn == "count":
+                res.append(np.sum(m))
+            elif fn == "min":
+                res.append(np.min(vals[m]))
+            elif fn == "max":
+                res.append(np.max(vals[m]))
+            elif fn == "var":
+                res.append(np.var(vals[m]))
+            elif fn == "std":
+                res.append(np.std(vals[m]))
+            elif fn == "nunique":
+                res.append(len(np.unique(vals[m])))
+            else:
+                raise ValueError(fn)
+        out[name] = np.array(res)
+    return out
+
+
+def o_cumsum(x: np.ndarray) -> np.ndarray:
+    return np.cumsum(x)
+
+
+def o_stencil(x: np.ndarray, weights, center: int) -> np.ndarray:
+    """Zero-padded 1-D stencil matching HiFrames' border convention."""
+    k_left = center
+    k_right = len(weights) - 1 - center
+    ext = np.concatenate([np.zeros(k_left, np.float32),
+                          x.astype(np.float32),
+                          np.zeros(k_right, np.float32)])
+    out = np.zeros(len(x), np.float32)
+    for j, w in enumerate(weights):
+        out += np.float32(w) * ext[j:j + len(x)]
+    return out
+
+
+def sorted_cols(cols: dict, by: tuple[str, ...]) -> dict:
+    order = np.lexsort(tuple(cols[k] for k in reversed(by)))
+    return {k: v[order] for k, v in cols.items()}

@@ -1,0 +1,86 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs ref.py oracles."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.hash_partition import ops as hp_ops, ref as hp_ref
+from repro.kernels.segment_reduce import ops as sr_ops, ref as sr_ref
+from repro.kernels.stencil1d import ops as st_ops, ref as st_ref
+from repro.kernels.stream_compact import ops as sc_ops, ref as sc_ref
+
+RNG = np.random.default_rng(11)
+
+
+@pytest.mark.parametrize("n", [1, 7, 100, 2048, 5000])
+@pytest.mark.parametrize("K", [1, 3, 5, 7])
+def test_stencil_shapes(n, K):
+    ext = RNG.normal(size=n + K - 1).astype(np.float32)
+    w = RNG.normal(size=K).tolist()
+    got = np.asarray(st_ops.stencil1d(jnp.asarray(ext), w))
+    ref = np.asarray(st_ref.stencil1d_ref(jnp.asarray(ext), w))
+    np.testing.assert_allclose(got, ref, atol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.int32])
+@pytest.mark.parametrize("n", [1, 100, 2048, 4096, 9999])
+def test_prefix_sum_shapes(n, dtype):
+    if dtype == np.int32:
+        x = RNG.integers(-5, 5, n).astype(dtype)
+    else:
+        x = RNG.normal(size=n).astype(dtype)
+    got = np.asarray(sc_ops.prefix_sum(jnp.asarray(x)))
+    ref = np.cumsum(x).astype(dtype)
+    if dtype == np.int32:
+        np.testing.assert_array_equal(got, ref)
+    else:
+        np.testing.assert_allclose(got, ref, atol=1e-3)
+
+
+@pytest.mark.parametrize("n,cap", [(100, 60), (100, 200), (2048, 1024)])
+def test_compact(n, cap):
+    vals = RNG.normal(size=n).astype(np.float32)
+    keep = RNG.random(n) < 0.5
+    got, cnt = sc_ops.compact(jnp.asarray(vals), jnp.asarray(keep), cap)
+    ref, rcnt = sc_ref.compact_ref(jnp.asarray(vals), jnp.asarray(keep), cap)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+    assert int(cnt) == int(rcnt)
+
+
+@pytest.mark.parametrize("n,nseg", [(50, 5), (2000, 37), (4096, 200), (5000, 1)])
+def test_segment_sums(n, nseg):
+    rng = np.random.default_rng(n * 31 + nseg)   # deterministic per-case
+    seg = np.sort(rng.integers(0, nseg, n)).astype(np.int32)
+    vals = rng.normal(size=n).astype(np.float32)
+    valid = np.arange(n) < (n - n // 10)
+    # contract: seg ids are consecutive 0..k-1 over the VALID prefix (this is
+    # how the aggregate lowering constructs them); invalid rows repeat the
+    # last valid id so the array stays sorted.
+    _, seg = np.unique(seg[valid], return_inverse=True)
+    k = int(seg.max()) + 1 if len(seg) else 1
+    seg2 = np.concatenate([seg, np.full(n - valid.sum(), seg[-1] if len(seg)
+                                        else 0)]).astype(np.int32)
+    got = np.asarray(sr_ops.segment_sums(jnp.asarray(vals), jnp.asarray(seg2),
+                                         jnp.asarray(valid), k))
+    ref = np.asarray(sr_ref.segment_sums_ref(jnp.asarray(vals), jnp.asarray(seg2),
+                                             jnp.asarray(valid), k))
+    np.testing.assert_allclose(got, ref, atol=2e-3)
+
+
+@pytest.mark.parametrize("P", [2, 8, 64, 256])
+@pytest.mark.parametrize("n", [10, 1000, 3000])
+def test_bucket_ranks(P, n):
+    d = RNG.integers(0, P + 1, n).astype(np.int32)   # P marks invalid
+    r1, c1 = hp_ops.bucket_ranks(jnp.asarray(d), P)
+    r2, c2 = hp_ref.bucket_ranks_ref(jnp.asarray(d), P)
+    m = d < P
+    np.testing.assert_array_equal(np.asarray(r1)[m], np.asarray(r2)[m])
+    np.testing.assert_array_equal(np.asarray(c1), np.asarray(c2))
+
+
+def test_bucket_ranks_are_stable_slots():
+    """ranks must be a stable enumeration within each bucket."""
+    d = np.array([1, 0, 1, 1, 0, 2, 1], np.int32)
+    r, c = hp_ops.bucket_ranks(jnp.asarray(d), 3)
+    r = np.asarray(r)
+    np.testing.assert_array_equal(r, [0, 0, 1, 2, 1, 0, 3])
+    np.testing.assert_array_equal(np.asarray(c), [2, 4, 1])

@@ -1,0 +1,114 @@
+"""Launch-layer tests at CI scale: lower+compile reduced cells on a small
+fake mesh (subprocess; 16 host devices, (4,4) data x model) — the same code
+path the 512-chip dry-run uses, so sharding-spec regressions fail fast here.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run16(body: str):
+    script = textwrap.dedent(f"""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=16"
+        import numpy as np
+        import jax
+        from jax.sharding import Mesh
+        mesh = Mesh(np.array(jax.devices()).reshape(4, 4), ("data", "model"))
+        {textwrap.indent(textwrap.dedent(body), '        ').strip()}
+        print("SUBPROC_OK")
+    """)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env.pop("XLA_FLAGS", None)
+    res = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert res.returncode == 0, f"stderr:\n{res.stderr[-4000:]}"
+    assert "SUBPROC_OK" in res.stdout
+
+
+CELL_BODY = """
+from repro import configs
+from repro.configs import ShapeSpec
+from repro.launch import steps as S
+from repro.models import sharding as shmod
+from repro.optim import OptConfig
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+cfg = configs.get_reduced("{arch}")
+shape = ShapeSpec("t", "{kind}", {seq}, {batch})
+ocfg = OptConfig()
+cell = S.cell_shardings(cfg, shape, mesh, ocfg)
+rep = NamedSharding(mesh, P())
+if shape.kind == "train":
+    fn = S.make_train_step(cfg, ocfg, n_micro=2)
+    state_specs = {{"params": cell["param_specs"], "opt": cell["opt_specs"]}}
+    state_sh = {{"params": cell["params"], "opt": cell["opt_sh"]}}
+    lowered = jax.jit(fn, in_shardings=(state_sh, cell["input_sh"]),
+                      out_shardings=(state_sh, rep)).lower(
+        state_specs, cell["inputs"])
+elif shape.kind == "prefill":
+    fn = S.make_prefill_step(cfg, shape.seq)
+    csh = shmod.cache_shardings(mesh, S.cache_specs(cfg, shape))
+    lsh = NamedSharding(mesh, shmod.fit_spec(
+        mesh, (shape.batch, cfg.vocab), (shmod.dp_axes(mesh), "model")))
+    lowered = jax.jit(fn, in_shardings=(cell["params"], cell["input_sh"]),
+                      out_shardings=(lsh, csh)).lower(
+        cell["param_specs"], cell["inputs"])
+else:
+    fn = S.make_decode_step(cfg)
+    csh = cell["cache_sh"]
+    lsh = NamedSharding(mesh, shmod.fit_spec(
+        mesh, (shape.batch, cfg.vocab), (shmod.dp_axes(mesh), "model")))
+    lowered = jax.jit(fn, in_shardings=(cell["params"],
+                                        cell["input_sh"]["token"], csh),
+                      out_shardings=(lsh, csh)).lower(
+        cell["param_specs"], cell["inputs"]["token"], cell["cache_specs"])
+compiled = lowered.compile()
+assert compiled.cost_analysis() is not None
+assert "SUBPROC" not in ""  # noqa
+"""
+
+
+@pytest.mark.parametrize("arch,kind,seq,batch", [
+    ("qwen3-0.6b", "train", 64, 8),
+    ("qwen2-vl-2b", "train", 64, 8),
+    ("deepseek-moe-16b", "train", 64, 8),
+    ("zamba2-7b", "train", 64, 8),
+    ("falcon-mamba-7b", "train", 64, 8),
+    ("whisper-base", "train", 64, 8),
+    ("qwen3-0.6b", "prefill", 128, 8),
+    ("qwen3-0.6b", "decode", 128, 8),
+    ("falcon-mamba-7b", "decode", 128, 8),
+    ("zamba2-7b", "decode", 128, 8),
+])
+def test_cell_lowers_on_small_mesh(arch, kind, seq, batch):
+    run16(CELL_BODY.format(arch=arch, kind=kind, seq=seq, batch=batch))
+
+
+def test_moe_ep_impl_lowers():
+    run16("""
+        from repro import configs
+        from repro.configs import ShapeSpec
+        from repro.launch import steps as S
+        from repro.models import moe as moe_mod
+        from repro.optim import OptConfig
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        moe_mod.set_ep_mesh(mesh)
+        cfg = configs.get_reduced("deepseek-moe-16b").replace(moe_impl="ep")
+        shape = ShapeSpec("t", "train", 64, 8)
+        ocfg = OptConfig()
+        cell = S.cell_shardings(cfg, shape, mesh, ocfg)
+        fn = S.make_train_step(cfg, ocfg)
+        state_specs = {"params": cell["param_specs"], "opt": cell["opt_specs"]}
+        state_sh = {"params": cell["params"], "opt": cell["opt_sh"]}
+        lowered = jax.jit(fn, in_shardings=(state_sh, cell["input_sh"]),
+                          out_shardings=(state_sh, NamedSharding(mesh, P()))
+                          ).lower(state_specs, cell["inputs"])
+        lowered.compile()
+    """)

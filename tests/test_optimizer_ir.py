@@ -1,0 +1,189 @@
+"""Plan-level tests: predicate pushdown, column pruning, distribution lattice."""
+import numpy as np
+import pytest
+
+from repro import hiframes as hf
+from repro.core import distribution as D
+from repro.core import ir, optimizer
+
+
+def _frames():
+    n = 100
+    left = hf.table({"id": np.arange(n, dtype=np.int32),
+                     "phone": np.arange(n, dtype=np.int32)}, "customer")
+    right = hf.table({"customerId": np.arange(n, dtype=np.int32),
+                      "amount": np.random.default_rng(0).normal(size=n)
+                      .astype(np.float32)}, "order")
+    return left, right
+
+
+def test_push_predicate_through_join_right():
+    """The paper's Fig. 6 example: filter on right-side column moves below."""
+    customer, order = _frames()
+    j = hf.join(customer, order, on=("id", "customerId"))
+    f = j[j["amount"] > 100.0]
+    new_root, n = optimizer.push_predicates(f.node)
+    assert n == 1
+    assert isinstance(new_root, ir.Join)
+    assert isinstance(new_root.right, ir.Filter)
+    # renamed back to the right table's own column name
+    assert "amount" in {c for (_t, c) in new_root.right.pred.columns()}
+
+
+def test_push_predicate_left_side():
+    customer, order = _frames()
+    j = hf.join(customer, order, on=("id", "customerId"))
+    f = j[j["phone"] < 50]
+    new_root, n = optimizer.push_predicates(f.node)
+    assert n == 1
+    assert isinstance(new_root.left, ir.Filter)
+
+
+def test_push_predicate_key_column():
+    customer, order = _frames()
+    j = hf.join(customer, order, on=("id", "customerId"))
+    f = j[j["id"] < 10]
+    new_root, n = optimizer.push_predicates(f.node)
+    assert n == 1  # key predicates push to (at least) one side
+
+
+def test_no_push_mixed_predicate():
+    customer, order = _frames()
+    j = hf.join(customer, order, on=("id", "customerId"))
+    f = j[(j["phone"] < 50) & (j["amount"] > 0.0)]
+    new_root, n = optimizer.push_predicates(f.node)
+    assert n == 0
+    assert isinstance(new_root, ir.Filter)
+
+
+def test_filter_fusion():
+    df = hf.table({"a": np.arange(10, dtype=np.int32)})
+    f = df[df["a"] > 2][df["a"] < 8]
+    new_root, n = optimizer.push_predicates(f.node)
+    assert n >= 1
+    assert isinstance(new_root, ir.Filter)
+    assert isinstance(new_root.child, ir.Scan)
+
+
+def test_push_through_concat():
+    df1 = hf.table({"a": np.arange(10, dtype=np.int32)}, "t1")
+    df2 = hf.table({"a": np.arange(10, dtype=np.int32)}, "t2")
+    c = hf.concat(df1, df2)
+    f = c[c["a"] > 5]
+    new_root, n = optimizer.push_predicates(f.node)
+    assert n == 1
+    assert isinstance(new_root, ir.Concat)
+    assert all(isinstance(p, ir.Filter) for p in new_root.parts)
+
+
+def test_column_pruning_scan():
+    df = hf.table({"a": np.arange(10, dtype=np.int32),
+                   "b": np.arange(10, dtype=np.int32),
+                   "c": np.arange(10, dtype=np.int32)})
+    f = df[df["a"] > 2]
+    pruned, n = optimizer.prune_columns(f.node, keep={"a"})
+    assert n == 2            # b and c removed from the Scan
+    scans = [x for x in ir.topo_order(pruned) if isinstance(x, ir.Scan)]
+    assert list(scans[0].columns) == ["a"]
+
+
+def test_pruning_keeps_join_keys():
+    l, r = _frames()
+    j = hf.join(l, r, on=("id", "customerId"))
+    pruned, _ = optimizer.prune_columns(j.node, keep={"amount"})
+    scans = {s.name: s for s in ir.topo_order(pruned) if isinstance(s, ir.Scan)}
+    assert "id" in scans["customer"].columns
+    assert "customerId" in scans["order"].columns
+
+
+def test_pushdown_correctness_end_to_end():
+    """Optimized and unoptimized plans must produce identical tables."""
+    rng = np.random.default_rng(3)
+    n = 500
+    left = {"id": rng.integers(0, 50, n).astype(np.int32),
+            "p": rng.normal(size=n).astype(np.float32)}
+    right = {"cid": rng.integers(0, 50, 80).astype(np.int32),
+             "amount": rng.normal(size=80).astype(np.float32)}
+    j = hf.join(hf.table(left, "l"), hf.table(right, "r"), on=("id", "cid"))
+    f = j[j["amount"] > 0.0]
+    opt = f.collect(hf.ExecConfig(optimize_plan=True)).to_numpy()
+    raw = f.collect(hf.ExecConfig(optimize_plan=False)).to_numpy()
+    ko = np.lexsort((opt["p"], opt["amount"], opt["id"]))
+    kr = np.lexsort((raw["p"], raw["amount"], raw["id"]))
+    for k in opt:
+        np.testing.assert_allclose(opt[k][ko], raw[k][kr], rtol=1e-6)
+
+
+# -- distribution lattice -----------------------------------------------------
+
+
+LATTICE = [D.ONE_D, D.ONE_D_VAR, D.TWO_D, D.REP]
+
+
+def test_meet_lattice_laws():
+    for a in LATTICE:
+        assert D.meet(a, a) == a                       # idempotent
+        for b in LATTICE:
+            assert D.meet(a, b) == D.meet(b, a)        # commutative
+            for c in LATTICE:
+                assert D.meet(D.meet(a, b), c) == D.meet(a, D.meet(b, c))
+
+
+def test_meet_paper_figure7():
+    assert D.meet(D.ONE_D, D.ONE_D_VAR) == D.ONE_D_VAR
+    assert D.meet(D.ONE_D, D.TWO_D) == D.REP
+    assert D.meet(D.ONE_D_VAR, D.TWO_D) == D.REP
+    assert D.meet(D.ONE_D, D.REP) == D.REP
+
+
+def test_inference_filter_is_var():
+    df = hf.table({"a": np.arange(10, dtype=np.int32)})
+    f = df[df["a"] > 2]
+    info = D.infer(f.node)
+    assert info.dists[f.node.id] == D.ONE_D_VAR
+
+
+def test_inference_rep_poisons_paper_rule():
+    """Paper §4.4: REP input sequentializes the aggregate (broadcast off)."""
+    df = hf.table({"a": np.arange(10, dtype=np.int32)})
+    info = D.infer(ir.Aggregate(df.node, "a", {}), force_rep={df.node.id},
+                   broadcast_join=False)
+    agg = [n for n in [ir.Aggregate(df.node, "a", {})]]
+    # re-infer on a fresh tree rooted at an aggregate
+    root = ir.Aggregate(df.node, "a", {})
+    info = D.infer(root, force_rep={df.node.id}, broadcast_join=False)
+    assert info.dists[root.id] == D.REP
+
+
+def test_rebalance_inserted_only_when_needed():
+    """1D_VAR -> stencil requires a Rebalance; 1D_BLOCK -> stencil does not."""
+    df = hf.table({"a": np.arange(100, dtype=np.int32)})
+    plain = hf.sma(df, df["a"], 3)
+    info = D.infer(plain.node)
+    root = D.insert_rebalance(plain.node, info)
+    assert not any(isinstance(n, ir.Rebalance) for n in ir.topo_order(root))
+
+    filtered = hf.sma(df[df["a"] > 5], df["a"], 3)
+    info = D.infer(filtered.node)
+    root = D.insert_rebalance(filtered.node, info)
+    rb = [n for n in ir.topo_order(root) if isinstance(n, ir.Rebalance)]
+    assert len(rb) == 1
+    assert isinstance(root, ir.Window)
+    assert isinstance(root.child, ir.Rebalance)
+
+
+def test_cumsum_accepts_1d_var_no_rebalance():
+    df = hf.table({"a": np.arange(100, dtype=np.int32)})
+    c = hf.cumsum(df[df["a"] > 5], df["a"])
+    info = D.infer(c.node)
+    root = D.insert_rebalance(c.node, info)
+    assert not any(isinstance(n, ir.Rebalance) for n in ir.topo_order(root))
+
+
+def test_broadcast_join_keeps_distribution():
+    l, r = _frames()
+    j = hf.join(l, r.replicate(), on=("id", "customerId"))
+    info = D.infer(j.node, force_rep=j._force_rep(), broadcast_join=True)
+    assert info.dists[j.node.id] == D.ONE_D_VAR
+    info2 = D.infer(j.node, force_rep=j._force_rep(), broadcast_join=False)
+    assert info2.dists[j.node.id] == D.REP

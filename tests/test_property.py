@@ -1,0 +1,117 @@
+"""Property-based tests (hypothesis) over the system's invariants."""
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+from repro import hiframes as hf
+from repro.core import distribution as D
+from oracle import o_aggregate, o_filter, o_join, sorted_cols
+
+COMMON = dict(deadline=None, max_examples=20,
+              suppress_health_check=[HealthCheck.too_slow])
+
+
+@st.composite
+def tables(draw, max_rows=200, max_keys=12):
+    n = draw(st.integers(1, max_rows))
+    seed = draw(st.integers(0, 2**31 - 1))
+    nk = draw(st.integers(1, max_keys))
+    rng = np.random.default_rng(seed)
+    return {
+        "id": rng.integers(0, nk, n).astype(np.int32),
+        "x": rng.normal(size=n).astype(np.float32),
+    }
+
+
+@given(t=tables(), thr=st.floats(-2, 2))
+@settings(**COMMON)
+def test_filter_matches_oracle(t, thr):
+    df = hf.table(t)
+    out = df[df["x"] < np.float32(thr)].collect().to_numpy()
+    ref = o_filter(t, t["x"] < np.float32(thr))
+    np.testing.assert_array_equal(out["id"], ref["id"])
+    np.testing.assert_allclose(out["x"], ref["x"])
+
+
+@given(t=tables())
+@settings(**COMMON)
+def test_aggregate_matches_oracle(t):
+    df = hf.table(t)
+    out = hf.aggregate(df, "id", s=hf.sum_(df["x"]), c=hf.count()) \
+        .collect().to_numpy()
+    ref = o_aggregate(t, "id", {"s": ("sum", t["x"]), "c": ("count", None)})
+    o = np.argsort(out["id"])
+    np.testing.assert_array_equal(out["id"][o], ref["id"])
+    np.testing.assert_allclose(out["s"][o], ref["s"], atol=1e-3)
+    np.testing.assert_array_equal(out["c"][o], ref["c"])
+
+
+@given(l=tables(max_rows=80), r=tables(max_rows=40))
+@settings(**COMMON)
+def test_join_matches_oracle(l, r):
+    r = {"cid": r["id"], "w": r["x"]}
+    out = hf.join(hf.table(l), hf.table(r, "r"), on=("id", "cid")) \
+        .collect().to_numpy()
+    ref = o_join(l, r, "id", "cid")
+    assert len(out["id"]) == len(ref["id"])
+    if len(ref["id"]):
+        a = sorted_cols(out, ("id", "x", "w"))
+        b = sorted_cols(ref, ("id", "x", "w"))
+        for k in b:
+            np.testing.assert_allclose(a[k], b[k], rtol=1e-6)
+
+
+@given(t=tables())
+@settings(**COMMON)
+def test_cumsum_matches_oracle(t):
+    df = hf.table(t)
+    out = hf.cumsum(df, df["x"], out="c").collect().to_numpy()
+    np.testing.assert_allclose(out["c"], np.cumsum(t["x"]),
+                               atol=1e-3 * max(len(t["x"]), 1))
+
+
+@given(t=tables(max_rows=100))
+@settings(**COMMON)
+def test_sort_is_permutation_and_sorted(t):
+    out = hf.table(t).sort("x").collect().to_numpy()
+    assert np.all(np.diff(out["x"]) >= 0)
+    np.testing.assert_allclose(np.sort(out["x"]), np.sort(t["x"]))
+
+
+@given(t=tables(max_rows=60), seed=st.integers(0, 1000))
+@settings(**COMMON)
+def test_optimizer_never_changes_results(t, seed):
+    """Invariant: plan rewrites preserve semantics on join+filter pipelines."""
+    rng = np.random.default_rng(seed)
+    dim = {"cid": np.arange(12, dtype=np.int32),
+           "w": rng.normal(size=12).astype(np.float32)}
+    j = hf.join(hf.table(t), hf.table(dim, "d"), on=("id", "cid"))
+    f = j[j["w"] > 0.0]
+    a = f.collect(hf.ExecConfig(optimize_plan=True)).to_numpy()
+    b = f.collect(hf.ExecConfig(optimize_plan=False)).to_numpy()
+    assert len(a["id"]) == len(b["id"])
+    if len(a["id"]):
+        sa = sorted_cols(a, ("id", "x", "w"))
+        sb = sorted_cols(b, ("id", "x", "w"))
+        for k in sa:
+            np.testing.assert_allclose(sa[k], sb[k], rtol=1e-6)
+
+
+@given(st.lists(st.sampled_from([D.ONE_D, D.ONE_D_VAR, D.TWO_D, D.REP]),
+                min_size=1, max_size=6))
+@settings(deadline=None, max_examples=50)
+def test_meet_chain_is_order_independent(chain):
+    import functools, itertools
+    ref = functools.reduce(D.meet, chain)
+    for perm in itertools.islice(itertools.permutations(chain), 24):
+        assert functools.reduce(D.meet, perm) == ref
+
+
+@given(t=tables(max_rows=100))
+@settings(**COMMON)
+def test_counts_conserved_by_shuffle_ops(t):
+    """Row conservation: aggregate counts sum to input rows."""
+    df = hf.table(t)
+    out = hf.aggregate(df, "id", c=hf.count()).collect().to_numpy()
+    assert out["c"].sum() == len(t["id"])

@@ -1,0 +1,173 @@
+"""Single-device correctness of the relational operators vs NumPy oracles."""
+import numpy as np
+import pytest
+
+from repro import hiframes as hf
+from oracle import o_aggregate, o_cumsum, o_filter, o_join, o_stencil, sorted_cols
+
+
+@pytest.fixture(scope="module")
+def data():
+    rng = np.random.default_rng(7)
+    n = 2000
+    return {
+        "id": rng.integers(0, 41, n).astype(np.int32),
+        "x": rng.normal(size=n).astype(np.float32),
+        "y": rng.normal(size=n).astype(np.float32),
+    }
+
+
+def test_filter(data):
+    df = hf.table(data)
+    out = df[(df["x"] < 0.5) & (df["id"] > 3)].collect().to_numpy()
+    ref = o_filter(data, (data["x"] < 0.5) & (data["id"] > 3))
+    for k in ref:
+        np.testing.assert_allclose(out[k], ref[k])
+
+
+def test_filter_no_match(data):
+    df = hf.table(data)
+    out = df[df["x"] > 1e9].collect()
+    assert out.num_rows() == 0
+
+
+def test_projection(data):
+    df = hf.table(data)
+    out = df[["x"]].collect().to_numpy()
+    assert list(out) == ["x"]
+    np.testing.assert_allclose(out["x"], data["x"])
+
+
+def test_with_column(data):
+    df = hf.table(data)
+    out = df.with_column("z", df["x"] * 2.0 + df["y"]).collect().to_numpy()
+    np.testing.assert_allclose(out["z"], data["x"] * 2 + data["y"], rtol=1e-5)
+
+
+def test_join_duplicates(data):
+    rng = np.random.default_rng(8)
+    right = {"cid": rng.integers(0, 41, 100).astype(np.int32),
+             "w": rng.normal(size=100).astype(np.float32)}
+    out = hf.join(hf.table(data), hf.table(right, "r"), on=("id", "cid")) \
+        .collect().to_numpy()
+    ref = o_join(data, right, "id", "cid")
+    assert len(out["id"]) == len(ref["id"])
+    a = sorted_cols(out, ("id", "x", "w"))
+    b = sorted_cols(ref, ("id", "x", "w"))
+    for k in b:
+        np.testing.assert_allclose(a[k], b[k], rtol=1e-6)
+
+
+def test_aggregate_all_fns(data):
+    df = hf.table(data)
+    out = hf.aggregate(df, "id",
+                       s=hf.sum_(df["x"]), m=hf.mean(df["x"]),
+                       c=hf.count(), mn=hf.min_(df["y"]),
+                       mx=hf.max_(df["y"]), v=hf.var(df["x"]),
+                       nu=hf.nunique(df["id"])).collect().to_numpy()
+    ref = o_aggregate(data, "id", {
+        "s": ("sum", data["x"]), "m": ("mean", data["x"]),
+        "c": ("count", None), "mn": ("min", data["y"]),
+        "mx": ("max", data["y"]), "v": ("var", data["x"]),
+        "nu": ("nunique", data["id"])})
+    o = np.argsort(out["id"])
+    for k in out:
+        out[k] = out[k][o]
+    np.testing.assert_array_equal(out["id"], ref["id"])
+    np.testing.assert_allclose(out["s"], ref["s"], atol=1e-3)
+    np.testing.assert_allclose(out["m"], ref["m"], atol=1e-5)
+    np.testing.assert_array_equal(out["c"], ref["c"])
+    np.testing.assert_allclose(out["mn"], ref["mn"])
+    np.testing.assert_allclose(out["mx"], ref["mx"])
+    np.testing.assert_allclose(out["v"], ref["v"], atol=1e-4)
+    np.testing.assert_array_equal(out["nu"], ref["nu"])
+
+
+def test_aggregate_expression_inputs(data):
+    """The paper's sum(:x < 1.0) pattern — expressions inside aggregations."""
+    df = hf.table(data)
+    out = hf.aggregate(df, "id", xc=hf.sum_(df["x"] < 1.0)).collect().to_numpy()
+    o = np.argsort(out["id"])
+    ref = o_aggregate(data, "id", {"xc": ("sum", (data["x"] < 1.0))})
+    np.testing.assert_allclose(out["xc"][o], ref["xc"])
+
+
+def test_concat(data):
+    df = hf.table(data)
+    out = hf.concat(df, df).collect().to_numpy()
+    assert len(out["x"]) == 2 * len(data["x"])
+
+
+def test_sort(data):
+    out = hf.table(data).sort("x").collect().to_numpy()
+    np.testing.assert_allclose(out["x"], np.sort(data["x"]))
+
+
+def test_sort_descending(data):
+    out = hf.table(data).sort("x", ascending=False).collect().to_numpy()
+    np.testing.assert_allclose(out["x"], np.sort(data["x"])[::-1])
+
+
+def test_cumsum(data):
+    df = hf.table(data)
+    out = hf.cumsum(df, df["x"], out="cs").collect().to_numpy()
+    np.testing.assert_allclose(out["cs"], o_cumsum(data["x"]), atol=1e-3)
+
+
+@pytest.mark.parametrize("weights,scale", [([1, 1, 1], 3.0), ([1, 2, 1], 4.0),
+                                           ([1, 2, 3, 2, 1], 9.0)])
+def test_stencil(data, weights, scale):
+    df = hf.table(data)
+    out = hf.stencil(df, df["x"], weights, scale=scale, out="s") \
+        .collect().to_numpy()
+    ref = o_stencil(data["x"], [w / scale for w in weights], len(weights) // 2)
+    np.testing.assert_allclose(out["s"], ref, atol=1e-5)
+
+
+def test_udf_zero_cost_semantics(data):
+    """UDFs behave exactly like built-ins (paper Fig. 10 semantics)."""
+    import jax.numpy as jnp
+    df = hf.table(data)
+    built = df[(df["x"] * 2.0 + 1.0) > 0.0].collect().to_numpy()
+    via_udf = df[hf.udf(lambda x: x * 2.0 + 1.0 > 0.0, df["x"])].collect().to_numpy()
+    np.testing.assert_array_equal(built["id"], via_udf["id"])
+
+
+def test_chained_pipeline(data):
+    """filter -> join -> aggregate -> filter end-to-end (Q26 skeleton)."""
+    rng = np.random.default_rng(9)
+    item = {"cid": np.arange(41, dtype=np.int32),
+            "cls": rng.integers(1, 4, 41).astype(np.int32)}
+    df = hf.table(data)
+    j = hf.join(df, hf.table(item, "item"), on=("id", "cid"))
+    a = hf.aggregate(j, "id", n=hf.count(), c1=hf.sum_(j["cls"] == 1))
+    out = a[a["n"] > 40].collect().to_numpy()
+
+    ref_j = o_join(data, item, "id", "cid")
+    ref_a = o_aggregate(ref_j, "id", {"n": ("count", None),
+                                      "c1": ("sum", ref_j["cls"] == 1)})
+    keep = ref_a["n"] > 40
+    o = np.argsort(out["id"])
+    np.testing.assert_array_equal(out["id"][o], ref_a["id"][keep])
+    np.testing.assert_array_equal(out["c1"][o], ref_a["c1"][keep])
+
+
+def test_kernels_path_matches(data):
+    """use_kernels=True produces identical results."""
+    df = hf.table(data)
+    cfg = hf.ExecConfig(use_kernels=True)
+    a = hf.aggregate(df, "id", s=hf.sum_(df["x"])).collect(cfg).to_numpy()
+    b = hf.aggregate(df, "id", s=hf.sum_(df["x"])).collect().to_numpy()
+    oa, ob = np.argsort(a["id"]), np.argsort(b["id"])
+    np.testing.assert_allclose(a["s"][oa], b["s"][ob], atol=1e-3)
+
+
+def test_overflow_flag():
+    """Join blow-up beyond planned capacity sets the overflow flag."""
+    n = 200
+    ones = {"k": np.zeros(n, np.int32), "v": np.arange(n, dtype=np.float32)}
+    cfg = hf.ExecConfig(safe_capacities=False, shuffle_slack=1.0,
+                        join_expansion=1.0, auto_retry=0)
+    out = hf.join(hf.table(ones, "a"), hf.table(ones, "b"), on=("k", "k")) \
+        .collect(cfg)
+    assert out.overflow  # n^2 rows cannot fit the planned capacity

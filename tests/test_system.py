@@ -1,0 +1,110 @@
+"""End-to-end system behaviour: the paper's flagship program (TPCx-BB Q26-
+style customer segmentation) — relational pipeline -> matrix assembly ->
+K-means — all through the public API, validated against NumPy oracles."""
+import numpy as np
+
+from repro import hiframes as hf
+from repro.data import synth
+from oracle import o_aggregate, o_join
+
+
+def q26_pipeline(min_count=4):
+    ss = synth.store_sales(20_000, n_items=500, n_customers=800, seed=5)
+    it = synth.item(500, seed=6)
+    store_sales = hf.table(ss, "store_sales")
+    item = hf.table(it, "item")
+
+    sale_items = hf.join(store_sales, item, on=("ss_item_sk", "i_item_sk"))
+    c_i = hf.aggregate(
+        sale_items, "ss_customer_sk",
+        c_i_count=hf.count(),
+        id1=hf.sum_(sale_items["i_class_id"] == 1),
+        id2=hf.sum_(sale_items["i_class_id"] == 2),
+        id3=hf.sum_(sale_items["i_class_id"] == 3))
+    c_i = c_i[c_i["c_i_count"] > min_count]
+    return ss, it, c_i
+
+
+def oracle_q26(ss, it, min_count=4):
+    j = o_join(ss, it, "ss_item_sk", "i_item_sk")
+    a = o_aggregate(j, "ss_customer_sk", {
+        "c_i_count": ("count", None),
+        "id1": ("sum", j["i_class_id"] == 1),
+        "id2": ("sum", j["i_class_id"] == 2),
+        "id3": ("sum", j["i_class_id"] == 3)})
+    keep = a["c_i_count"] > min_count
+    return {k: v[keep] for k, v in a.items()}
+
+
+def test_q26_relational_stage():
+    ss, it, c_i = q26_pipeline()
+    out = c_i.collect().to_numpy()
+    ref = oracle_q26(ss, it)
+    o = np.argsort(out["ss_customer_sk"])
+    np.testing.assert_array_equal(out["ss_customer_sk"][o], ref["ss_customer_sk"])
+    for k in ("c_i_count", "id1", "id2", "id3"):
+        np.testing.assert_array_equal(out[k][o], ref[k])
+
+
+def test_q26_matrix_assembly_and_kmeans():
+    """Matrix assembly (transpose_hcat pattern) feeds K-means; 1D_BLOCK is
+    enforced by the distribution pass (rebalance after the 1D_VAR filter)."""
+    import jax.numpy as jnp
+    ss, it, c_i = q26_pipeline()
+    feats = ["c_i_count", "id1", "id2", "id3"]
+    mat, counts, cap = c_i.collect_matrix(feats)
+    n = int(np.sum(np.asarray(counts)))
+    ref = oracle_q26(ss, it)
+    assert n == len(ref["ss_customer_sk"])
+    mat = np.asarray(mat)[:n]  # single-shard prefix
+
+    # K-means (pure jnp, as the paper calls into an ML library)
+    x = jnp.asarray(mat)
+    k = 4
+    cent = x[:k]
+    for _ in range(10):
+        d2 = jnp.sum((x[:, None] - cent[None]) ** 2, axis=-1)
+        a = jnp.argmin(d2, axis=1)
+        cent = jnp.stack([jnp.where((a == i)[:, None], x, 0).sum(0)
+                          / jnp.maximum((a == i).sum(), 1) for i in range(k)])
+    assert np.all(np.isfinite(np.asarray(cent)))
+    # every cluster non-degenerate on this data
+    sizes = np.bincount(np.asarray(a), minlength=k)
+    assert sizes.sum() == n
+
+
+def test_overflow_retry_integration():
+    """Skewed join overflows a tight plan and succeeds after driver retry."""
+    from repro.runtime import run_with_overflow_retry
+    ss = synth.store_sales(5_000, n_items=50, n_customers=100, seed=7, skew=1.2)
+    it = synth.item(50, seed=8)
+
+    def build(slack):
+        cfg = hf.ExecConfig(safe_capacities=False, shuffle_slack=slack,
+                            join_expansion=slack)
+        j = hf.join(hf.table(ss, "ss"), hf.table(it, "it"),
+                    on=("ss_item_sk", "i_item_sk"))
+        return j.collect(cfg)
+
+    table, attempts = run_with_overflow_retry(build, base_slack=1.0,
+                                              max_retries=6)
+    assert not table.overflow
+    assert table.num_rows() == 5_000  # item keys unique -> row-preserving join
+
+
+def test_integration_with_array_code():
+    """Columns flow into arbitrary jax computation and back (dual repr)."""
+    import jax.numpy as jnp
+    rng = np.random.default_rng(0)
+    data = {"id": rng.integers(0, 10, 400).astype(np.int32),
+            "x": rng.normal(size=400).astype(np.float32)}
+    df = hf.table(data)
+    t = df.collect()
+    x = t.column("x")                       # a plain jax array
+    z = jnp.tanh(x) * 2.0                    # arbitrary array computation
+    df2 = hf.table({"id": np.asarray(t.column("id")), "z": np.asarray(z)})
+    out = hf.aggregate(df2, "id", m=hf.mean(df2["z"])).collect().to_numpy()
+    ref = o_aggregate({"id": data["id"], "z": np.tanh(data["x"]) * 2.0},
+                      "id", {"m": ("mean", np.tanh(data["x"]) * 2.0)})
+    o = np.argsort(out["id"])
+    np.testing.assert_allclose(out["m"][o], ref["m"], atol=1e-5)

@@ -1,0 +1,98 @@
+"""Extended relational features: lag/lead window functions and left-outer
+join (the paper's Table 1 lag/lead and its "relaxing inner join is
+straightforward" claim, validated)."""
+import numpy as np
+import pytest
+
+from repro import hiframes as hf
+
+
+@pytest.fixture(scope="module")
+def series():
+    rng = np.random.default_rng(13)
+    return rng.normal(size=777).astype(np.float32)
+
+
+@pytest.mark.parametrize("n", [1, 3, 7])
+def test_lag(series, n):
+    df = hf.table({"x": series})
+    out = hf.lag(df, df["x"], n=n, out="l").collect().to_numpy()
+    ref = np.concatenate([np.zeros(n, np.float32), series[:-n]])
+    np.testing.assert_allclose(out["l"], ref, atol=1e-6)
+
+
+@pytest.mark.parametrize("n", [1, 2, 5])
+def test_lead(series, n):
+    df = hf.table({"x": series})
+    out = hf.lead(df, df["x"], n=n, out="l").collect().to_numpy()
+    ref = np.concatenate([series[n:], np.zeros(n, np.float32)])
+    np.testing.assert_allclose(out["l"], ref, atol=1e-6)
+
+
+def test_lag_lead_expression_input(series):
+    """lag of a derived expression (tight array integration)."""
+    df = hf.table({"x": series})
+    out = hf.lag(df, df["x"] * 2.0, n=1, out="l").collect().to_numpy()
+    ref = np.concatenate([[0.0], series[:-1] * 2.0])
+    np.testing.assert_allclose(out["l"], ref, atol=1e-5)
+
+
+def test_wma_via_lag_lead_equivalence(series):
+    """WMA == (lag + 2x + lead)/4 — the paper's SQL formulation (Table 1)."""
+    df = hf.table({"x": series})
+    wma = hf.wma(df, df["x"], [1, 2, 1], out="w").collect().to_numpy()["w"]
+    lg = hf.lag(df, df["x"], out="l").collect().to_numpy()["l"]
+    ld = hf.lead(df, df["x"], out="l").collect().to_numpy()["l"]
+    ref = (lg + 2 * series + ld) / 4.0
+    np.testing.assert_allclose(wma, ref, atol=1e-5)
+
+
+# -- left join ----------------------------------------------------------------
+
+
+def _tables():
+    rng = np.random.default_rng(14)
+    left = {"id": rng.integers(0, 30, 400).astype(np.int32),
+            "x": rng.normal(size=400).astype(np.float32)}
+    # right covers only even keys -> odd-key left rows are unmatched
+    right = {"cid": np.arange(0, 30, 2, dtype=np.int32),
+             "w": rng.normal(size=15).astype(np.float32)}
+    return left, right
+
+
+def test_left_join_keeps_unmatched():
+    left, right = _tables()
+    out = hf.join(hf.table(left), hf.table(right, "r"), on=("id", "cid"),
+                  how="left").collect().to_numpy()
+    assert len(out["id"]) == len(left["id"])          # row-preserving here
+    matched = out["_matched"].astype(bool)
+    assert np.array_equal(np.sort(out["id"][~matched]),
+                          np.sort(left["id"][left["id"] % 2 == 1]))
+    np.testing.assert_allclose(out["w"][~matched], 0.0)   # zero-filled NULLs
+    # matched rows carry the right value
+    wmap = dict(zip(right["cid"].tolist(), right["w"].tolist()))
+    for i in range(len(out["id"])):
+        if matched[i]:
+            assert out["w"][i] == pytest.approx(wmap[int(out["id"][i])])
+
+
+def test_left_join_duplicates_expand():
+    rng = np.random.default_rng(15)
+    left = {"id": np.array([0, 1, 2], np.int32),
+            "x": np.arange(3, dtype=np.float32)}
+    right = {"cid": np.array([0, 0, 0], np.int32),
+             "w": np.arange(3, dtype=np.float32)}
+    out = hf.join(hf.table(left), hf.table(right, "r"), on=("id", "cid"),
+                  how="left").collect().to_numpy()
+    # id 0 matches 3 rows; ids 1,2 unmatched once each
+    assert len(out["id"]) == 5
+    assert np.sum(out["id"] == 0) == 3
+    assert np.sum(out["_matched"]) == 3
+
+
+def test_inner_join_unchanged_by_how_param():
+    left, right = _tables()
+    a = hf.join(hf.table(left), hf.table(right, "r"), on=("id", "cid")) \
+        .collect().to_numpy()
+    assert "_matched" not in a
+    assert np.all(a["id"] % 2 == 0)

@@ -76,7 +76,39 @@ def bench_aggregate(n):
            f"speedup={us_np/us_hf:.2f}x")
 
 
+def bench_aggregate_multikey(n):
+    """Composite-key group-by: shuffles on the combined hash of two key
+    columns and segment-aggregates over lexicographic runs — tracks the
+    multi-key shuffle path introduced with composite-key support."""
+    rng = np.random.default_rng(3)
+    t = {"k1": rng.integers(0, 64, n).astype(np.int32),
+         "k2": rng.integers(0, 64, n).astype(np.int32),
+         "x": rng.normal(size=n).astype(np.float32)}
+
+    def np_eager():
+        packed = t["k1"].astype(np.int64) * 64 + t["k2"]
+        order = np.argsort(packed, kind="stable")
+        sp = packed[order]
+        sx = t["x"][order]
+        bounds = np.flatnonzero(np.diff(sp)) + 1
+        return np.add.reduceat(sx, np.concatenate([[0], bounds]))
+    us_np = timeit(np_eager)
+
+    df = hf.table(t)
+    plan = hf.aggregate(df, by=("k1", "k2"), s=hf.sum_(df["x"]),
+                        c=hf.count()).lower()
+    us_hf = timeit(plan)
+    report(f"multikey_aggregate_numpy_n{n}", us_np, "")
+    report(f"multikey_aggregate_hiframes_n{n}", us_hf,
+           f"speedup={us_np/us_hf:.2f}x")
+
+
 def run(scale: float = 1.0):
     bench_filter(int(2_000_000 * scale))
     bench_join(int(500_000 * scale), int(50_000 * scale))
     bench_aggregate(int(1_000_000 * scale))
+
+
+def run_multikey(scale: float = 1.0):
+    """Composite-key suite (its own benchmarks/run.py entry, "multikey")."""
+    bench_aggregate_multikey(int(1_000_000 * scale))

@@ -13,8 +13,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--scale", type=float, default=0.25)
     ap.add_argument("--skip", nargs="*", default=[],
-                    choices=["relational", "analytics", "udf", "tpcx",
-                             "scaling", "kernels"])
+                    choices=["relational", "multikey", "analytics", "udf",
+                             "tpcx", "scaling", "kernels"])
     args = ap.parse_args()
 
     from . import (bench_analytics, bench_kernels, bench_relational,
@@ -22,6 +22,7 @@ def main() -> None:
 
     suites = {
         "relational": lambda: bench_relational.run(args.scale),
+        "multikey": lambda: bench_relational.run_multikey(args.scale),
         "analytics": lambda: bench_analytics.run(args.scale),
         "udf": lambda: bench_udf.run(args.scale),
         "tpcx": lambda: bench_tpcx.run(args.scale),

@@ -13,6 +13,18 @@ Mirrors the paper's Table 1 surface:
     a   = hf.stencil(df1, df1["x"], [1, 2, 1], scale=4.0)   # WMA
     out = df4.collect()                            # optimize+distribute+jit+run
 
+Composite (multi-column) keys are supported end-to-end — join, group-by and
+sort accept key tuples, which shuffle on a combined hash, sort
+lexicographically and compare position-wise (TPCx-BB-style query shapes):
+
+    hf.join(l, r, on=[("a", "ca"), ("b", "cb")])   # 2-column equi-join
+    hf.join(l, r, on=["k1", "k2"])                 # same names both sides
+    hf.aggregate(df, by=("k1", "k2"), s=hf.sum_(df["x"]))
+    df.sort(by=("k1", "k2"))
+
+``on=("id", "cid")`` — a 2-tuple of strings — keeps its historical meaning of
+a SINGLE key pair with different names; use a list for composite keys.
+
 Every collected column is a plain jax.Array; any jax array can be attached
 with ``with_column`` or referenced directly inside expressions (the paper's
 "any array in the program" rule).
@@ -85,8 +97,11 @@ class DataFrame:
     def select(self, *names: str) -> "DataFrame":
         return self[list(names)]
 
-    def sort(self, by: str, ascending: bool = True) -> "DataFrame":
-        return DataFrame(ir.Sort(self.node, by, ascending), self._rep_nodes)
+    def sort(self, by, ascending: bool = True) -> "DataFrame":
+        """Global sort; ``by`` is a column name or a tuple/list of names
+        (lexicographic, most-significant first)."""
+        return DataFrame(ir.Sort(self.node, ir.as_keys(by), ascending),
+                         self._rep_nodes)
 
     def replicate(self) -> "DataFrame":
         """Pin this frame to REP (broadcast) — small dimension tables."""
@@ -103,11 +118,14 @@ class DataFrame:
         the 1D_VAR static-capacity fault-tolerance hook, DESIGN.md §2)."""
         import dataclasses as _dc
         cfg = cfg or ExecConfig()
-        for _attempt in range(max(cfg.auto_retry, 0) + 1):
+        # Clamp once up front: a negative auto_retry means "no retries", and
+        # the loop below must still run (and bind ``t``) exactly once.
+        retries = max(cfg.auto_retry, 0)
+        for _attempt in range(retries + 1):
             lowered, _ = lower(self.node, cfg, set(keep) if keep else None,
                                force_rep=self._force_rep(), kernels=kernels)
             t = lowered()
-            if not t.overflow or _attempt == cfg.auto_retry:
+            if not t.overflow or _attempt == retries:
                 return t
             cfg = _dc.replace(cfg,
                               join_expansion=max(cfg.join_expansion, 1.0) * 2,
@@ -163,17 +181,46 @@ def table(columns: dict[str, Any], name: str = "t") -> DataFrame:
     return DataFrame(ir.Scan(name, dict(columns)))
 
 
+def _parse_on(on) -> tuple[tuple[str, ...], tuple[str, ...]]:
+    """Normalize the join key spec to (left_keys, right_keys) tuples.
+
+    Accepted forms:
+      "k"                       one key, same name both sides
+      ("lk", "rk")              one key pair (historical form — a 2-tuple of
+                                strings is a PAIR, not two key columns)
+      ["k1", "k2", ...]         composite key, same names both sides
+      [("a","ca"), "b", ...]    composite key, per-position pair or shared name
+    """
+    if isinstance(on, str):
+        return (on,), (on,)
+    # only a literal 2-TUPLE of strings is the historical pair form; a LIST
+    # of two names (["k1","k2"]) is a composite key on shared names.
+    if isinstance(on, tuple) and len(on) == 2 \
+            and all(isinstance(x, str) for x in on):
+        return (on[0],), (on[1],)
+    lo, ro = [], []
+    for item in on:
+        if isinstance(item, str):
+            lo.append(item)
+            ro.append(item)
+        else:
+            l, r = item
+            lo.append(l)
+            ro.append(r)
+    if not lo:
+        raise ValueError("join requires at least one key column")
+    return tuple(lo), tuple(ro)
+
+
 def join(left: DataFrame, right: DataFrame, on, suffix: str = "_r",
          how: str = "inner") -> DataFrame:
-    """Equi-join; ``on`` is a name or (left_name, right_name).
+    """Equi-join; ``on`` is a name, a (left_name, right_name) pair, or a list
+    of names / pairs for composite (multi-column) keys — see :func:`_parse_on`.
 
     how="left" keeps unmatched left rows (right columns zero-filled; a
     ``_matched`` int column distinguishes real zeros — the static-shape
     stand-in for SQL NULLs, documented in DESIGN.md)."""
-    if isinstance(on, str):
-        lo = ro = on
-    else:
-        lo, ro = on
+    lo, ro = _parse_on(on)
     if how not in ("inner", "left"):
         raise ValueError(how)
     rep = left._rep_nodes | right._rep_nodes
@@ -183,11 +230,13 @@ def join(left: DataFrame, right: DataFrame, on, suffix: str = "_r",
     return DataFrame(node, rep)
 
 
-def aggregate(df: DataFrame, by: str, **aggs: AggExpr) -> DataFrame:
+def aggregate(df: DataFrame, by, **aggs: AggExpr) -> DataFrame:
+    """Group-by aggregation; ``by`` is a column name or a tuple/list of names
+    (composite key — groups are distinct key combinations)."""
     for k, v in aggs.items():
         if not isinstance(v, AggExpr):
             raise TypeError(f"{k} must be an AggExpr (hf.sum/mean/...)")
-    node = ir.Aggregate(df.node, by, dict(aggs))
+    node = ir.Aggregate(df.node, ir.as_keys(by), dict(aggs))
     rep = df._rep_nodes | ({node.id} if df._replicated else set())
     return DataFrame(node, frozenset(rep))
 

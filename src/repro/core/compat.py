@@ -1,0 +1,21 @@
+"""Version compatibility shims for the jax API surface we depend on.
+
+The codebase targets the modern ``jax.shard_map`` entry point (jax >= 0.6);
+older releases (0.4.x) only expose ``jax.experimental.shard_map.shard_map``
+and spell the replication-check flag ``check_rep`` instead of ``check_vma``.
+Everything that builds an SPMD region goes through :func:`shard_map` so the
+rest of the code can use one spelling.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = False):
+    """``jax.shard_map`` on new jax; the experimental fallback on 0.4.x."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=check_vma)

@@ -15,6 +15,11 @@ data-dependent output sizes of relational operations (paper Fig. 7):
 On TPU the *carrier* of 1D_VAR changes (static capacity + per-shard count —
 see DESIGN.md §2) but the lattice, the transfer functions, and the
 rebalance-only-when-needed rule are implemented verbatim.
+
+Composite (multi-column) keys do not change the lattice: Join/Aggregate/Sort
+carry key TUPLES in the IR, but their transfer functions depend only on node
+shape (data-dependent output length => 1D_VAR), never on key arity — the
+physical layer routes on a combined hash so co-location still holds.
 """
 from __future__ import annotations
 

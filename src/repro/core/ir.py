@@ -26,6 +26,20 @@ def fresh_id() -> int:
     return next(_ids)
 
 
+def as_keys(x) -> tuple[str, ...]:
+    """Normalize a key spec (scalar name or sequence of names) to a tuple.
+
+    Composite (multi-column) keys are carried as tuples everywhere in the IR;
+    single-key call sites stay source-compatible via this normalization.
+    """
+    if isinstance(x, str):
+        return (x,)
+    keys = tuple(x)
+    if not keys or not all(isinstance(k, str) for k in keys):
+        raise TypeError(f"key columns must be non-empty str names, got {x!r}")
+    return keys
+
+
 @dataclass(eq=False)
 class Node:
     """Base logical node.  ``schema`` maps column name -> numpy dtype."""
@@ -134,14 +148,24 @@ class Project(Node):
 
 @dataclass(eq=False)
 class Join(Node):
-    """Inner equi-join (the paper's supported join); key cols may differ."""
+    """Equi-join (inner or left-outer) on one or more key column pairs.
+
+    ``left_on``/``right_on`` are equal-length tuples; position i of each pair
+    is compared for equality.  Scalar names normalize to 1-tuples.
+    """
 
     left: Node
     right: Node
-    left_on: str
-    right_on: str
+    left_on: tuple[str, ...]
+    right_on: tuple[str, ...]
     suffix: str = "_r"
     how: str = "inner"
+
+    def __post_init__(self):
+        self.left_on = as_keys(self.left_on)
+        self.right_on = as_keys(self.right_on)
+        if len(self.left_on) != len(self.right_on):
+            raise ValueError(f"key arity mismatch: {self.left_on} vs {self.right_on}")
 
     @property
     def children(self):
@@ -152,8 +176,8 @@ class Join(Node):
         ls, rs = self.left.schema, self.right.schema
         out = dict(ls)
         for name, dt in rs.items():
-            if name == self.right_on:
-                continue  # key is unified into left_on
+            if name in self.right_on:
+                continue  # keys are unified into left_on
             out[name + self.suffix if name in out else name] = dt
         if self.how == "left":
             out["_matched"] = np.dtype(np.int32)
@@ -168,16 +192,20 @@ class Join(Node):
         return n
 
     def short(self):
-        return f"Join({self.left_on}=={self.right_on})"
+        pairs = ",".join(f"{l}=={r}" for l, r in zip(self.left_on, self.right_on))
+        return f"Join({pairs})"
 
 
 @dataclass(eq=False)
 class Aggregate(Node):
-    """Group-by ``key`` with named aggregations over expressions."""
+    """Group-by ``key`` (one or more columns) with named aggregations."""
 
     child: Node
-    key: str
+    key: tuple[str, ...]
     aggs: dict[str, AggExpr]
+
+    def __post_init__(self):
+        self.key = as_keys(self.key)
 
     @property
     def children(self):
@@ -185,8 +213,8 @@ class Aggregate(Node):
 
     @property
     def schema(self):
-        ks = self.child.schema[self.key]
-        out = {self.key: ks}
+        cs = self.child.schema
+        out = {k: cs[k] for k in self.key}
         for name, agg in self.aggs.items():
             if agg.fn in ("count", "nunique"):
                 out[name] = np.dtype(np.int32)
@@ -202,7 +230,8 @@ class Aggregate(Node):
         return n
 
     def short(self):
-        return f"Aggregate(by={self.key}, {list(self.aggs)})"
+        by = self.key[0] if len(self.key) == 1 else list(self.key)
+        return f"Aggregate(by={by}, {list(self.aggs)})"
 
 
 @dataclass(eq=False)
@@ -262,11 +291,14 @@ class Window(Node):
 
 @dataclass(eq=False)
 class Sort(Node):
-    """Global sort by one key column (sample-sort)."""
+    """Global sample-sort, lexicographic over one or more key columns."""
 
     child: Node
-    by: str
+    by: tuple[str, ...]
     ascending: bool = True
+
+    def __post_init__(self):
+        self.by = as_keys(self.by)
 
     @property
     def children(self):

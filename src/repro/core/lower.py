@@ -20,6 +20,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from . import distribution as D
 from . import ir, physical as phys
+from .compat import shard_map as _compat_shard_map
 from .expr import ExternalArray, evaluate
 from .table import DTable, block_counts, pad_to
 
@@ -295,7 +296,7 @@ class Lowered:
             flags += [o1, o2]
         lcols, _ = phys.local_sort(lcols, lcnt, n.left_on)
         rcols, _ = phys.local_sort(rcols, rcnt, n.right_on)
-        smap = {c: n.right_out_name(c) for c in rcols if c != n.right_on}
+        smap = {c: n.right_out_name(c) for c in rcols if c not in n.right_on}
         out, cnt, ovf = phys.merge_join(
             lcols, lcnt, rcols, rcnt, n.left_on, n.right_on,
             cap_out=plans[n.id].cap, r_suffix_map=smap, how=n.how)
@@ -310,36 +311,42 @@ class Lowered:
         cache: dict = {}
         vals: dict[str, tuple[str, Any]] = {}
         nunique_col = None
+        key0 = cols[n.key[0]]
         for name, agg in n.aggs.items():
             arr = (evaluate(agg.expr, env, cache) if agg.expr is not None
-                   else jnp.zeros_like(cols[n.key], dtype=jnp.int32))
+                   else jnp.zeros_like(key0, dtype=jnp.int32))
             if arr.ndim == 0:
-                arr = jnp.broadcast_to(arr, cols[n.key].shape)
+                arr = jnp.broadcast_to(arr, key0.shape)
             vals[name] = (agg.fn, arr)
             if agg.fn == "nunique":
                 if nunique_col is not None:
                     raise NotImplementedError("one nunique per aggregate")
                 nunique_col = name
         pl = plans[n.id]
-        shuf_cols = {"__k": cols[n.key]}
+        key_names = tuple(f"__k{i}" for i in range(len(n.key)))
+        shuf_cols = {kn: cols[k] for kn, k in zip(key_names, n.key)}
         for name, (_fn, arr) in vals.items():
             shuf_cols["v_" + name] = arr
         if dists[n.id] != D.REP:
             shuf_cols, cnt, ovf = phys.shuffle_by_key(
-                shuf_cols, cnt, "__k", axes=axes,
+                shuf_cols, cnt, key_names, axes=axes,
                 bucket_cap=pl.shuffle_bucket, cap_out=pl.shuffle_cap,
                 partition_fn=self.kernels.get("hash_partition"),
                 prefix_fn=self.kernels.get("prefix_sum"))
             flags.append(ovf)
         extra = ("v_" + nunique_col,) if nunique_col else ()
-        sorted_cols, skey = phys.local_sort(shuf_cols, cnt, "__k", extra_keys=extra)
+        sorted_cols, skeys = phys.local_sort(shuf_cols, cnt, key_names,
+                                             extra_keys=extra)
         values = {name: (fn, sorted_cols["v_" + name]) for name, (fn, _a) in vals.items()}
         out, n_seg, ovf = phys.segment_aggregate(
-            skey, cnt, values, cap_out=pl.cap,
+            skeys, cnt, values, cap_out=pl.cap,
             segsum_fn=self.kernels.get("segment_sums"))
         flags.append(ovf)
-        out[n.key] = out.pop("__key__")
-        return out, n_seg
+        # key columns come back as __key<i>__ in key order; restore names
+        # while keeping them FIRST in the output dict (schema order).
+        renamed = {k: out.pop(f"__key{i}__") for i, k in enumerate(n.key)}
+        renamed.update(out)
+        return renamed, n_seg
 
     # -- public call -----------------------------------------------------------
 
@@ -375,7 +382,7 @@ class Lowered:
                 return self._per_shard({"scans": scan_cols, "ext": ext_cols,
                                         "rows": rows_static})
 
-            shard_fn = jax.shard_map(
+            shard_fn = _compat_shard_map(
                 wrapped, mesh=mesh,
                 in_specs=(self._in_specs["scans"], self._in_specs["ext"]),
                 out_specs=self._out_specs, check_vma=False)

@@ -69,14 +69,20 @@ def _try_push_filter(f: ir.Filter, fanout: dict[int, int]) -> ir.Node | None:
         j = child
         lnames = set(j.left.schema)
         rnames_out = {j.right_out_name(n): n for n in j.right.schema
-                      if n != j.right_on}
-        # the unified key column may be pushed to either side
-        if names <= (lnames | {j.left_on}):
+                      if n not in j.right_on}
+        # Predicates over left columns (incl. the unified key columns) commute
+        # with both inner and left joins: every output row carries its left
+        # row's values unchanged, and a left join emits >= 1 row per left row.
+        if names <= lnames:
             nl = ir.Filter(j.left, f.pred)
             return j.with_children((nl, j.right))
-        if names <= (set(rnames_out) | {j.left_on}):
+        # Right-side (or unified-key -> right) pushes are ONLY valid for
+        # inner joins: below a how="left" join the filter would shrink the
+        # right table, turning matched rows into zero-filled "unmatched"
+        # output rows — post-join filtering drops them instead.
+        if j.how == "inner" and names <= (set(rnames_out) | set(j.left_on)):
             mapping = dict(rnames_out)
-            mapping[j.left_on] = j.right_on
+            mapping.update(dict(zip(j.left_on, j.right_on)))
             np_ = _rename_refs(f.pred, mapping)
             nr = ir.Filter(j.right, np_)
             return j.with_children((j.left, nr))
@@ -137,11 +143,11 @@ def _required_columns(root: ir.Node, keep: set[str] | None) -> dict[int, set[str
                     child_need |= {c for (_t, c) in e.columns()}
             req.setdefault(n.child.id, set()).update(child_need)
         elif isinstance(n, ir.Join):
-            lneed, rneed = {n.left_on}, {n.right_on}
+            lneed, rneed = set(n.left_on), set(n.right_on)
             lschema = n.left.schema
             for out_name in need:
-                if out_name == n.left_on:
-                    continue
+                if out_name in lneed or (n.how == "left" and out_name == "_matched"):
+                    continue  # _matched is synthesized by the join itself
                 if out_name in lschema:
                     lneed.add(out_name)
                 else:
@@ -152,7 +158,7 @@ def _required_columns(root: ir.Node, keep: set[str] | None) -> dict[int, set[str
             req.setdefault(n.left.id, set()).update(lneed)
             req.setdefault(n.right.id, set()).update(rneed)
         elif isinstance(n, ir.Aggregate):
-            child_need = {n.key}
+            child_need = set(n.key)
             for name, agg in n.aggs.items():
                 if name in need and agg.expr is not None:
                     child_need |= {c for (_t, c) in agg.expr.columns()}
@@ -161,7 +167,7 @@ def _required_columns(root: ir.Node, keep: set[str] | None) -> dict[int, set[str
             child_need = (set(need) - {n.out}) | {c for (_t, c) in n.expr.columns()}
             req.setdefault(n.child.id, set()).update(child_need)
         elif isinstance(n, ir.Sort):
-            req.setdefault(n.child.id, set()).update(set(need) | {n.by})
+            req.setdefault(n.child.id, set()).update(set(need) | set(n.by))
         elif isinstance(n, ir.Concat):
             for c in n.parts:
                 req.setdefault(c.id, set()).update(need)
@@ -199,7 +205,7 @@ def prune_columns(root: ir.Node, keep: set[str] | None = None) -> tuple[ir.Node,
                     out = ir.Project(out.child, live_cols)
             elif isinstance(out, ir.Aggregate):
                 live_aggs = {k: v for k, v in out.aggs.items()
-                             if k in need or k == out.key}
+                             if k in need or k in out.key}
                 if len(live_aggs) < len(out.aggs):
                     pruned += len(out.aggs) - len(live_aggs)
                     out = ir.Aggregate(out.child, out.key, live_aggs)

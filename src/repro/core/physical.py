@@ -33,7 +33,10 @@ Axes = tuple[str, ...]
 # ---------------------------------------------------------------------------
 
 def nshards(axes: Axes) -> int:
-    return int(np.prod([lax.axis_size(a) for a in axes]))
+    if hasattr(lax, "axis_size"):                 # jax >= 0.6
+        return int(np.prod([lax.axis_size(a) for a in axes]))
+    return int(lax.psum(1, tuple(axes)))          # 0.4.x: psum of a python int
+                                                  # is constant-folded -> static
 
 
 def my_rank(axes: Axes):
@@ -61,6 +64,23 @@ def hash_u32(x: jax.Array) -> jax.Array:
     x = (x ^ (x >> 15)) * np.uint32(0x846CA68B)
     x = x ^ (x >> 16)
     return x
+
+
+def hash_combine(h: jax.Array, h2: jax.Array) -> jax.Array:
+    """Boost-style hash combine on uint32 (wraps mod 2^32)."""
+    return h ^ (h2 + np.uint32(0x9E3779B9) + (h << 6) + (h >> 2))
+
+
+def hash_keys(cols: dict[str, jax.Array], key_names: Sequence[str]) -> jax.Array:
+    """Composite row hash: per-column hash_u32 folded with hash_combine.
+
+    Rows whose key TUPLES are equal get equal hashes, so shuffle_by_key
+    co-locates composite-key groups exactly as it does single-key ones.
+    """
+    h = hash_u32(cols[key_names[0]])
+    for kn in key_names[1:]:
+        h = hash_combine(h, hash_u32(cols[kn]))
+    return h
 
 
 # ---------------------------------------------------------------------------
@@ -149,12 +169,18 @@ def exchange(cols: dict[str, jax.Array], count, dest: jax.Array, *,
     return out, count_out, overflow_send | overflow_recv
 
 
-def shuffle_by_key(cols: dict[str, jax.Array], count, key_name: str, *,
+def shuffle_by_key(cols: dict[str, jax.Array], count, key_names, *,
                    axes: Axes, bucket_cap: int, cap_out: int,
                    partition_fn=None, prefix_fn=None):
-    """Hash-partition rows so equal keys land on the same shard."""
+    """Hash-partition rows so equal (possibly composite) keys co-locate.
+
+    ``key_names`` is a column name or a sequence of names; multiple names
+    route on the combined hash (see :func:`hash_keys`).
+    """
+    if isinstance(key_names, str):
+        key_names = (key_names,)
     P = nshards(axes) if axes else 1
-    dest = (hash_u32(cols[key_name]) % np.uint32(P)).astype(jnp.int32)
+    dest = (hash_keys(cols, key_names) % np.uint32(P)).astype(jnp.int32)
     return exchange(cols, count, dest, axes=axes, bucket_cap=bucket_cap,
                     cap_out=cap_out, partition_fn=partition_fn,
                     prefix_fn=prefix_fn)
@@ -164,47 +190,101 @@ def shuffle_by_key(cols: dict[str, jax.Array], count, key_name: str, *,
 # local sort (bitonic via lax.sort — the TPU-native Timsort replacement)
 # ---------------------------------------------------------------------------
 
-def local_sort(cols: dict[str, jax.Array], count, key_name: str,
+def local_sort(cols: dict[str, jax.Array], count, key_names,
                extra_keys: Sequence[str] = ()):
-    """Stable sort of valid rows by key (padding sorts to the end)."""
-    cap = cols[key_name].shape[0]
+    """Stable lexicographic sort of valid rows by one or more key columns
+    (padding sorts to the end via per-dtype max sentinels).
+
+    ``key_names`` is a column name or a sequence of names (most-significant
+    first); ``lax.sort`` with ``num_keys=len(keys)+len(extra)+1`` does the
+    multi-key comparison natively on TPU.  Returns ``(sorted_cols, skeys)``
+    where ``skeys`` is the tuple of SENTINEL-MASKED sorted key arrays (one
+    per name in ``key_names``) used for run-boundary detection downstream.
+    """
+    if isinstance(key_names, str):
+        key_names = (key_names,)
+    key_names = tuple(key_names)
+    cap = cols[key_names[0]].shape[0]
     valid = valid_mask(count, cap)
     keys = []
-    for kn in (key_name, *extra_keys):
+    for kn in (*key_names, *extra_keys):
         keys.append(jnp.where(valid, cols[kn], _sentinel(cols[kn].dtype)))
     # stable tiebreaker: original index
     keys.append(jnp.arange(cap, dtype=jnp.int32))
     names = list(cols)
     operands = keys + [cols[n] for n in names]
     res = lax.sort(tuple(operands), num_keys=len(keys))
-    sorted_keys = dict(zip((key_name, *extra_keys), res[: len(keys) - 1]))
+    sorted_keys = dict(zip((*key_names, *extra_keys), res[: len(keys) - 1]))
     sorted_cols = dict(zip(names, res[len(keys):]))
     # masked key columns come back with sentinels; restore real values where valid
     for kn, kv in sorted_keys.items():
         sorted_cols[kn] = jnp.where(valid, kv, jnp.zeros((), kv.dtype))
-    return sorted_cols, sorted_keys[key_name]
+    return sorted_cols, tuple(sorted_keys[kn] for kn in key_names)
 
 
 # ---------------------------------------------------------------------------
 # merge join (sort-merge with searchsorted expansion; duplicate keys OK)
 # ---------------------------------------------------------------------------
 
-def merge_join(lcols, lcount, rcols, rcount, lkey: str, rkey: str, *,
+def _rank_keys(lks: tuple, lvalid, rks: tuple, rvalid):
+    """Dense lexicographic ranks of composite keys over the union of sides.
+
+    Concatenates both sides' key columns, sorts the tuples once
+    (``lax.sort`` multi-key), detects run boundaries, and scatters the dense
+    rank back to each row's original position.  Equal key tuples — across
+    sides — share a rank and rank order equals lexicographic tuple order, so
+    the single-key searchsorted merge machinery applies unchanged to the
+    rank arrays.  Invalid rows get the int32 max sentinel (sorts/searches to
+    the end, matching the single-key sentinel convention).
+    """
+    L, R = lks[0].shape[0], rks[0].shape[0]
+    n = L + R
+    valid = jnp.concatenate([lvalid, rvalid])
+    keycols = []
+    for lk, rk in zip(lks, rks):
+        dt = jnp.promote_types(lk.dtype, rk.dtype)
+        both = jnp.concatenate([lk.astype(dt), rk.astype(dt)])
+        keycols.append(jnp.where(valid, both, _sentinel(dt)))
+    idx = jnp.arange(n, dtype=jnp.int32)
+    res = lax.sort(tuple(keycols) + (idx,), num_keys=len(keycols) + 1)
+    sk, sidx = res[:-1], res[-1]
+    neq = functools.reduce(jnp.logical_or,
+                           [k[1:] != k[:-1] for k in sk])
+    boundary = jnp.concatenate([jnp.full((1,), True), neq])
+    rank_sorted = jnp.cumsum(boundary.astype(jnp.int32)) - 1
+    ranks = jnp.zeros((n,), jnp.int32).at[sidx].set(rank_sorted)
+    ranks = jnp.where(valid, ranks, _sentinel(jnp.int32))
+    return ranks[:L], ranks[L:]
+
+
+def merge_join(lcols, lcount, rcols, rcount, lkeys, rkeys, *,
                cap_out: int, r_suffix_map: dict[str, str], how: str = "inner"):
-    """Equi-join of two locally sorted shards (inner or left-outer).
+    """Equi-join of two locally sorted shards (inner or left-outer) on one
+    or more key columns.
 
     Expansion trick: per-left-row match counts -> prefix sums -> each output
     slot s maps back to (left row, offset within its match range) with two
     searchsorteds.  Left-outer: unmatched rows get count 1 and zero-filled
     right columns plus a ``_matched`` indicator (the static-shape NULL).
-    Fully static shapes; overflow flagged.
+    Composite keys reduce to the single-key machinery via per-shard dense
+    lexicographic ranks (:func:`_rank_keys`).  Fully static shapes; overflow
+    flagged.
     """
-    lcap = lcols[lkey].shape[0]
-    rcap = rcols[rkey].shape[0]
+    if isinstance(lkeys, str):
+        lkeys = (lkeys,)
+    if isinstance(rkeys, str):
+        rkeys = (rkeys,)
+    lkeys, rkeys = tuple(lkeys), tuple(rkeys)
+    lcap = lcols[lkeys[0]].shape[0]
+    rcap = rcols[rkeys[0]].shape[0]
     lvalid = valid_mask(lcount, lcap)
     rvalid = valid_mask(rcount, rcap)
-    lk = jnp.where(lvalid, lcols[lkey], _sentinel(lcols[lkey].dtype))
-    rk = jnp.where(rvalid, rcols[rkey], _sentinel(rcols[rkey].dtype))
+    if len(lkeys) == 1:
+        lk = jnp.where(lvalid, lcols[lkeys[0]], _sentinel(lcols[lkeys[0]].dtype))
+        rk = jnp.where(rvalid, rcols[rkeys[0]], _sentinel(rcols[rkeys[0]].dtype))
+    else:
+        lk, rk = _rank_keys(tuple(lcols[k] for k in lkeys), lvalid,
+                            tuple(rcols[k] for k in rkeys), rvalid)
 
     lo = jnp.searchsorted(rk, lk, side="left")
     hi = jnp.searchsorted(rk, lk, side="right")
@@ -233,7 +313,7 @@ def merge_join(lcols, lcount, rcols, rcount, lkey: str, rkey: str, *,
     for name, v in lcols.items():
         out[name] = jnp.where(out_valid, v[li_c], jnp.zeros((), v.dtype))
     for name, v in rcols.items():
-        if name == rkey:
+        if name in rkeys:
             continue
         out[r_suffix_map.get(name, name)] = jnp.where(
             r_valid, v[ri_c], jnp.zeros((), v.dtype))
@@ -246,17 +326,25 @@ def merge_join(lcols, lcount, rcols, rcount, lkey: str, rkey: str, *,
 # segmented aggregation (group-by backend; sorted-key TPU idiom)
 # ---------------------------------------------------------------------------
 
-def segment_aggregate(key_sorted: jax.Array, count, values: dict[str, tuple[str, jax.Array]],
+def segment_aggregate(keys_sorted, count, values: dict[str, tuple[str, jax.Array]],
                       *, cap_out: int, segsum_fn=None):
-    """Aggregate ``values`` over runs of equal (sorted) keys.
+    """Aggregate ``values`` over runs of equal (sorted) composite keys.
 
-    values: name -> (fn, value_array) with fn in {sum, mean, count, min, max,
-    var, std, first, nunique}.  Returns ({key, **aggs}, n_groups, overflow).
+    ``keys_sorted`` is one sorted key array or a tuple of them (rows sorted
+    lexicographically); a new run starts where ANY key column differs from
+    the previous row.  values: name -> (fn, value_array) with fn in {sum,
+    mean, count, min, max, var, std, first, nunique}.  Returns
+    ``({__key0__..., **aggs}, n_groups, overflow)`` with one output column
+    per key, in key order, named ``__key<i>__``.
     """
-    cap = key_sorted.shape[0]
+    if not isinstance(keys_sorted, (tuple, list)):
+        keys_sorted = (keys_sorted,)
+    keys_sorted = tuple(keys_sorted)
+    cap = keys_sorted[0].shape[0]
     valid = valid_mask(count, cap)
-    prev = jnp.concatenate([jnp.full((1,), True),
-                            key_sorted[1:] != key_sorted[:-1]])
+    neq = functools.reduce(jnp.logical_or,
+                           [k[1:] != k[:-1] for k in keys_sorted])
+    prev = jnp.concatenate([jnp.full((1,), True), neq])
     seg_start = valid & prev
     seg_id = jnp.cumsum(seg_start.astype(jnp.int32)) - 1
     seg_id = jnp.where(valid, seg_id, cap_out)          # padding -> dropped
@@ -289,12 +377,13 @@ def segment_aggregate(key_sorted: jax.Array, count, values: dict[str, tuple[str,
     group_n = jax.ops.segment_sum(ones, seg_id, num_segments=cap_out + 1)[:cap_out]
 
     out: dict[str, jax.Array] = {}
-    out["__key__"] = jax.ops.segment_max(
-        jnp.where(valid, key_sorted,
-                  jnp.array(jnp.iinfo(jnp.int32).min, key_sorted.dtype)
-                  if jnp.issubdtype(key_sorted.dtype, jnp.integer)
-                  else jnp.array(jnp.finfo(key_sorted.dtype).min, key_sorted.dtype)),
-        seg_id, num_segments=cap_out + 1)[:cap_out]
+    for i, ks in enumerate(keys_sorted):
+        neg = (jnp.array(jnp.iinfo(ks.dtype).min, ks.dtype)
+               if jnp.issubdtype(ks.dtype, jnp.integer)
+               else jnp.array(jnp.finfo(ks.dtype).min, ks.dtype))
+        out[f"__key{i}__"] = jax.ops.segment_max(
+            jnp.where(valid, ks, neg),
+            seg_id, num_segments=cap_out + 1)[:cap_out]
 
     for name, (fn, x) in values.items():
         if fn == "count":
@@ -470,12 +559,25 @@ def rebalance(cols: dict[str, jax.Array], count, *, axes: Axes,
     return out, cnt, ovf
 
 
-def sample_sort(cols: dict[str, jax.Array], count, key_name: str, *,
+def sample_sort(cols: dict[str, jax.Array], count, key_names, *,
                 axes: Axes, bucket_cap: int, cap_out: int, n_samples: int = 64,
                 ascending: bool = True):
-    """Global sort: local sort -> splitter selection -> route -> local sort."""
+    """Global sort: local sort -> splitter selection -> route -> local sort.
+
+    ``key_names`` may name several columns (lexicographic order, all
+    ascending or all descending).  Splitters are drawn from the FIRST
+    (most-significant) key only: rows that tie on it are co-located on one
+    shard by the side="right" search, and the final multi-key local sort
+    orders them — so the concatenation of shard prefixes is globally
+    lexicographically sorted without cross-shard composite comparisons.
+    """
+    if isinstance(key_names, str):
+        key_names = (key_names,)
+    key_names = tuple(key_names)
+    key0 = key_names[0]
     P = nshards(axes) if axes else 1
-    scols, skey = local_sort(cols, count, key_name)
+    scols, skeys = local_sort(cols, count, key_names)
+    skey = skeys[0]
     cap = skey.shape[0]
     if P > 1:
         # sample evenly from the valid prefix
@@ -488,7 +590,7 @@ def sample_sort(cols: dict[str, jax.Array], count, key_name: str, *,
         # P-1 splitters at even quantiles
         qpos = (jnp.arange(1, P, dtype=jnp.int32) * allsamp.shape[0]) // P
         splitters = allsamp[qpos]
-        key_vals = jnp.where(valid_mask(count, cap), scols[key_name],
+        key_vals = jnp.where(valid_mask(count, cap), scols[key0],
                              _sentinel(skey.dtype))
         dest = jnp.searchsorted(splitters, key_vals, side="right").astype(jnp.int32)
         if not ascending:
@@ -497,10 +599,10 @@ def sample_sort(cols: dict[str, jax.Array], count, key_name: str, *,
         dest = jnp.zeros((cap,), jnp.int32)
     out, cnt, ovf = exchange(scols, count, dest, axes=axes,
                              bucket_cap=bucket_cap, cap_out=cap_out)
-    out, _ = local_sort(out, cnt, key_name)
+    out, _ = local_sort(out, cnt, key_names)
     if not ascending:
         # reverse valid prefix
-        capo = out[key_name].shape[0]
+        capo = out[key0].shape[0]
         idx = jnp.where(valid_mask(cnt, capo),
                         jnp.maximum(cnt - 1, 0) - jnp.arange(capo, dtype=jnp.int32),
                         jnp.arange(capo, dtype=jnp.int32))

@@ -8,35 +8,70 @@ def o_filter(cols: dict, mask: np.ndarray) -> dict:
     return {k: v[mask] for k, v in cols.items()}
 
 
-def o_join(left: dict, right: dict, lkey: str, rkey: str, suffix="_r") -> dict:
-    """Inner equi-join preserving all matches (order-insensitive compare)."""
-    li, ri = [], []
+def _as_keys(key) -> tuple[str, ...]:
+    return (key,) if isinstance(key, str) else tuple(key)
+
+
+def o_join(left: dict, right: dict, lkey, rkey, suffix="_r",
+           how="inner") -> dict:
+    """Equi-join preserving all matches (order-insensitive compare).
+
+    ``lkey``/``rkey`` may be a single name or a sequence of names (composite
+    key — rows match when ALL key columns are equal).  how="left" keeps
+    unmatched left rows with zero-filled right columns and a ``_matched``
+    indicator, mirroring the system's static-shape NULL convention.
+    """
+    lks, rks = _as_keys(lkey), _as_keys(rkey)
     rpos: dict = {}
-    for j, k in enumerate(right[rkey]):
-        rpos.setdefault(int(k), []).append(j)
-    for i, k in enumerate(left[lkey]):
-        for j in rpos.get(int(k), ()):
+    for j in range(len(right[rks[0]])):
+        kt = tuple(right[k][j].item() for k in rks)
+        rpos.setdefault(kt, []).append(j)
+    li, ri, matched = [], [], []
+    for i in range(len(left[lks[0]])):
+        kt = tuple(left[k][i].item() for k in lks)
+        js = rpos.get(kt, ())
+        for j in js:
             li.append(i)
             ri.append(j)
+            matched.append(1)
+        if not js and how == "left":
+            li.append(i)
+            ri.append(0)            # placeholder; value zeroed below
+            matched.append(0)
     li, ri = np.array(li, np.int64), np.array(ri, np.int64)
+    matched = np.array(matched, np.int32)
     out = {k: v[li] for k, v in left.items()}
     for k, v in right.items():
-        if k == rkey:
+        if k in rks:
             continue
         name = k + suffix if k in left else k
-        out[name] = v[ri]
+        vals = np.zeros(len(ri), v.dtype)
+        hit = matched == 1
+        vals[hit] = v[ri[hit]]          # unmatched stay zero-filled
+        out[name] = vals
+    if how == "left":
+        out["_matched"] = matched
     return out
 
 
-def o_aggregate(cols: dict, key: str, aggs: dict[str, tuple]) -> dict:
-    """aggs: name -> (fn, value_array_or_None)."""
-    keys = cols[key]
-    uids = np.unique(keys)
-    out = {key: uids}
+def o_aggregate(cols: dict, key, aggs: dict[str, tuple]) -> dict:
+    """aggs: name -> (fn, value_array_or_None).
+
+    ``key`` may be a single name or a sequence of names; composite groups
+    are the distinct key tuples, emitted in lexicographic order with one
+    output column per key column.
+    """
+    ks = _as_keys(key)
+    arrs = [np.asarray(cols[k]) for k in ks]
+    n = len(arrs[0])
+    tuples = [tuple(a[i].item() for a in arrs) for i in range(n)]
+    uniq = sorted(set(tuples))
+    out = {k: np.array([u[j] for u in uniq], dtype=arrs[j].dtype)
+           for j, k in enumerate(ks)}
     for name, (fn, vals) in aggs.items():
         res = []
-        for u in uids:
-            m = keys == u
+        for u in uniq:
+            m = np.fromiter((t == u for t in tuples), bool, count=n)
             if fn == "sum":
                 res.append(np.sum(vals[m]))
             elif fn == "mean":

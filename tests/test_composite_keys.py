@@ -1,0 +1,310 @@
+"""Composite (multi-column) key coverage: join / aggregate / sort against the
+oracle, the left-join pushdown guard, pruning of key sets, and the
+capacity-overflow auto-retry path."""
+import numpy as np
+import pytest
+
+from repro import hiframes as hf
+from repro.core import ir, optimizer
+from oracle import o_aggregate, o_join, sorted_cols
+
+
+@pytest.fixture(scope="module")
+def data():
+    rng = np.random.default_rng(21)
+    n = 1500
+    return {
+        "k1": rng.integers(0, 7, n).astype(np.int32),
+        "k2": rng.integers(0, 11, n).astype(np.int32),
+        "kf": (rng.integers(0, 5, n) * 0.5).astype(np.float32),  # float key col
+        "x": rng.normal(size=n).astype(np.float32),
+        "y": rng.normal(size=n).astype(np.float32),
+    }
+
+
+@pytest.fixture(scope="module")
+def dim():
+    rng = np.random.default_rng(22)
+    m = 120  # duplicate composite keys on the right on purpose
+    return {
+        "ca": rng.integers(0, 7, m).astype(np.int32),
+        "cb": rng.integers(0, 11, m).astype(np.int32),
+        "w": rng.normal(size=m).astype(np.float32),
+    }
+
+
+# -- aggregate ----------------------------------------------------------------
+
+
+def test_composite_aggregate_matches_oracle(data):
+    df = hf.table(data)
+    out = hf.aggregate(df, by=("k1", "k2"), s=hf.sum_(df["x"]),
+                       m=hf.mean(df["x"]), c=hf.count(),
+                       mn=hf.min_(df["y"])).collect().to_numpy()
+    ref = o_aggregate(data, ("k1", "k2"), {
+        "s": ("sum", data["x"]), "m": ("mean", data["x"]),
+        "c": ("count", None), "mn": ("min", data["y"])})
+    o = np.lexsort((out["k2"], out["k1"]))
+    np.testing.assert_array_equal(out["k1"][o], ref["k1"])
+    np.testing.assert_array_equal(out["k2"][o], ref["k2"])
+    np.testing.assert_allclose(out["s"][o], ref["s"], atol=1e-3)
+    np.testing.assert_allclose(out["m"][o], ref["m"], atol=1e-5)
+    np.testing.assert_array_equal(out["c"][o], ref["c"])
+    np.testing.assert_allclose(out["mn"][o], ref["mn"])
+
+
+def test_composite_aggregate_mixed_dtype_keys(data):
+    """int32 + float32 key columns group correctly together."""
+    df = hf.table(data)
+    out = hf.aggregate(df, by=("k1", "kf"), s=hf.sum_(df["x"]),
+                       c=hf.count()).collect().to_numpy()
+    ref = o_aggregate(data, ("k1", "kf"), {"s": ("sum", data["x"]),
+                                           "c": ("count", None)})
+    o = np.lexsort((out["kf"], out["k1"]))
+    np.testing.assert_array_equal(out["k1"][o], ref["k1"])
+    np.testing.assert_allclose(out["kf"][o], ref["kf"])
+    np.testing.assert_allclose(out["s"][o], ref["s"], atol=1e-3)
+    np.testing.assert_array_equal(out["c"][o], ref["c"])
+
+
+def test_composite_aggregate_list_by_and_counts_conserved(data):
+    df = hf.table(data)
+    out = hf.aggregate(df, by=["k1", "k2"], c=hf.count()).collect().to_numpy()
+    assert out["c"].sum() == len(data["k1"])
+
+
+# -- join ---------------------------------------------------------------------
+
+
+def test_composite_join_matches_oracle(data, dim):
+    """2-column key, duplicate keys on both sides."""
+    out = hf.join(hf.table(data), hf.table(dim, "d"),
+                  on=[("k1", "ca"), ("k2", "cb")]).collect().to_numpy()
+    ref = o_join(data, dim, ("k1", "k2"), ("ca", "cb"))
+    assert len(out["k1"]) == len(ref["k1"])
+    a = sorted_cols(out, ("k1", "k2", "x", "w"))
+    b = sorted_cols(ref, ("k1", "k2", "x", "w"))
+    for k in b:
+        np.testing.assert_allclose(a[k], b[k], rtol=1e-6)
+
+
+def test_composite_join_shared_names(data):
+    """on=[names] joins columns of the same name on both sides."""
+    rng = np.random.default_rng(23)
+    right = {"k1": rng.integers(0, 7, 60).astype(np.int32),
+             "k2": rng.integers(0, 11, 60).astype(np.int32),
+             "w": rng.normal(size=60).astype(np.float32)}
+    out = hf.join(hf.table(data), hf.table(right, "r"),
+                  on=["k1", "k2"]).collect().to_numpy()
+    ref = o_join(data, right, ("k1", "k2"), ("k1", "k2"))
+    assert len(out["k1"]) == len(ref["k1"])
+    a = sorted_cols(out, ("k1", "k2", "x", "w"))
+    b = sorted_cols(ref, ("k1", "k2", "x", "w"))
+    for k in b:
+        np.testing.assert_allclose(a[k], b[k], rtol=1e-6)
+
+
+def test_composite_join_mixed_dtype_keys(data):
+    rng = np.random.default_rng(24)
+    right = {"ca": rng.integers(0, 7, 50).astype(np.int32),
+             "cf": (rng.integers(0, 5, 50) * 0.5).astype(np.float32),
+             "w": rng.normal(size=50).astype(np.float32)}
+    out = hf.join(hf.table(data), hf.table(right, "r"),
+                  on=[("k1", "ca"), ("kf", "cf")]).collect().to_numpy()
+    ref = o_join(data, right, ("k1", "kf"), ("ca", "cf"))
+    assert len(out["k1"]) == len(ref["k1"])
+    a = sorted_cols(out, ("k1", "kf", "x", "w"))
+    b = sorted_cols(ref, ("k1", "kf", "x", "w"))
+    for k in b:
+        np.testing.assert_allclose(a[k], b[k], rtol=1e-6)
+
+
+def test_composite_left_join_matches_oracle(data):
+    """Left-outer with a 2-column key: unmatched rows kept, zero-filled."""
+    right = {"ca": np.array([0, 1, 2], np.int32),
+             "cb": np.array([0, 1, 2], np.int32),
+             "w": np.array([1.0, 2.0, 3.0], np.float32)}
+    out = hf.join(hf.table(data), hf.table(right, "r"),
+                  on=[("k1", "ca"), ("k2", "cb")], how="left") \
+        .collect().to_numpy()
+    ref = o_join(data, right, ("k1", "k2"), ("ca", "cb"), how="left")
+    assert len(out["k1"]) == len(ref["k1"])
+    a = sorted_cols(out, ("k1", "k2", "x", "w", "_matched"))
+    b = sorted_cols(ref, ("k1", "k2", "x", "w", "_matched"))
+    for k in b:
+        np.testing.assert_allclose(a[k], b[k], rtol=1e-6)
+
+
+def test_single_pair_on_still_means_one_key(data):
+    """Back-compat: on=("a","b") is ONE key pair, not two key columns."""
+    right = {"cid": np.arange(7, dtype=np.int32),
+             "w": np.arange(7, dtype=np.float32)}
+    j = hf.join(hf.table(data), hf.table(right, "r"), on=("k1", "cid"))
+    assert j.node.left_on == ("k1",) and j.node.right_on == ("cid",)
+    out = j.collect().to_numpy()
+    assert len(out["k1"]) == len(data["k1"])   # every k1 in 0..6 matches once
+
+
+# -- sort ---------------------------------------------------------------------
+
+
+def test_composite_sort_matches_lexsort(data):
+    out = hf.table(data).sort(by=("k1", "k2")).collect().to_numpy()
+    order = np.lexsort((data["k2"], data["k1"]))
+    np.testing.assert_array_equal(out["k1"], data["k1"][order])
+    np.testing.assert_array_equal(out["k2"], data["k2"][order])
+
+
+def test_composite_sort_descending(data):
+    out = hf.table(data).sort(by=("k1", "k2"), ascending=False) \
+        .collect().to_numpy()
+    order = np.lexsort((data["k2"], data["k1"]))[::-1]
+    np.testing.assert_array_equal(out["k1"], data["k1"][order])
+    np.testing.assert_array_equal(out["k2"], data["k2"][order])
+
+
+# -- optimizer: pushdown guard + key-set pruning ------------------------------
+
+
+def _left_join_frames():
+    rng = np.random.default_rng(25)
+    n = 400
+    left = {"id": rng.integers(0, 30, n).astype(np.int32),
+            "x": rng.normal(size=n).astype(np.float32)}
+    right = {"cid": np.arange(0, 30, 2, dtype=np.int32),
+             "w": rng.normal(size=15).astype(np.float32)}
+    return left, right
+
+
+def test_left_join_blocks_right_pushdown():
+    """Regression: a right-side predicate must NOT move below how="left"."""
+    left, right = _left_join_frames()
+    j = hf.join(hf.table(left, "l"), hf.table(right, "r"), on=("id", "cid"),
+                how="left")
+    f = j[j["w"] > 0.0]
+    new_root, n = optimizer.push_predicates(f.node)
+    assert n == 0
+    assert isinstance(new_root, ir.Filter)     # filter stays above the join
+
+
+def test_left_join_pushdown_guard_end_to_end():
+    """Optimized output == unoptimized == oracle for filter-over-left-join."""
+    left, right = _left_join_frames()
+    j = hf.join(hf.table(left, "l"), hf.table(right, "r"), on=("id", "cid"),
+                how="left")
+    f = j[j["w"] > 0.0]
+    opt = f.collect(hf.ExecConfig(optimize_plan=True)).to_numpy()
+    raw = f.collect(hf.ExecConfig(optimize_plan=False)).to_numpy()
+    ref = o_join(left, right, "id", "cid", how="left")
+    keep = ref["w"] > 0.0
+    ref = {k: v[keep] for k, v in ref.items()}
+    assert len(opt["id"]) == len(ref["id"])
+    for got in (opt, raw):
+        a = sorted_cols(got, ("id", "x", "w"))
+        b = sorted_cols(ref, ("id", "x", "w"))
+        for k in b:
+            np.testing.assert_allclose(a[k], b[k], rtol=1e-6)
+
+
+def test_left_join_still_pushes_left_side_predicates():
+    """Left-column predicates commute with how="left" and still push."""
+    left, right = _left_join_frames()
+    j = hf.join(hf.table(left, "l"), hf.table(right, "r"), on=("id", "cid"),
+                how="left")
+    f = j[j["x"] > 0.0]
+    new_root, n = optimizer.push_predicates(f.node)
+    assert n == 1
+    assert isinstance(new_root, ir.Join)
+    assert isinstance(new_root.left, ir.Filter)
+
+
+def test_composite_pushdown_same_rewrites_as_single_key(data, dim):
+    """Pushdown + pruning fire identically for 1-key and 2-key joins."""
+    right1 = {"ca": dim["ca"], "w": dim["w"]}
+    j1 = hf.join(hf.table(data), hf.table(right1, "d1"), on=("k1", "ca"))
+    f1 = j1[j1["w"] > 0.0]
+    _, stats1 = optimizer.optimize(f1.node, keep={"k1", "w"})
+
+    j2 = hf.join(hf.table(data), hf.table(dim, "d2"),
+                 on=[("k1", "ca"), ("k2", "cb")])
+    f2 = j2[j2["w"] > 0.0]
+    _, stats2 = optimizer.optimize(f2.node, keep={"k1", "k2", "w"})
+
+    assert stats1["pushdown"] == stats2["pushdown"] == 1
+    assert stats1["pruned_columns"] > 0 and stats2["pruned_columns"] > 0
+
+
+def test_composite_pushdown_right_side_rewrites_keys(data, dim):
+    """A unified-key predicate maps left key names -> right key names."""
+    j = hf.join(hf.table(data), hf.table(dim, "d"),
+                on=[("k1", "ca"), ("k2", "cb")])
+    f = j[(j["w"] > 0.0)]
+    new_root, n = optimizer.push_predicates(f.node)
+    assert n == 1
+    assert isinstance(new_root.right, ir.Filter)
+    assert {c for (_t, c) in new_root.right.pred.columns()} == {"w"}
+
+
+def test_composite_pruning_keeps_all_key_columns(data, dim):
+    j = hf.join(hf.table(data), hf.table(dim, "d"),
+                on=[("k1", "ca"), ("k2", "cb")])
+    pruned, _ = optimizer.prune_columns(j.node, keep={"w"})
+    scans = {s.name: s for s in ir.topo_order(pruned) if isinstance(s, ir.Scan)}
+    assert {"k1", "k2"} <= set(scans["t"].columns)
+    assert {"ca", "cb"} <= set(scans["d"].columns)
+    assert "x" not in scans["t"].columns       # non-key, non-kept: pruned
+
+
+def test_explain_composite_shows_pushdown(data, dim):
+    j = hf.join(hf.table(data), hf.table(dim, "d"),
+                on=[("k1", "ca"), ("k2", "cb")])
+    f = j[j["w"] > 0.0]
+    plan = f.explain()
+    lines = plan.splitlines()
+    jline = next(i for i, l in enumerate(lines) if "Join" in l)
+    assert "k1==ca" in lines[jline] and "k2==cb" in lines[jline]
+    # the filter was pushed BELOW the join (appears after it, indented)
+    assert any("Filter" in l for l in lines[jline + 1:])
+    assert not any("Filter" in l for l in lines[:jline])
+
+
+# -- auto-retry / overflow path ----------------------------------------------
+
+
+def test_composite_join_auto_retry_recovers():
+    """Undersized capacity plan overflows, auto-retry doubles and succeeds."""
+    rng = np.random.default_rng(26)
+    n = 300
+    left = {"a": rng.integers(0, 3, n).astype(np.int32),
+            "b": rng.integers(0, 2, n).astype(np.int32),
+            "x": rng.normal(size=n).astype(np.float32)}
+    right = {"ca": rng.integers(0, 3, 60).astype(np.int32),
+             "cb": rng.integers(0, 2, 60).astype(np.int32),
+             "w": rng.normal(size=60).astype(np.float32)}
+    cfg = hf.ExecConfig(safe_capacities=False, shuffle_slack=1.0,
+                        join_expansion=1.0, auto_retry=8)
+    out = hf.join(hf.table(left, "l"), hf.table(right, "r"),
+                  on=[("a", "ca"), ("b", "cb")]).collect(cfg)
+    assert not out.overflow
+    ref = o_join(left, right, ("a", "b"), ("ca", "cb"))
+    assert out.num_rows() == len(ref["a"])
+
+
+def test_collect_negative_auto_retry_binds_result(data):
+    """Regression: auto_retry < 0 must still run once and return a table."""
+    df = hf.table(data)
+    cfg = hf.ExecConfig(auto_retry=-1)
+    out = df[df["x"] > 0.0].collect(cfg)
+    assert out.num_rows() == int((data["x"] > 0.0).sum())
+
+
+def test_negative_auto_retry_reports_overflow():
+    """auto_retry=-3: no retries; an overflowing plan returns flagged."""
+    n = 200
+    ones = {"k": np.zeros(n, np.int32), "b": np.zeros(n, np.int32),
+            "v": np.arange(n, dtype=np.float32)}
+    cfg = hf.ExecConfig(safe_capacities=False, shuffle_slack=1.0,
+                        join_expansion=1.0, auto_retry=-3)
+    out = hf.join(hf.table(ones, "a"), hf.table(ones, "b2"),
+                  on=[("k", "k"), ("b", "b")]).collect(cfg)
+    assert out.overflow

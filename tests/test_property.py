@@ -1,6 +1,13 @@
-"""Property-based tests (hypothesis) over the system's invariants."""
+"""Property-based tests (hypothesis) over the system's invariants.
+
+``hypothesis`` is an OPTIONAL dev dependency: when it is absent the whole
+module is skipped at collection time (pytest.importorskip) so tier-1
+``pytest -x`` degrades gracefully instead of dying with an ImportError.
+"""
 import numpy as np
 import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import HealthCheck, given, settings
 from hypothesis import strategies as st
 

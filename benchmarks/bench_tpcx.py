@@ -29,6 +29,39 @@ def q26(ss, it, min_count=4):
     return c_i[c_i["c_i_count"] > min_count]
 
 
+def q26_multikey(ss, dim, min_count=4):
+    """Q26 with a realistic composite key: sales join a per-(item, region)
+    dimension on BOTH columns and aggregate by the SAME key pair — the shape
+    whose aggregate exchange + sort the physical planner elides (3 shuffles
+    3 sorts -> 2 shuffles 1 sort, docs/physical_plan.md)."""
+    store_sales, d = hf.table(ss, "ss"), hf.table(dim, "dim")
+    sale_items = hf.join(
+        store_sales, d,
+        on=[("ss_item_sk", "i_item_sk"), ("ss_region", "i_region")])
+    per_key = hf.aggregate(
+        sale_items, by=("ss_item_sk", "ss_region"),
+        n=hf.count(),
+        paid=hf.sum_(sale_items["ss_net_paid"]),
+        id1=hf.sum_(sale_items["i_class_id"] == 1),
+        id2=hf.sum_(sale_items["i_class_id"] == 2))
+    return per_key[per_key["n"] > min_count]
+
+
+def _region_tables(ss, it, n_regions=4, seed=13):
+    """Augment the synthetic tables with a region column / dimension."""
+    rng = np.random.default_rng(seed)
+    ss = dict(ss)
+    ss["ss_region"] = rng.integers(0, n_regions,
+                                   len(ss["ss_item_sk"])).astype(np.int32)
+    n_items = len(it["i_item_sk"])
+    dim = {
+        "i_item_sk": np.tile(it["i_item_sk"], n_regions),
+        "i_region": np.repeat(np.arange(n_regions, dtype=np.int32), n_items),
+        "i_class_id": np.tile(it["i_class_id"], n_regions),
+    }
+    return ss, dim
+
+
 def q25(ss):
     """Customer value segmentation: frequency (distinct tickets), monetary."""
     s = hf.table(ss, "ss")
@@ -67,6 +100,22 @@ def run(scale: float = 1.0):
     plan = q25(ss).lower()
     us = timeit(plan)
     report(f"fig11_q25_sf{scale}", us, f"rows={n_sales}")
+
+    # Q26 on a composite (item, region) key: exchange elision A/B.  The
+    # "elided" run skips the aggregate's shuffle; the baseline
+    # (elide_exchanges=False) restores the exchange-per-operator plan.
+    # (Both legs use the rank join, so the pre-refactor 3-local-sort plan is
+    # gone from BOTH — the A/B isolates the exchange elision alone.)
+    ss_r, dim_r = _region_tables(ss, it)
+    frame = q26_multikey(ss_r, dim_r)
+    for tag, cfg in (("elided", hf.ExecConfig()),
+                     ("baseline", hf.ExecConfig(elide_exchanges=False))):
+        pplan = frame.physical_plan(cfg)
+        shuffles = pplan.shuffle_count()
+        sorts = pplan.counts()["local_sorts"]
+        us = timeit(frame.lower(cfg))
+        report(f"fig11_q26_multikey_{tag}_sf{scale}", us,
+               f"shuffles={shuffles};local_sorts={sorts};rows={n_sales}")
 
     wcs = synth.web_clickstream(n_sales, n_items, n_cust, seed=12, skew=1.1)
     # Q05 under skew: run through the overflow-retry driver and report the

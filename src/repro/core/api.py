@@ -153,16 +153,37 @@ class DataFrame:
         mat = jnp.stack([t.columns[c].astype(jnp.float32) for c in cols], axis=1)
         return mat, t.counts, t.capacity
 
-    def explain(self, cfg: ExecConfig | None = None) -> str:
-        cfg = cfg or ExecConfig()
+    def _plan(self, cfg: ExecConfig):
+        """Shared planning prologue (optimize -> infer -> rebalance ->
+        physical plan) for explain()/physical_plan().  Mirrors lower()'s
+        sequence under the same config; a plain collect() executes this
+        plan (collect(keep=...) / collect_matrix() additionally prune
+        columns or append a root rebalance, which introspection omits)."""
         from . import optimizer as opt
+        from . import physical_plan as pp
         root = self.node
         if cfg.optimize_plan:
             root, _ = opt.optimize(root)
         info = D.infer(root, force_rep=self._force_rep(),
                        broadcast_join=cfg.broadcast_join)
         root = D.insert_rebalance(root, info)
-        return ir.plan_str(root, info.dists)
+        return root, info, pp.plan_physical(root, info.dists, cfg)
+
+    def physical_plan(self, cfg: ExecConfig | None = None):
+        """The property-driven physical plan (core/physical_plan.py) this
+        frame would execute: op list with partitioning/ordering annotations,
+        plus ``counts()`` / ``shuffle_count()`` for introspection — the hook
+        the exchange-elision tests and benchmarks use."""
+        _root, _info, pplan = self._plan(cfg or ExecConfig())
+        return pplan
+
+    def explain(self, cfg: ExecConfig | None = None) -> str:
+        """Logical plan with distribution annotations, followed by the
+        physical plan: one line per operator with its provided partitioning
+        and ordering, exchange/sort insertions made explicit, and a leading
+        shuffle/sort census."""
+        root, info, pplan = self._plan(cfg or ExecConfig())
+        return ir.plan_str(root, info.dists) + "\n\n" + pplan.render()
 
     def __repr__(self):
         return f"DataFrame({list(self.node.schema)})\n{ir.plan_str(self.node)}"
@@ -232,7 +253,9 @@ def join(left: DataFrame, right: DataFrame, on, suffix: str = "_r",
 
 def aggregate(df: DataFrame, by, **aggs: AggExpr) -> DataFrame:
     """Group-by aggregation; ``by`` is a column name or a tuple/list of names
-    (composite key — groups are distinct key combinations)."""
+    (composite key — groups are distinct key combinations).  Any number of
+    ``nunique`` aggregations may be mixed in (each counts distinct values of
+    its own expression per group)."""
     for k, v in aggs.items():
         if not isinstance(v, AggExpr):
             raise TypeError(f"{k} must be an AggExpr (hf.sum/mean/...)")

@@ -20,6 +20,12 @@ Composite (multi-column) keys do not change the lattice: Join/Aggregate/Sort
 carry key TUPLES in the IR, but their transfer functions depend only on node
 shape (data-dependent output length => 1D_VAR), never on key arity — the
 physical layer routes on a combined hash so co-location still holds.
+
+This pass decides WHERE rows may live; HOW they move is decided downstream
+by the property-driven physical planner (core/physical_plan.py), which seeds
+its partitioning properties from these lattice elements (REP scans provide
+"rep" — satisfying every co-location requirement — everything else starts
+"block") and inserts exchanges only where a required property is missing.
 """
 from __future__ import annotations
 

@@ -137,6 +137,15 @@ class Project(Node):
                 out[name] = np.dtype(np.float32)  # refined at lowering
         return out
 
+    def passthrough(self) -> dict[str, str]:
+        """Output columns that are pure renames: out name -> child column.
+
+        The physical planner uses this to push partitioning/ordering
+        properties through projections; computed columns provide nothing.
+        """
+        return {name: e.name for name, e in self.cols.items()
+                if isinstance(e, ColRef)}
+
     def with_children(self, children):
         n = replace(self)
         n.child = children[0]

@@ -1,16 +1,22 @@
-"""Lowering: optimized logical plan -> ONE jitted SPMD program.
+"""Lowering: optimized logical plan -> physical plan -> ONE jitted SPMD program.
 
 This is where the paper's end-to-end claim is realized: the entire plan —
 relational operators, window analytics, UDFs and free array computation —
 executes inside a single ``jax.shard_map`` region under a single ``jax.jit``,
 so XLA fuses across relational boundaries exactly as CGen+icc fused the
 generated C++.  There is no runtime scheduler and no master (paper §2.2).
+
+The per-shard program is no longer derived node-by-node from the logical
+plan: lowering first runs the property-driven physical planner
+(core/physical_plan.py), which decides where hash exchanges and local sorts
+are actually REQUIRED, and this module merely executes the resulting op list.
+Capacity planning also lives with the physical plan — an elided exchange
+means smaller buffers, not just fewer collectives.
 """
 from __future__ import annotations
 
 import functools
-import math
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass
 from typing import Any
 
 import jax
@@ -20,6 +26,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from . import distribution as D
 from . import ir, physical as phys
+from . import physical_plan as pp
 from .compat import shard_map as _compat_shard_map
 from .expr import ExternalArray, evaluate
 from .table import DTable, block_counts, pad_to
@@ -46,6 +53,10 @@ class ExecConfig:
     broadcast_join: bool = True       # beyond-paper: REP side joins without shuffle
     use_kernels: bool = False         # route hot loops through Pallas kernels
     optimize_plan: bool = True
+    # property-driven exchange/sort elision (core/physical_plan.py); False
+    # restores the exchange-per-operator baseline — the A/B lever for
+    # benchmarks and a safety valve.
+    elide_exchanges: bool = True
     # capacity-overflow auto-retry (runtime/ft.py semantics, built into
     # collect): replan with doubled expansion, at most this many times.
     auto_retry: int = 3
@@ -58,85 +69,19 @@ class ExecConfig:
 
 
 # ---------------------------------------------------------------------------
-# capacity planner
-# ---------------------------------------------------------------------------
-
-
-@dataclass
-class NodePlan:
-    cap: int                          # per-shard row capacity of the output
-    shuffle_bucket: int = 0           # per-(src,dst) bucket capacity, if shuffles
-    shuffle_cap: int = 0              # post-shuffle capacity, if shuffles
-
-
-def _ceil_div(a: int, b: int) -> int:
-    return -(-a // b)
-
-
-def plan_capacities(order: list[ir.Node], dists: dict[int, str], P_: int,
-                    cfg: ExecConfig, source_rows: dict[int, int]) -> dict[int, NodePlan]:
-    plans: dict[int, NodePlan] = {}
-
-    def shuffle_plan(cap_in: int, global_rows: int) -> tuple[int, int]:
-        if cfg.safe_capacities:
-            bucket = cap_in
-            out = min(global_rows, P_ * bucket)
-        else:
-            bucket = max(32, _ceil_div(int(cap_in * cfg.shuffle_slack), P_))
-            out = max(32, int(cap_in * cfg.shuffle_slack))
-        return bucket, out
-
-    for n in order:
-        if isinstance(n, ir.Scan):
-            rows = source_rows[n.id]
-            cap = rows if dists[n.id] == D.REP else max(1, _ceil_div(rows, P_))
-            plans[n.id] = NodePlan(cap=cap)
-        elif isinstance(n, (ir.Filter, ir.Project, ir.Window)):
-            plans[n.id] = NodePlan(cap=plans[n.child.id].cap)
-        elif isinstance(n, ir.Join):
-            lcap, rcap = plans[n.left.id].cap, plans[n.right.id].cap
-            lb, lo = shuffle_plan(lcap, lcap * P_)
-            rb, ro = shuffle_plan(rcap, rcap * P_)
-            if dists[n.right.id] == D.REP and cfg.broadcast_join:
-                lo, ro = lcap, rcap             # no shuffle at all
-                lb = rb = 0
-            out = int(max(cfg.join_expansion, 1.0) * (lo + ro))
-            plans[n.id] = NodePlan(cap=max(out, 1), shuffle_bucket=max(lb, rb),
-                                   shuffle_cap=max(lo, ro))
-            plans[(n.id, "l")] = NodePlan(cap=lo, shuffle_bucket=lb)   # type: ignore
-            plans[(n.id, "r")] = NodePlan(cap=ro, shuffle_bucket=rb)   # type: ignore
-        elif isinstance(n, ir.Aggregate):
-            ccap = plans[n.child.id].cap
-            b, o = shuffle_plan(ccap, ccap * P_)
-            plans[n.id] = NodePlan(cap=o, shuffle_bucket=b, shuffle_cap=o)
-        elif isinstance(n, ir.Concat):
-            plans[n.id] = NodePlan(cap=sum(plans[c.id].cap for c in n.parts))
-        elif isinstance(n, ir.Rebalance):
-            ccap = plans[n.child.id].cap
-            plans[n.id] = NodePlan(cap=ccap, shuffle_bucket=ccap, shuffle_cap=ccap)
-        elif isinstance(n, ir.Sort):
-            ccap = plans[n.child.id].cap
-            b, o = shuffle_plan(ccap, ccap * P_)
-            plans[n.id] = NodePlan(cap=o, shuffle_bucket=b, shuffle_cap=o)
-        else:
-            raise TypeError(n)
-    return plans
-
-
-# ---------------------------------------------------------------------------
 # executor
 # ---------------------------------------------------------------------------
 
 
 class Lowered:
-    """A compiled plan: callable on (possibly fresh) source arrays."""
+    """A compiled physical plan: callable on (possibly fresh) source arrays."""
 
     def __init__(self, root: ir.Node, cfg: ExecConfig, dists: dict[int, str],
-                 plans: dict[int, NodePlan], kernels: dict | None = None):
+                 pplan: pp.PhysicalPlan, kernels: dict | None = None):
         self.root = root
         self.cfg = cfg
         self.dists = dists
-        self.plans = plans
+        self.pplan = pplan
         self.kernels = kernels or {}
         self.mesh = cfg.get_mesh()
         self.P = int(np.prod([self.mesh.shape[a] for a in cfg.axes]))
@@ -154,7 +99,7 @@ class Lowered:
                     if isinstance(sub, ExternalArray):
                         exts[sub.tag] = sub.array
                         child = n.children[0] if n.children else n
-                        ext_caps[sub.tag] = self.plans[child.id].cap
+                        ext_caps[sub.tag] = self.pplan.final_op(child).cap
         self._ext_caps = ext_caps
         return scans, exts
 
@@ -162,7 +107,6 @@ class Lowered:
         cfg, mesh, axes = self.cfg, self.mesh, self.cfg.axes
         scans, exts = self._gather_inputs()
         self.scans, self.exts = scans, exts
-        Pn = self.P
 
         in_specs = {"scans": {}, "ext": {}}
         for s in scans:
@@ -176,92 +120,157 @@ class Lowered:
                      "count": P(axes), "overflow": P(axes)}
 
         root = self.root
-        dists, plans = self.dists, self.plans
-        scan_rows = {str(s.id): None for s in scans}  # bound at call time
+        pplan = self.pplan
+        kernels = self.kernels
 
         def per_shard(inputs):
             rank = phys.my_rank(axes)
-            outputs: dict[int, tuple[dict, Any]] = {}
+            env: dict[int, tuple[dict, Any]] = {}
             flags = []
+            ext = {f"ext:{t}": v for t, v in inputs["ext"].items()}
+            pfn = kernels.get("hash_partition")
+            sfn = kernels.get("prefix_sum")
 
-            for n in ir.topo_order(root):
-                if isinstance(n, ir.Scan):
+            for op in pplan.ops:
+                n = op.node
+                ax = axes if op.dist != D.REP else ()
+
+                if isinstance(op, pp.Source):
                     cols = inputs["scans"][str(n.id)]
                     rows = inputs["rows"][str(n.id)]       # static int
-                    cap = plans[n.id].cap
-                    if dists[n.id] == D.REP:
+                    if op.dist == D.REP:
                         cnt = jnp.int32(rows)
                     else:
-                        cnt = jnp.clip(rows - rank * cap, 0, cap).astype(jnp.int32)
-                    outputs[n.id] = (dict(cols), cnt)
-                elif isinstance(n, ir.Filter):
-                    cols, cnt = outputs[n.child.id]
-                    env = dict(cols)
-                    env.update({f"ext:{t}": v for t, v in inputs["ext"].items()})
-                    pred = evaluate(n.pred, env)
-                    keep = pred & phys.valid_mask(cnt, next(iter(cols.values())).shape[0])
-                    out, cnt2, ovf = phys.compact(cols, keep, plans[n.id].cap,
-                                                  prefix_fn=self.kernels.get("prefix_sum"))
+                        cnt = jnp.clip(rows - rank * op.cap, 0,
+                                       op.cap).astype(jnp.int32)
+                    res = (dict(cols), cnt)
+
+                elif isinstance(op, pp.Compact):
+                    cols, cnt = env[op.inputs[0]]
+                    env_e = dict(cols)
+                    env_e.update(ext)
+                    pred = evaluate(n.pred, env_e)
+                    keep = pred & phys.valid_mask(
+                        cnt, next(iter(cols.values())).shape[0])
+                    out, cnt2, ovf = phys.compact(cols, keep, op.cap,
+                                                  prefix_fn=sfn)
                     flags.append(ovf)
-                    outputs[n.id] = (out, cnt2)
-                elif isinstance(n, ir.Project):
-                    cols, cnt = outputs[n.child.id]
-                    env = dict(cols)
-                    env.update({f"ext:{t}": v for t, v in inputs["ext"].items()})
+                    res = (out, cnt2)
+
+                elif isinstance(op, pp.Map):
+                    cols, cnt = env[op.inputs[0]]
+                    env_e = dict(cols)
+                    env_e.update(ext)
                     cache: dict = {}
                     out = {}
                     for name, e in n.cols.items():
-                        v = evaluate(e, env, cache)
+                        v = evaluate(e, env_e, cache)
                         cap = next(iter(cols.values())).shape[0]
                         out[name] = jnp.broadcast_to(v, (cap,)) if v.ndim == 0 else v
-                    outputs[n.id] = (out, cnt)
-                elif isinstance(n, ir.Join):
-                    outputs[n.id] = self._lower_join(n, outputs, inputs, flags, axes)
-                elif isinstance(n, ir.Aggregate):
-                    outputs[n.id] = self._lower_aggregate(n, outputs, inputs, flags, axes)
-                elif isinstance(n, ir.Window):
-                    cols, cnt = outputs[n.child.id]
-                    env = dict(cols)
-                    env.update({f"ext:{t}": v for t, v in inputs["ext"].items()})
-                    x = evaluate(n.expr, env)
-                    ax = axes if dists[n.id] != D.REP else ()
+                    res = (out, cnt)
+
+                elif isinstance(op, pp.WindowOp):
+                    cols, cnt = env[op.inputs[0]]
+                    env_e = dict(cols)
+                    env_e.update(ext)
+                    x = evaluate(n.expr, env_e)
                     if n.kind == "cumsum":
-                        col = phys.dist_cumsum(x, cnt, ax, method=cfg.exscan_method,
-                                               prefix_fn=self.kernels.get("prefix_sum"))
+                        col = phys.dist_cumsum(x, cnt, ax,
+                                               method=cfg.exscan_method,
+                                               prefix_fn=sfn)
                     else:
                         col = phys.stencil1d(x, cnt, n.weights, n.center, ax,
-                                             kernel_fn=self.kernels.get("stencil1d"))
+                                             kernel_fn=kernels.get("stencil1d"))
                     out = dict(cols)
                     out[n.out] = col
-                    outputs[n.id] = (out, cnt)
-                elif isinstance(n, ir.Concat):
-                    parts = [outputs[c.id] for c in n.parts]
-                    out, cnt, ovf = phys.concat(parts, plans[n.id].cap)
-                    flags.append(ovf)
-                    outputs[n.id] = (out, cnt)
-                elif isinstance(n, ir.Rebalance):
-                    cols, cnt = outputs[n.child.id]
-                    pl = plans[n.id]
-                    out, cnt2, ovf = phys.rebalance(
-                        cols, cnt, axes=axes, bucket_cap=pl.shuffle_bucket,
-                        cap_out=pl.cap,
-                        partition_fn=self.kernels.get("hash_partition"),
-                        prefix_fn=self.kernels.get("prefix_sum"))
-                    flags.append(ovf)
-                    outputs[n.id] = (out, cnt2)
-                elif isinstance(n, ir.Sort):
-                    cols, cnt = outputs[n.child.id]
-                    pl = plans[n.id]
-                    ax = axes if dists[n.id] != D.REP else ()
-                    out, cnt2, ovf = phys.sample_sort(
-                        cols, cnt, n.by, axes=ax, bucket_cap=pl.shuffle_bucket,
-                        cap_out=pl.cap, ascending=n.ascending)
-                    flags.append(ovf)
-                    outputs[n.id] = (out, cnt2)
-                else:
-                    raise TypeError(n)
+                    res = (out, cnt)
 
-            cols, cnt = outputs[root.id]
+                elif isinstance(op, pp.HashExchange):
+                    cols, cnt = env[op.inputs[0]]
+                    out, cnt2, ovf = phys.shuffle_by_key(
+                        cols, cnt, op.keys, axes=axes,
+                        bucket_cap=op.bucket, cap_out=op.cap,
+                        partition_fn=pfn, prefix_fn=sfn)
+                    flags.append(ovf)
+                    res = (out, cnt2)
+
+                elif isinstance(op, pp.LocalSort):
+                    cols, cnt = env[op.inputs[0]]
+                    out, _ = phys.local_sort(cols, cnt, op.keys)
+                    res = (out, cnt)
+
+                elif isinstance(op, pp.MergeJoin):
+                    lcols, lcnt = env[op.inputs[0]]
+                    rcols, rcnt = env[op.inputs[1]]
+                    smap = {c: n.right_out_name(c) for c in rcols
+                            if c not in n.right_on}
+                    out, cnt2, ovf = phys.merge_join(
+                        lcols, lcnt, rcols, rcnt, n.left_on, n.right_on,
+                        cap_out=op.cap, r_suffix_map=smap, how=n.how)
+                    flags.append(ovf)
+                    res = (out, cnt2)
+
+                elif isinstance(op, pp.AggPrep):
+                    cols, cnt = env[op.inputs[0]]
+                    env_e = dict(cols)
+                    env_e.update(ext)
+                    cache = {}
+                    key0 = cols[n.key[0]]
+                    out = {k: cols[k] for k in n.key}
+                    for name, agg in n.aggs.items():
+                        arr = (evaluate(agg.expr, env_e, cache)
+                               if agg.expr is not None
+                               else jnp.zeros_like(key0, dtype=jnp.int32))
+                        if arr.ndim == 0:
+                            arr = jnp.broadcast_to(arr, key0.shape)
+                        out["__v_" + name] = arr
+                    res = (out, cnt)
+
+                elif isinstance(op, pp.SegmentAgg):
+                    cols, cnt = env[op.inputs[0]]
+                    values = {name: (agg.fn, cols["__v_" + name])
+                              for name, agg in n.aggs.items()}
+                    keys = tuple(cols[k] for k in n.key)
+                    out, n_seg, ovf = phys.segment_aggregate(
+                        keys, cnt, values, cap_out=op.cap,
+                        segsum_fn=kernels.get("segment_sums"))
+                    flags.append(ovf)
+                    # key columns come back as __key<i>__ in key order;
+                    # restore names, keeping them FIRST (schema order).
+                    renamed = {k: out.pop(f"__key{i}__")
+                               for i, k in enumerate(n.key)}
+                    renamed.update(out)
+                    res = (renamed, n_seg)
+
+                elif isinstance(op, pp.SampleSort):
+                    cols, cnt = env[op.inputs[0]]
+                    out, cnt2, ovf = phys.sample_sort(
+                        cols, cnt, n.by, axes=ax, bucket_cap=op.bucket,
+                        cap_out=op.cap, ascending=n.ascending,
+                        pre_sorted=op.pre_sorted)
+                    flags.append(ovf)
+                    res = (out, cnt2)
+
+                elif isinstance(op, pp.RebalanceOp):
+                    cols, cnt = env[op.inputs[0]]
+                    out, cnt2, ovf = phys.rebalance(
+                        cols, cnt, axes=axes, bucket_cap=op.bucket,
+                        cap_out=op.cap, partition_fn=pfn, prefix_fn=sfn)
+                    flags.append(ovf)
+                    res = (out, cnt2)
+
+                elif isinstance(op, pp.ConcatOp):
+                    parts = [env[i] for i in op.inputs]
+                    out, cnt, ovf = phys.concat(parts, op.cap)
+                    flags.append(ovf)
+                    res = (out, cnt)
+
+                else:
+                    raise TypeError(op)
+
+                env[op.op_id] = res
+
+            cols, cnt = env[pplan.root_id]
             ovf = functools.reduce(jnp.logical_or, flags, jnp.array(False))
             return {"cols": {k: cols[k] for k in root.schema},
                     "count": cnt.reshape(1),
@@ -271,82 +280,6 @@ class Lowered:
         self._per_shard = per_shard
         self._in_specs = in_specs
         self._out_specs = out_specs
-
-    # -- join / aggregate lowerings (need multiple steps) ---------------------
-
-    def _lower_join(self, n: ir.Join, outputs, inputs, flags, axes):
-        cfg, plans, dists = self.cfg, self.plans, self.dists
-        lcols, lcnt = outputs[n.left.id]
-        rcols, rcnt = outputs[n.right.id]
-        pl_l = plans[(n.id, "l")]
-        pl_r = plans[(n.id, "r")]
-        broadcast = dists[n.right.id] == D.REP and cfg.broadcast_join
-        rep_join = dists[n.id] == D.REP and not broadcast
-        if not broadcast and not rep_join:
-            pfn = self.kernels.get("hash_partition")
-            sfn = self.kernels.get("prefix_sum")
-            lcols, lcnt, o1 = phys.shuffle_by_key(
-                lcols, lcnt, n.left_on, axes=axes,
-                bucket_cap=pl_l.shuffle_bucket, cap_out=pl_l.cap,
-                partition_fn=pfn, prefix_fn=sfn)
-            rcols, rcnt, o2 = phys.shuffle_by_key(
-                rcols, rcnt, n.right_on, axes=axes,
-                bucket_cap=pl_r.shuffle_bucket, cap_out=pl_r.cap,
-                partition_fn=pfn, prefix_fn=sfn)
-            flags += [o1, o2]
-        lcols, _ = phys.local_sort(lcols, lcnt, n.left_on)
-        rcols, _ = phys.local_sort(rcols, rcnt, n.right_on)
-        smap = {c: n.right_out_name(c) for c in rcols if c not in n.right_on}
-        out, cnt, ovf = phys.merge_join(
-            lcols, lcnt, rcols, rcnt, n.left_on, n.right_on,
-            cap_out=plans[n.id].cap, r_suffix_map=smap, how=n.how)
-        flags.append(ovf)
-        return out, cnt
-
-    def _lower_aggregate(self, n: ir.Aggregate, outputs, inputs, flags, axes):
-        plans, dists = self.plans, self.dists
-        cols, cnt = outputs[n.child.id]
-        env = dict(cols)
-        env.update({f"ext:{t}": v for t, v in inputs["ext"].items()})
-        cache: dict = {}
-        vals: dict[str, tuple[str, Any]] = {}
-        nunique_col = None
-        key0 = cols[n.key[0]]
-        for name, agg in n.aggs.items():
-            arr = (evaluate(agg.expr, env, cache) if agg.expr is not None
-                   else jnp.zeros_like(key0, dtype=jnp.int32))
-            if arr.ndim == 0:
-                arr = jnp.broadcast_to(arr, key0.shape)
-            vals[name] = (agg.fn, arr)
-            if agg.fn == "nunique":
-                if nunique_col is not None:
-                    raise NotImplementedError("one nunique per aggregate")
-                nunique_col = name
-        pl = plans[n.id]
-        key_names = tuple(f"__k{i}" for i in range(len(n.key)))
-        shuf_cols = {kn: cols[k] for kn, k in zip(key_names, n.key)}
-        for name, (_fn, arr) in vals.items():
-            shuf_cols["v_" + name] = arr
-        if dists[n.id] != D.REP:
-            shuf_cols, cnt, ovf = phys.shuffle_by_key(
-                shuf_cols, cnt, key_names, axes=axes,
-                bucket_cap=pl.shuffle_bucket, cap_out=pl.shuffle_cap,
-                partition_fn=self.kernels.get("hash_partition"),
-                prefix_fn=self.kernels.get("prefix_sum"))
-            flags.append(ovf)
-        extra = ("v_" + nunique_col,) if nunique_col else ()
-        sorted_cols, skeys = phys.local_sort(shuf_cols, cnt, key_names,
-                                             extra_keys=extra)
-        values = {name: (fn, sorted_cols["v_" + name]) for name, (fn, _a) in vals.items()}
-        out, n_seg, ovf = phys.segment_aggregate(
-            skeys, cnt, values, cap_out=pl.cap,
-            segsum_fn=self.kernels.get("segment_sums"))
-        flags.append(ovf)
-        # key columns come back as __key<i>__ in key order; restore names
-        # while keeping them FIRST in the output dict (schema order).
-        renamed = {k: out.pop(f"__key{i}__") for i, k in enumerate(n.key)}
-        renamed.update(out)
-        return renamed, n_seg
 
     # -- public call -----------------------------------------------------------
 
@@ -362,7 +295,7 @@ class Lowered:
         for s in self.scans:
             src = (scan_arrays or {}).get(str(s.id), s.columns)
             rows = len(next(iter(src.values())))
-            cap = self.plans[s.id].cap
+            cap = self.pplan.final_op(s).cap
             rep = self.dists[s.id] == D.REP
             n_pad = rows if rep else Pn * cap
             inputs["scans"][str(s.id)] = {
@@ -400,7 +333,7 @@ class Lowered:
         """Execute.  scan_arrays overrides source columns by scan id (str)."""
         fn, inputs = self._prepare(scan_arrays)
         out = fn(inputs["scans"], inputs["ext"])
-        cap = self.plans[self.root.id].cap
+        cap = self.pplan.root_op.cap
         return DTable(columns=out["cols"], counts=out["count"],
                       capacity=cap, nshards=self.P, dist=self.dists[self.root.id],
                       overflow=bool(np.any(np.asarray(out["overflow"]))))
@@ -429,7 +362,8 @@ def lower(root: ir.Node, cfg: ExecConfig | None = None,
           keep: set[str] | None = None, collect_block: bool = False,
           force_rep: set[int] = frozenset(), kernels: dict | None = None
           ) -> tuple[Lowered, dict]:
-    """optimize -> infer distributions -> insert rebalance -> build executor."""
+    """optimize -> infer distributions -> insert rebalance -> plan physical
+    ops (exchange/sort elision) -> plan capacities -> build executor."""
     from . import optimizer as opt
 
     cfg = cfg or ExecConfig()
@@ -444,8 +378,9 @@ def lower(root: ir.Node, cfg: ExecConfig | None = None,
     order = ir.topo_order(root)
     source_rows = {n.id: len(next(iter(n.columns.values())))
                    for n in order if isinstance(n, ir.Scan)}
-    plans = plan_capacities(order, info.dists, Pn, cfg, source_rows)
+    pplan = pp.plan_physical(root, info.dists, cfg)
+    pp.plan_capacities(pplan, Pn, cfg, source_rows)
     if kernels is None and cfg.use_kernels:
         from .. import kernels as K
         kernels = K.kernel_table()
-    return Lowered(root, cfg, info.dists, plans, kernels=kernels), stats
+    return Lowered(root, cfg, info.dists, pplan, kernels=kernels), stats

@@ -14,6 +14,15 @@ Rules implemented (fixed-point, bottom-up):
   * push predicate through join (the paper's flagship, Fig. 6)
   * push predicate through concat
   * column pruning            narrow Scans/Projects to live columns
+  * redundant-sort removal    Sort(Sort(x,K1),K2) -> Sort(x,K2) when K1 is a
+                              prefix of K2 (stability makes them identical);
+                              Aggregate(Sort(x)) -> Aggregate(x) unless an
+                              order-sensitive agg ("first") consumes the order
+
+The logical sort rules complement the PHYSICAL exchange/sort elision in
+core/physical_plan.py: the optimizer removes sorts whose *result* is
+unobservable, the physical planner skips sorts/exchanges whose *effect* is
+already provided by upstream data placement.
 """
 from __future__ import annotations
 
@@ -193,6 +202,12 @@ def prune_columns(root: ir.Node, keep: set[str] | None = None) -> tuple[ir.Node,
                 pruned += len(n.columns) - len(live)
                 out = ir.Scan(n.name, live,
                               {k: v for k, v in n._schema.items() if k in live})
+                # keep the source's identity: distribution pins (force_rep
+                # from DataFrame.replicate()) are id-based, and only SOURCE
+                # pins are load-bearing — interior nodes re-derive REP via
+                # the lattice meet.  Without this, pruning a broadcast
+                # dimension table silently un-broadcasts it.
+                out.id = n.id
             else:
                 out = n
         else:
@@ -216,16 +231,66 @@ def prune_columns(root: ir.Node, keep: set[str] | None = None) -> tuple[ir.Node,
 
 
 # ---------------------------------------------------------------------------
+# redundant sorts (order destroyed or re-established downstream)
+# ---------------------------------------------------------------------------
+
+
+def drop_redundant_sorts(root: ir.Node) -> tuple[ir.Node, int]:
+    """Remove Sort nodes whose effect is unobservable.
+
+    * ``Sort(Sort(x, K1, asc), K2, asc)`` == ``Sort(x, K2, asc)`` when K1 is
+      a prefix of K2: the outer stable sort re-establishes exactly the order
+      the inner one contributed (ties on K2 are ties on K1, and stability
+      reduces them to input order either way).
+    * ``Aggregate(Sort(x), key)`` == ``Aggregate(x, key)``: aggregation is
+      order-insensitive — EXCEPT for ``first``, which reads the in-group
+      arrival order and pins the sort.
+
+    Bypassing is per-edge, so a Sort shared with another consumer still runs
+    for that consumer.
+    """
+    dropped = 0
+    memo: dict[int, ir.Node] = {}
+
+    def rec(n: ir.Node) -> ir.Node:
+        nonlocal dropped
+        if n.id in memo:
+            return memo[n.id]
+        new_children = tuple(rec(c) for c in n.children)
+        out = n if new_children == n.children else n.with_children(new_children)
+        if isinstance(out, ir.Sort):
+            c = out.child
+            if (isinstance(c, ir.Sort) and c.ascending == out.ascending
+                    and c.by == out.by[: len(c.by)]):
+                out = out.with_children((c.child,))
+                dropped += 1
+        elif isinstance(out, ir.Aggregate):
+            c = out.child
+            if (isinstance(c, ir.Sort)
+                    and not any(a.fn == "first" for a in out.aggs.values())):
+                out = out.with_children((c.child,))
+                dropped += 1
+        memo[n.id] = out
+        return out
+
+    return rec(root), dropped
+
+
+# ---------------------------------------------------------------------------
 # driver
 # ---------------------------------------------------------------------------
 
 
 def optimize(root: ir.Node, keep: set[str] | None = None,
-             enable: tuple[str, ...] = ("pushdown", "prune")) -> tuple[ir.Node, dict]:
-    stats = {"pushdown": 0, "pruned_columns": 0}
+             enable: tuple[str, ...] = ("pushdown", "sorts", "prune")
+             ) -> tuple[ir.Node, dict]:
+    stats = {"pushdown": 0, "pruned_columns": 0, "sorts_dropped": 0}
     if "pushdown" in enable:
         root, k = push_predicates(root)
         stats["pushdown"] = k
+    if "sorts" in enable:
+        root, s = drop_redundant_sorts(root)
+        stats["sorts_dropped"] = s
     if "prune" in enable:
         root, p = prune_columns(root, keep)
         stats["pruned_columns"] = p

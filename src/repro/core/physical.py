@@ -190,31 +190,29 @@ def shuffle_by_key(cols: dict[str, jax.Array], count, key_names, *,
 # local sort (bitonic via lax.sort — the TPU-native Timsort replacement)
 # ---------------------------------------------------------------------------
 
-def local_sort(cols: dict[str, jax.Array], count, key_names,
-               extra_keys: Sequence[str] = ()):
+def local_sort(cols: dict[str, jax.Array], count, key_names):
     """Stable lexicographic sort of valid rows by one or more key columns
     (padding sorts to the end via per-dtype max sentinels).
 
     ``key_names`` is a column name or a sequence of names (most-significant
-    first); ``lax.sort`` with ``num_keys=len(keys)+len(extra)+1`` does the
-    multi-key comparison natively on TPU.  Returns ``(sorted_cols, skeys)``
-    where ``skeys`` is the tuple of SENTINEL-MASKED sorted key arrays (one
-    per name in ``key_names``) used for run-boundary detection downstream.
+    first); ``lax.sort`` with ``num_keys=len(keys)+1`` does the multi-key
+    comparison natively on TPU.  Returns ``(sorted_cols, skeys)`` where
+    ``skeys`` is the tuple of SENTINEL-MASKED sorted key arrays (one per name
+    in ``key_names``) used for splitter sampling downstream.
     """
     if isinstance(key_names, str):
         key_names = (key_names,)
     key_names = tuple(key_names)
     cap = cols[key_names[0]].shape[0]
     valid = valid_mask(count, cap)
-    keys = []
-    for kn in (*key_names, *extra_keys):
-        keys.append(jnp.where(valid, cols[kn], _sentinel(cols[kn].dtype)))
+    keys = [jnp.where(valid, cols[kn], _sentinel(cols[kn].dtype))
+            for kn in key_names]
     # stable tiebreaker: original index
     keys.append(jnp.arange(cap, dtype=jnp.int32))
     names = list(cols)
     operands = keys + [cols[n] for n in names]
     res = lax.sort(tuple(operands), num_keys=len(keys))
-    sorted_keys = dict(zip((*key_names, *extra_keys), res[: len(keys) - 1]))
+    sorted_keys = dict(zip(key_names, res[: len(keys) - 1]))
     sorted_cols = dict(zip(names, res[len(keys):]))
     # masked key columns come back with sentinels; restore real values where valid
     for kn, kv in sorted_keys.items():
@@ -223,52 +221,52 @@ def local_sort(cols: dict[str, jax.Array], count, key_names,
 
 
 # ---------------------------------------------------------------------------
-# merge join (sort-merge with searchsorted expansion; duplicate keys OK)
+# merge join (rank join: one fused union sort; inputs need NOT be pre-sorted)
 # ---------------------------------------------------------------------------
 
-def _rank_keys(lks: tuple, lvalid, rks: tuple, rvalid):
-    """Dense lexicographic ranks of composite keys over the union of sides.
 
-    Concatenates both sides' key columns, sorts the tuples once
-    (``lax.sort`` multi-key), detects run boundaries, and scatters the dense
-    rank back to each row's original position.  Equal key tuples — across
-    sides — share a rank and rank order equals lexicographic tuple order, so
-    the single-key searchsorted merge machinery applies unchanged to the
-    rank arrays.  Invalid rows get the int32 max sentinel (sorts/searches to
-    the end, matching the single-key sentinel convention).
+def lex_ranks(keycols: Sequence[jax.Array], valid: jax.Array):
+    """Dense lexicographic ranks of row tuples via ONE multi-key sort.
+
+    Sorts the tuples (``lax.sort`` with a stable index tiebreaker), detects
+    run boundaries, and scatters the dense rank back to each row's original
+    position.  Equal tuples share a rank and rank order equals lexicographic
+    tuple order.  Invalid rows carry per-dtype max sentinels (they sort to
+    the end) and get the int32 max sentinel rank.
+
+    Returns ``(ranks, sidx, rank_sorted)``: per-original-row ranks, the
+    original indices in sorted order, and the rank sequence in sorted order —
+    the latter two let callers recover a key-sorted permutation without a
+    second sort (merge join, sample-sort splitter routing).
     """
-    L, R = lks[0].shape[0], rks[0].shape[0]
-    n = L + R
-    valid = jnp.concatenate([lvalid, rvalid])
-    keycols = []
-    for lk, rk in zip(lks, rks):
-        dt = jnp.promote_types(lk.dtype, rk.dtype)
-        both = jnp.concatenate([lk.astype(dt), rk.astype(dt)])
-        keycols.append(jnp.where(valid, both, _sentinel(dt)))
+    n = keycols[0].shape[0]
+    masked = [jnp.where(valid, k, _sentinel(k.dtype)) for k in keycols]
     idx = jnp.arange(n, dtype=jnp.int32)
-    res = lax.sort(tuple(keycols) + (idx,), num_keys=len(keycols) + 1)
+    res = lax.sort(tuple(masked) + (idx,), num_keys=len(masked) + 1)
     sk, sidx = res[:-1], res[-1]
-    neq = functools.reduce(jnp.logical_or,
-                           [k[1:] != k[:-1] for k in sk])
+    neq = functools.reduce(jnp.logical_or, [k[1:] != k[:-1] for k in sk])
     boundary = jnp.concatenate([jnp.full((1,), True), neq])
     rank_sorted = jnp.cumsum(boundary.astype(jnp.int32)) - 1
     ranks = jnp.zeros((n,), jnp.int32).at[sidx].set(rank_sorted)
     ranks = jnp.where(valid, ranks, _sentinel(jnp.int32))
-    return ranks[:L], ranks[L:]
+    return ranks, sidx, rank_sorted
 
 
 def merge_join(lcols, lcount, rcols, rcount, lkeys, rkeys, *,
                cap_out: int, r_suffix_map: dict[str, str], how: str = "inner"):
-    """Equi-join of two locally sorted shards (inner or left-outer) on one
-    or more key columns.
+    """Equi-join of two co-partitioned shards (inner or left-outer) on one
+    or more key columns.  Inputs do NOT need to be pre-sorted.
 
-    Expansion trick: per-left-row match counts -> prefix sums -> each output
-    slot s maps back to (left row, offset within its match range) with two
-    searchsorteds.  Left-outer: unmatched rows get count 1 and zero-filled
-    right columns plus a ``_matched`` indicator (the static-shape NULL).
-    Composite keys reduce to the single-key machinery via per-shard dense
-    lexicographic ranks (:func:`_rank_keys`).  Fully static shapes; overflow
-    flagged.
+    Both sides' key columns are concatenated and sorted ONCE as tuples
+    (:func:`lex_ranks`); the same sort yields (a) a dense rank per row and
+    (b) the right side's key-sorted permutation.  Expansion trick: per-left-
+    row match counts -> prefix sums -> each output slot s maps back to
+    (left row, offset within its match range) with two searchsorteds into
+    the rank arrays; matched right rows are gathered through the
+    permutation.  Output rows follow LEFT row order, so a sorted left input
+    yields key-sorted output.  Left-outer: unmatched rows get count 1 and
+    zero-filled right columns plus a ``_matched`` indicator (the
+    static-shape NULL).  Fully static shapes; overflow flagged.
     """
     if isinstance(lkeys, str):
         lkeys = (lkeys,)
@@ -279,15 +277,28 @@ def merge_join(lcols, lcount, rcols, rcount, lkeys, rkeys, *,
     rcap = rcols[rkeys[0]].shape[0]
     lvalid = valid_mask(lcount, lcap)
     rvalid = valid_mask(rcount, rcap)
-    if len(lkeys) == 1:
-        lk = jnp.where(lvalid, lcols[lkeys[0]], _sentinel(lcols[lkeys[0]].dtype))
-        rk = jnp.where(rvalid, rcols[rkeys[0]], _sentinel(rcols[rkeys[0]].dtype))
-    else:
-        lk, rk = _rank_keys(tuple(lcols[k] for k in lkeys), lvalid,
-                            tuple(rcols[k] for k in rkeys), rvalid)
 
-    lo = jnp.searchsorted(rk, lk, side="left")
-    hi = jnp.searchsorted(rk, lk, side="right")
+    valid = jnp.concatenate([lvalid, rvalid])
+    keycols = []
+    for lk, rk in zip(lkeys, rkeys):
+        la, ra = lcols[lk], rcols[rk]
+        dt = jnp.promote_types(la.dtype, ra.dtype)
+        keycols.append(jnp.concatenate([la.astype(dt), ra.astype(dt)]))
+    ranks, sidx, rank_sorted = lex_ranks(keycols, valid)
+    lrank = ranks[:lcap]
+
+    # right rows in key-sorted order, extracted from the SAME sort: a stable
+    # compaction of the sorted union down to right-side entries.
+    is_r = (sidx >= lcap).astype(jnp.int32)
+    pos_r = jnp.cumsum(is_r) - 1
+    scat = jnp.where(is_r > 0, pos_r, lcap + rcap)
+    rsorted_rank = jnp.full((rcap,), _sentinel(jnp.int32)) \
+        .at[scat].set(rank_sorted, mode="drop")
+    rperm = jnp.zeros((rcap,), jnp.int32) \
+        .at[scat].set((sidx - lcap).astype(jnp.int32), mode="drop")
+
+    lo = jnp.searchsorted(rsorted_rank, lrank, side="left")
+    hi = jnp.searchsorted(rsorted_rank, lrank, side="right")
     hi = jnp.minimum(hi, rcount)
     lo = jnp.minimum(lo, rcount)
     matches = (hi - lo).astype(jnp.int32)
@@ -304,8 +315,8 @@ def merge_join(lcols, lcount, rcols, rcount, lkeys, rkeys, *,
     li = jnp.searchsorted(incl, s, side="right")
     li_c = jnp.clip(li, 0, lcap - 1)
     matched = matches[li_c] > 0
-    ri = lo[li_c] + (s - excl[li_c])
-    ri_c = jnp.clip(ri, 0, rcap - 1)
+    rpos = lo[li_c] + (s - excl[li_c])          # position in key-sorted right
+    ri_c = rperm[jnp.clip(rpos, 0, rcap - 1)]   # original right row
     out_valid = s < jnp.minimum(total, cap_out)
     r_valid = out_valid & (matched if how == "left" else True)
 
@@ -328,14 +339,20 @@ def merge_join(lcols, lcount, rcols, rcount, lkeys, rkeys, *,
 
 def segment_aggregate(keys_sorted, count, values: dict[str, tuple[str, jax.Array]],
                       *, cap_out: int, segsum_fn=None):
-    """Aggregate ``values`` over runs of equal (sorted) composite keys.
+    """Aggregate ``values`` over runs of equal (grouped) composite keys.
 
-    ``keys_sorted`` is one sorted key array or a tuple of them (rows sorted
-    lexicographically); a new run starts where ANY key column differs from
-    the previous row.  values: name -> (fn, value_array) with fn in {sum,
-    mean, count, min, max, var, std, first, nunique}.  Returns
-    ``({__key0__..., **aggs}, n_groups, overflow)`` with one output column
-    per key, in key order, named ``__key<i>__``.
+    ``keys_sorted`` is one key array or a tuple of them; the valid prefix
+    must have equal key tuples CONTIGUOUS (sorted by a key prefix, either
+    direction — though ``nunique`` additionally requires ascending, see
+    below).  A new run starts where ANY key column differs from the previous
+    row.  values: name -> (fn, value_array) with fn in {sum, mean, count,
+    min, max, var, std, first, nunique}.  Any number of nunique columns is
+    supported: each one re-sorts (keys..., x) independently with one
+    ``lax.sort`` and counts within-run value boundaries; the aux sort is
+    ascending, so its group order matches the main segment order only for
+    ascending inputs (the physical planner inserts a LocalSort otherwise).
+    Returns ``({__key0__..., **aggs}, n_groups, overflow)`` with one output
+    column per key, in key order, named ``__key<i>__``.
     """
     if not isinstance(keys_sorted, (tuple, list)):
         keys_sorted = (keys_sorted,)
@@ -408,10 +425,22 @@ def segment_aggregate(keys_sorted, count, values: dict[str, tuple[str, jax.Array
                 seg_id, num_segments=cap_out + 1)[:cap_out]
             out[name] = x[jnp.clip(first_idx, 0, cap - 1)]
         elif fn == "nunique":
-            # x must be sorted within segments (lowering sorts by (key, x)).
-            vprev = jnp.concatenate([jnp.full((1,), True), x[1:] != x[:-1]])
-            boundary = (seg_start | vprev) & valid
-            out[name] = jax.ops.segment_sum(boundary.astype(jnp.int32), seg_id,
+            # independent aux sort by (keys..., x): groups x within each key
+            # run.  Group ORDER matches the main segment order because both
+            # enumerate distinct key tuples ascending (see docstring).
+            masked = [jnp.where(valid, k, _sentinel(k.dtype))
+                      for k in keys_sorted]
+            res = lax.sort(tuple(masked) + (x,), num_keys=len(masked) + 1)
+            sx = res[-1]
+            neq2 = functools.reduce(jnp.logical_or,
+                                    [k[1:] != k[:-1] for k in res[:-1]])
+            prev2 = jnp.concatenate([jnp.full((1,), True), neq2])
+            seg_start2 = valid & prev2          # valid rows stay a prefix
+            seg_id2 = jnp.cumsum(seg_start2.astype(jnp.int32)) - 1
+            seg_id2 = jnp.where(valid, seg_id2, cap_out)
+            vprev = jnp.concatenate([jnp.full((1,), True), sx[1:] != sx[:-1]])
+            boundary = (seg_start2 | vprev) & valid
+            out[name] = jax.ops.segment_sum(boundary.astype(jnp.int32), seg_id2,
                                             num_segments=cap_out + 1)[:cap_out]
         else:
             raise ValueError(fn)
@@ -561,38 +590,67 @@ def rebalance(cols: dict[str, jax.Array], count, *, axes: Axes,
 
 def sample_sort(cols: dict[str, jax.Array], count, key_names, *,
                 axes: Axes, bucket_cap: int, cap_out: int, n_samples: int = 64,
-                ascending: bool = True):
+                ascending: bool = True, pre_sorted: bool = False):
     """Global sort: local sort -> splitter selection -> route -> local sort.
 
     ``key_names`` may name several columns (lexicographic order, all
-    ascending or all descending).  Splitters are drawn from the FIRST
-    (most-significant) key only: rows that tie on it are co-located on one
-    shard by the side="right" search, and the final multi-key local sort
-    orders them — so the concatenation of shard prefixes is globally
-    lexicographically sorted without cross-shard composite comparisons.
+    ascending or all descending).  ``pre_sorted=True`` skips the first local
+    sort — the physical planner sets it when the input already provides the
+    required ordering.
+
+    Splitters are full key TUPLES sampled from every shard and sorted
+    lexicographically; rows route via dense lexicographic ranks over the
+    union of local rows and splitters (:func:`lex_ranks` — the same
+    machinery merge join uses), with a side="right" comparison so rows tying
+    with a splitter tuple co-locate.  Routing therefore balances on the
+    WHOLE key, not just the most-significant column: heavy skew on key0 with
+    varied minor keys spreads across shards instead of piling ties onto one
+    (the pre-composite-splitter failure mode).  Cross-shard order follows
+    the splitter tuples and within-shard order comes from the final
+    multi-key local sort, so the concatenation of shard prefixes is globally
+    lexicographically sorted.
     """
     if isinstance(key_names, str):
         key_names = (key_names,)
     key_names = tuple(key_names)
-    key0 = key_names[0]
     P = nshards(axes) if axes else 1
-    scols, skeys = local_sort(cols, count, key_names)
-    skey = skeys[0]
-    cap = skey.shape[0]
+    if pre_sorted:
+        scols = cols
+    else:
+        scols, _ = local_sort(cols, count, key_names)
+    cap = scols[key_names[0]].shape[0]
+    valid = valid_mask(count, cap)
     if P > 1:
-        # sample evenly from the valid prefix
+        # sample key tuples evenly from the valid prefix of every shard
         pos = (jnp.arange(n_samples, dtype=jnp.int32) *
                jnp.maximum(count, 1)) // n_samples
-        samples = jnp.where(count > 0, skey[jnp.clip(pos, 0, cap - 1)],
-                            _sentinel(skey.dtype))
-        allsamp = lax.all_gather(samples, axes).reshape(-1)   # (P*n,)
-        allsamp = jnp.sort(allsamp)
-        # P-1 splitters at even quantiles
-        qpos = (jnp.arange(1, P, dtype=jnp.int32) * allsamp.shape[0]) // P
-        splitters = allsamp[qpos]
-        key_vals = jnp.where(valid_mask(count, cap), scols[key0],
-                             _sentinel(skey.dtype))
-        dest = jnp.searchsorted(splitters, key_vals, side="right").astype(jnp.int32)
+        pos = jnp.clip(pos, 0, cap - 1)
+        allsamp = []
+        for kn in key_names:
+            kv = scols[kn]
+            samp = jnp.where(count > 0, kv[pos], _sentinel(kv.dtype))
+            allsamp.append(lax.all_gather(samp, axes).reshape(-1))   # (P*n,)
+        ssamp = lax.sort(tuple(allsamp), num_keys=len(allsamp)) \
+            if len(allsamp) > 1 else (jnp.sort(allsamp[0]),)
+        # P-1 splitter tuples at even quantiles
+        qpos = (jnp.arange(1, P, dtype=jnp.int32) * ssamp[0].shape[0]) // P
+        splitters = tuple(s[qpos] for s in ssamp)
+        if len(key_names) == 1:
+            key_vals = jnp.where(valid, scols[key_names[0]],
+                                 _sentinel(scols[key_names[0]].dtype))
+            dest = jnp.searchsorted(splitters[0], key_vals,
+                                    side="right").astype(jnp.int32)
+        else:
+            # dense ranks over rows ∪ splitters; splitter ranks ascend (the
+            # splitters are sorted), so a searchsorted on ranks IS the
+            # lexicographic tuple comparison.
+            joint = [jnp.concatenate([jnp.where(valid, scols[kn],
+                                                _sentinel(scols[kn].dtype)), sp])
+                     for kn, sp in zip(key_names, splitters)]
+            jvalid = jnp.concatenate([valid, jnp.full((P - 1,), True)])
+            ranks, _, _ = lex_ranks(joint, jvalid)
+            dest = jnp.searchsorted(ranks[cap:], ranks[:cap],
+                                    side="right").astype(jnp.int32)
         if not ascending:
             dest = (P - 1) - dest
     else:
@@ -602,7 +660,7 @@ def sample_sort(cols: dict[str, jax.Array], count, key_names, *,
     out, _ = local_sort(out, cnt, key_names)
     if not ascending:
         # reverse valid prefix
-        capo = out[key0].shape[0]
+        capo = out[key_names[0]].shape[0]
         idx = jnp.where(valid_mask(cnt, capo),
                         jnp.maximum(cnt - 1, 0) - jnp.arange(capo, dtype=jnp.int32),
                         jnp.arange(capo, dtype=jnp.int32))

@@ -1,0 +1,537 @@
+"""Property-driven physical planning — the exchange-elision layer.
+
+The logical plan (ir.py) says WHAT relational result to compute; the
+distribution pass (distribution.py) says WHERE rows may live (the lattice of
+paper §4.4).  This module decides HOW rows move: it walks the
+distribution-annotated logical plan and emits a linear physical plan of
+operators (HashExchange, LocalSort, MergeJoin, SegmentAgg, SampleSort,
+Compact, Map, ...), each carrying the *physical properties* its output
+provides:
+
+  * ``Partitioning`` — how rows are placed across shards:
+      - ``hash(keys)``  equal key TUPLES co-locate (value-deterministic
+        combined hash, so it aligns across tables),
+      - ``range(keys)`` equal key tuples co-locate and shards are globally
+        ordered (sample-sort output; splitters are data-dependent, so it
+        does NOT align across tables),
+      - ``rep``         every shard holds all rows,
+      - ``block``       no co-location guarantee (scans, rebalance).
+  * ``Ordering`` — the key prefix each shard's valid rows are sorted by.
+
+Exchanges and sorts are inserted only where a consumer's REQUIRED property is
+not already PROVIDED — the paper's "communicate only when the distribution
+analysis demands it" (§4.5–4.6) made explicit.  The satisfaction rules are
+deliberately conservative and composite-key-aware:
+
+  * co-location on K is satisfied by hash/range partitioning on S iff S is an
+    ordered subsequence of K (equal K-tuples are then equal S-tuples, hence
+    co-located).  A superset or reordering of K does NOT satisfy K.
+  * grouping/ordering on K is satisfied iff K is a prefix of the provided
+    ordering keys (order-sensitive).
+  * REP satisfies every co-location requirement (each shard is total).
+
+Capacity planning (static per-shard buffer sizes, DESIGN.md §2) also lives
+here and operates on physical ops: exchanges get (src,dst) buckets,
+pass-through ops inherit their input's capacity, and an elided exchange means
+the downstream op keeps the (smaller) local capacity.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+from . import distribution as D
+from . import ir
+
+
+# ---------------------------------------------------------------------------
+# physical properties
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Partitioning:
+    """Row placement across shards; ``keys`` only meaningful for hash/range."""
+
+    kind: str                       # "hash" | "range" | "rep" | "block"
+    keys: tuple[str, ...] = ()
+
+    def short(self) -> str:
+        return f"{self.kind}({','.join(self.keys)})" if self.keys else self.kind
+
+
+@dataclass(frozen=True)
+class Ordering:
+    """Per-shard valid-prefix sort order; () means unordered."""
+
+    keys: tuple[str, ...] = ()
+    ascending: bool = True
+
+    def short(self) -> str:
+        if not self.keys:
+            return "-"
+        return f"({','.join(self.keys)}){'' if self.ascending else ' desc'}"
+
+
+BLOCK = Partitioning("block")
+REPL = Partitioning("rep")
+UNORDERED = Ordering()
+
+
+def subsequence_indices(sub: tuple[str, ...],
+                        seq: tuple[str, ...]) -> Optional[tuple[int, ...]]:
+    """Indices I with seq[I] == sub (greedy), or None if not a subsequence."""
+    out = []
+    j = 0
+    for s in sub:
+        while j < len(seq) and seq[j] != s:
+            j += 1
+        if j == len(seq):
+            return None
+        out.append(j)
+        j += 1
+    return tuple(out)
+
+
+def colocates(part: Partitioning, keys: tuple[str, ...]) -> bool:
+    """Does ``part`` already co-locate rows with equal ``keys`` tuples?
+
+    hash/range partitioning on S co-locates K-groups iff S is an ordered
+    subsequence of K: equal K-tuples are equal on S (same column order), so
+    the value-deterministic routing sends them to one shard.  A superset or
+    reordering of K gives no such guarantee and is rejected.
+    """
+    if part.kind == "rep":
+        return True
+    if part.kind in ("hash", "range") and part.keys:
+        return subsequence_indices(part.keys, keys) is not None
+    return False
+
+
+def grouped(order: Ordering, keys: tuple[str, ...]) -> bool:
+    """Are equal ``keys`` tuples contiguous?  True iff keys is an ordering
+    prefix (rows sorted by a key prefix have contiguous key groups)."""
+    return len(order.keys) >= len(keys) and order.keys[: len(keys)] == keys
+
+
+# ---------------------------------------------------------------------------
+# physical operators
+# ---------------------------------------------------------------------------
+
+
+@dataclass(eq=False)
+class POp:
+    """Base physical operator.
+
+    ``node`` is the logical node this op realizes (inserted exchanges/sorts
+    anchor to their consumer).  ``cap``/``bucket`` are filled by
+    :func:`plan_capacities`.
+    """
+
+    node: ir.Node
+    inputs: tuple[int, ...]         # op ids
+    part: Partitioning
+    order: Ordering
+    dist: str                       # lattice element (axes selection)
+    op_id: int = -1                 # assigned by the plan
+    cap: int = 0
+    bucket: int = 0
+
+    def short(self) -> str:
+        return type(self).__name__
+
+
+@dataclass(eq=False)
+class Source(POp):
+    pass
+
+
+@dataclass(eq=False)
+class Compact(POp):
+    """Filter backend: predicate + stable compaction (no communication)."""
+
+
+@dataclass(eq=False)
+class Map(POp):
+    """Project: evaluate output expressions (no communication)."""
+
+
+@dataclass(eq=False)
+class WindowOp(POp):
+    """cumsum / stencil (exscan or halo exchange, row-preserving)."""
+
+
+@dataclass(eq=False)
+class HashExchange(POp):
+    keys: tuple[str, ...] = ()
+
+    def short(self):
+        return f"HashExchange({','.join(self.keys)})"
+
+
+@dataclass(eq=False)
+class LocalSort(POp):
+    keys: tuple[str, ...] = ()
+
+    def short(self):
+        return f"LocalSort({','.join(self.keys)})"
+
+
+@dataclass(eq=False)
+class MergeJoin(POp):
+    """Rank-based merge join of co-partitioned (NOT necessarily sorted)
+    inputs; one fused union sort internally (physical.merge_join)."""
+
+    broadcast: bool = False
+
+    def short(self):
+        n = self.node
+        pairs = ",".join(f"{l}=={r}" for l, r in zip(n.left_on, n.right_on))
+        return f"MergeJoin({pairs}{', broadcast' if self.broadcast else ''})"
+
+
+@dataclass(eq=False)
+class AggPrep(POp):
+    """Evaluate aggregation input expressions into __v_* columns and narrow
+    to key + value columns (keys keep their names: properties flow through)."""
+
+
+@dataclass(eq=False)
+class SegmentAgg(POp):
+    def short(self):
+        return f"SegmentAgg(by={','.join(self.node.key)})"
+
+
+@dataclass(eq=False)
+class SampleSort(POp):
+    pre_sorted: bool = False        # input already sorted: skip the pre-sort
+
+    def short(self):
+        n = self.node
+        tag = ", pre_sorted" if self.pre_sorted else ""
+        return f"SampleSort({','.join(n.by)}{'' if n.ascending else ' desc'}{tag})"
+
+
+@dataclass(eq=False)
+class RebalanceOp(POp):
+    pass
+
+
+@dataclass(eq=False)
+class ConcatOp(POp):
+    pass
+
+
+# ---------------------------------------------------------------------------
+# the plan
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class PhysicalPlan:
+    ops: list[POp] = field(default_factory=list)
+    op_of: dict[int, int] = field(default_factory=dict)  # logical id -> op id
+    root_id: int = -1
+
+    def add(self, op: POp) -> POp:
+        op.op_id = len(self.ops)
+        self.ops.append(op)
+        return op
+
+    @property
+    def root_op(self) -> POp:
+        return self.ops[self.root_id]
+
+    def final_op(self, node: ir.Node) -> POp:
+        return self.ops[self.op_of[node.id]]
+
+    def counts(self) -> dict[str, int]:
+        """Data-movement / sort census used by tests, explain and benches."""
+        c = {"hash_exchanges": 0, "local_sorts": 0, "sample_sorts": 0,
+             "rebalances": 0, "merge_joins": 0, "segment_aggs": 0}
+        for op in self.ops:
+            if isinstance(op, HashExchange):
+                c["hash_exchanges"] += 1
+            elif isinstance(op, LocalSort):
+                c["local_sorts"] += 1
+            elif isinstance(op, SampleSort):
+                c["sample_sorts"] += 1
+            elif isinstance(op, RebalanceOp):
+                c["rebalances"] += 1
+            elif isinstance(op, MergeJoin):
+                c["merge_joins"] += 1
+            elif isinstance(op, SegmentAgg):
+                c["segment_aggs"] += 1
+        return c
+
+    def shuffle_count(self) -> int:
+        """All-to-all communication rounds (hash + range + rebalance)."""
+        c = self.counts()
+        return c["hash_exchanges"] + c["sample_sorts"] + c["rebalances"]
+
+    def render(self) -> str:
+        c = self.counts()
+        lines = [f"physical plan: {self.shuffle_count()} shuffles "
+                 f"({c['hash_exchanges']} hash exchanges, "
+                 f"{c['sample_sorts']} sample sorts, "
+                 f"{c['rebalances']} rebalances), "
+                 f"{c['local_sorts']} local sorts"]
+        for op in self.ops:
+            src = ",".join(f"#{i}" for i in op.inputs)
+            cap = f" cap={op.cap}" if op.cap else ""
+            bkt = f" bucket={op.bucket}" if op.bucket else ""
+            lines.append(
+                f"  #{op.op_id} {op.short()}  <- [{src}]  "
+                f"part={op.part.short()} order={op.order.short()}"
+                f"  [{op.dist}]{cap}{bkt}")
+        return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# property transfer helpers
+# ---------------------------------------------------------------------------
+
+
+def _remap_props(part: Partitioning, order: Ordering,
+                 passthrough: dict[str, str]) -> tuple[Partitioning, Ordering]:
+    """Push properties through a projection.
+
+    ``passthrough`` maps output name -> input column for pure renames.
+    Partitioning survives iff EVERY partition key survives (renamed);
+    ordering keeps its longest surviving prefix (a dropped middle column
+    breaks lexicographic order below it).
+    """
+    inv: dict[str, str] = {}
+    for out_name, in_name in passthrough.items():
+        inv.setdefault(in_name, out_name)
+    new_part = part
+    if part.kind in ("hash", "range"):
+        if all(k in inv for k in part.keys):
+            new_part = Partitioning(part.kind, tuple(inv[k] for k in part.keys))
+        else:
+            new_part = BLOCK
+    prefix: list[str] = []
+    for k in order.keys:
+        if k not in inv:
+            break
+        prefix.append(inv[k])
+    new_order = Ordering(tuple(prefix), order.ascending) if prefix else UNORDERED
+    return new_part, new_order
+
+
+def _restrict_props(part: Partitioning, order: Ordering,
+                    surviving: set[str]) -> tuple[Partitioning, Ordering]:
+    """Properties after dropping every column not in ``surviving``."""
+    return _remap_props(part, order, {c: c for c in surviving})
+
+
+# ---------------------------------------------------------------------------
+# the planner
+# ---------------------------------------------------------------------------
+
+
+def plan_physical(root: ir.Node, dists: dict[int, str], cfg) -> PhysicalPlan:
+    """Walk the distribution-annotated logical plan; insert exchanges and
+    sorts only where a required property is not provided.
+
+    ``cfg`` is an ExecConfig (broadcast_join / elide_exchanges are read).
+    With ``elide_exchanges=False`` provided properties are ignored and every
+    Join/Aggregate/Sort pays its full exchange+sort — the pre-elision
+    baseline, kept as an A/B lever for benchmarks.
+    """
+    plan = PhysicalPlan()
+    elide = getattr(cfg, "elide_exchanges", True)
+
+    def emit(cls, node, inputs, part, order, **kw) -> POp:
+        d = dists[node.id]
+        return plan.add(cls(node=node, inputs=tuple(i.op_id for i in inputs),
+                            part=part, order=order, dist=d, **kw))
+
+    def hash_exchange(node, src: POp, keys: tuple[str, ...]) -> POp:
+        return emit(HashExchange, node, (src,), Partitioning("hash", keys),
+                    UNORDERED, keys=keys)
+
+    def local_sort(node, src: POp, keys: tuple[str, ...]) -> POp:
+        return emit(LocalSort, node, (src,), src.part, Ordering(keys, True),
+                    keys=keys)
+
+    for n in ir.topo_order(root):
+        if isinstance(n, ir.Scan):
+            # lattice -> property seed: REP tables are whole on every shard
+            # (satisfying every co-location requirement for free); 1D
+            # elements place rows positionally — no key co-location.
+            part = REPL if dists[n.id] == D.REP else BLOCK
+            op = emit(Source, n, (), part, UNORDERED)
+
+        elif isinstance(n, ir.Filter):
+            c = plan.final_op(n.child)
+            op = emit(Compact, n, (c,), c.part, c.order)
+
+        elif isinstance(n, ir.Project):
+            c = plan.final_op(n.child)
+            part, order = _remap_props(c.part, c.order, n.passthrough())
+            op = emit(Map, n, (c,), part, order)
+
+        elif isinstance(n, ir.Window):
+            c = plan.final_op(n.child)
+            # row-preserving, adds column n.out (may shadow an existing one)
+            part, order = c.part, c.order
+            if n.out in part.keys:
+                part = BLOCK
+            if n.out in order.keys:
+                order = Ordering(order.keys[: order.keys.index(n.out)],
+                                 order.ascending)
+            op = emit(WindowOp, n, (c,), part, order)
+
+        elif isinstance(n, ir.Rebalance):
+            c = plan.final_op(n.child)
+            # positional exchange: co-location is lost; per-shard order is a
+            # concatenation of source runs -> unordered (conservative).
+            op = emit(RebalanceOp, n, (c,), BLOCK, UNORDERED)
+
+        elif isinstance(n, ir.Concat):
+            parts = [plan.final_op(p) for p in n.parts]
+            if all(p.part.kind == "rep" for p in parts):
+                part = REPL
+            elif (all(p.part.kind == "hash" for p in parts)
+                  and len({p.part.keys for p in parts}) == 1):
+                part = parts[0].part    # same hash fn everywhere: still aligned
+            else:
+                part = BLOCK
+            op = emit(ConcatOp, n, tuple(parts), part, UNORDERED)
+
+        elif isinstance(n, ir.Sort):
+            c = plan.final_op(n.child)
+            sorted_already = (elide and grouped(c.order, n.by)
+                              and c.order.ascending == n.ascending)
+            # globally sorted iff locally sorted AND shard ranges follow the
+            # requested keys: range keys a prefix of `by` (ties of the range
+            # tuple co-locate; minor keys order locally) or `by` a prefix of
+            # the range keys (lexicographic order implies order on any key
+            # prefix, and eliding preserves the stable tie order a re-sort
+            # would produce).
+            range_ok = c.part.kind == "range" and (
+                c.part.keys == n.by[: len(c.part.keys)]
+                or n.by == c.part.keys[: len(n.by)])
+            globally_sorted = sorted_already and (c.part.kind == "rep"
+                                                  or range_ok)
+            if globally_sorted:
+                plan.op_of[n.id] = c.op_id      # full no-op: reuse child
+                op = c
+            else:
+                pre = (elide and grouped(c.order, n.by) and c.order.ascending)
+                op = emit(SampleSort, n, (c,), Partitioning("range", n.by),
+                          Ordering(n.by, n.ascending), pre_sorted=pre)
+
+        elif isinstance(n, ir.Join):
+            l, r = plan.final_op(n.left), plan.final_op(n.right)
+            broadcast = dists[n.right.id] == D.REP and cfg.broadcast_join
+            rep_join = dists[n.id] == D.REP and not broadcast
+            if not broadcast and not rep_join:
+                il = _hash_alignment(l.part, n.left_on) if elide else None
+                ir_ = _hash_alignment(r.part, n.right_on) if elide else None
+                if il is not None and il == ir_:
+                    idx = il
+                elif il is not None:
+                    idx = il
+                    r = hash_exchange(n, r, tuple(n.right_on[i] for i in idx))
+                elif ir_ is not None:
+                    idx = ir_
+                    l = hash_exchange(n, l, tuple(n.left_on[i] for i in idx))
+                else:
+                    idx = tuple(range(len(n.left_on)))
+                    l = hash_exchange(n, l, n.left_on)
+                    r = hash_exchange(n, r, n.right_on)
+                part = Partitioning("hash", tuple(n.left_on[i] for i in idx))
+            else:
+                part = l.part
+            # output rows follow left row order (each left row repeated per
+            # match), so the left ordering survives verbatim.
+            op = emit(MergeJoin, n, (l, r), part, l.order, broadcast=broadcast)
+
+        elif isinstance(n, ir.Aggregate):
+            c = plan.final_op(n.child)
+            part, order = _restrict_props(c.part, c.order, set(n.key))
+            prep = emit(AggPrep, n, (c,), part, order)
+            src: POp = prep
+            # REP aggregates never exchange (each shard aggregates the whole
+            # table) — independent of elision, like the join/sort rep guards.
+            needs_exchange = dists[n.id] != D.REP and \
+                not (elide and colocates(src.part, n.key))
+            if needs_exchange:
+                src = hash_exchange(n, src, n.key)
+            has_nu = any(a.fn == "nunique" for a in n.aggs.values())
+            pre_grouped = (elide and grouped(src.order, n.key)
+                           and (src.order.ascending or not has_nu))
+            if not pre_grouped:
+                src = local_sort(n, src, n.key)
+            op = emit(SegmentAgg, n, (src,), src.part,
+                      Ordering(n.key, src.order.ascending))
+
+        else:
+            raise TypeError(n)
+
+        plan.op_of[n.id] = op.op_id
+
+    plan.root_id = plan.op_of[root.id]
+    return plan
+
+
+def _hash_alignment(part: Partitioning,
+                    on: tuple[str, ...]) -> Optional[tuple[int, ...]]:
+    """If ``part`` is hash partitioning on a subsequence of the join keys,
+    return the key-position indices it covers (the other side can then be
+    exchanged on ITS columns at the same positions and the two sides align,
+    because the combined hash is value-deterministic).  Else None."""
+    if part.kind != "hash" or not part.keys:
+        return None
+    return subsequence_indices(part.keys, on)
+
+
+# ---------------------------------------------------------------------------
+# capacity planning (moved from lower.py; operates on physical ops)
+# ---------------------------------------------------------------------------
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def plan_capacities(plan: PhysicalPlan, P: int, cfg,
+                    source_rows: dict[int, int]) -> None:
+    """Fill ``cap``/``bucket`` on every op.
+
+    Exchanges get (src,dst) bucket capacities and a post-exchange capacity;
+    pass-through ops inherit their input capacity.  An elided exchange means
+    the consumer keeps the local capacity — smaller buffers, not just fewer
+    collectives.  Policy matches the original lower.py planner: "safe" bounds
+    every buffer by the worst case; otherwise capacities are input*slack and
+    overflow is flagged (driver retry, DESIGN.md §2).
+    """
+
+    def shuffle_plan(cap_in: int) -> tuple[int, int]:
+        if cfg.safe_capacities:
+            bucket = cap_in                 # worst case: all rows to one shard
+            out = P * bucket
+        else:
+            bucket = max(32, _ceil_div(int(cap_in * cfg.shuffle_slack), P))
+            out = max(32, int(cap_in * cfg.shuffle_slack))
+        return bucket, out
+
+    for op in plan.ops:
+        ins = [plan.ops[i] for i in op.inputs]
+        if isinstance(op, Source):
+            rows = source_rows[op.node.id]
+            op.cap = rows if op.dist == D.REP else max(1, _ceil_div(rows, P))
+        elif isinstance(op, (HashExchange, SampleSort)):
+            op.bucket, op.cap = shuffle_plan(ins[0].cap)
+        elif isinstance(op, MergeJoin):
+            lcap, rcap = ins[0].cap, ins[1].cap
+            op.cap = max(1, int(max(cfg.join_expansion, 1.0) * (lcap + rcap)))
+        elif isinstance(op, ConcatOp):
+            op.cap = sum(i.cap for i in ins)
+        elif isinstance(op, RebalanceOp):
+            op.bucket = ins[0].cap
+            op.cap = ins[0].cap
+        else:   # Compact / Map / WindowOp / AggPrep / LocalSort / SegmentAgg
+            op.cap = ins[0].cap

@@ -1,0 +1,408 @@
+"""Property-driven physical planning: exchange/sort elision.
+
+Plan-introspection tests assert EXACT shuffle/sort counts (the planner is
+deterministic and device-free), and subprocess tests cross-check the elided
+pipelines against the numpy oracle on 1, 2 and 8 shards.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro import hiframes as hf
+from repro.core import ir, optimizer
+from repro.core import physical_plan as pp
+from oracle import o_aggregate, o_join
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_sharded(body: str, devices: int):
+    script = textwrap.dedent(f"""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={devices}"
+        import numpy as np
+        import jax
+        assert jax.device_count() == {devices}
+        from repro import hiframes as hf
+        {textwrap.indent(textwrap.dedent(body), '        ').strip()}
+        print("SUBPROC_OK")
+    """)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env.pop("XLA_FLAGS", None)
+    res = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert res.returncode == 0, f"stderr:\n{res.stderr[-4000:]}"
+    assert "SUBPROC_OK" in res.stdout
+    return res.stdout
+
+
+def _frames(n=800, m=90, seed=31):
+    rng = np.random.default_rng(seed)
+    left = {"k1": rng.integers(0, 7, n).astype(np.int32),
+            "k2": rng.integers(0, 9, n).astype(np.int32),
+            "x": rng.normal(size=n).astype(np.float32)}
+    right = {"ca": rng.integers(0, 7, m).astype(np.int32),
+             "cb": rng.integers(0, 9, m).astype(np.int32),
+             "w": rng.normal(size=m).astype(np.float32)}
+    return left, right
+
+
+# -- plan introspection: exact exchange / sort counts -------------------------
+
+
+def test_join_agg_same_keys_two_exchanges_one_sort():
+    """(a) join -> aggregate(by=join keys): the aggregate's hash exchange AND
+    its pre-exchange sort collapse; only the join's two exchanges plus the
+    aggregate's one local sort remain."""
+    left, right = _frames()
+    j = hf.join(hf.table(left), hf.table(right, "d"),
+                on=[("k1", "ca"), ("k2", "cb")])
+    a = hf.aggregate(j, by=("k1", "k2"), s=hf.sum_(j["w"]), c=hf.count())
+    c = a.physical_plan().counts()
+    assert c["hash_exchanges"] == 2
+    assert c["local_sorts"] == 1
+    assert c["sample_sorts"] == 0
+
+
+def test_join_agg_different_keys_three_exchanges():
+    """(b) aggregate by a NON-join key still pays its own exchange."""
+    left, right = _frames()
+    j = hf.join(hf.table(left), hf.table(right, "d"),
+                on=[("k1", "ca"), ("k2", "cb")])
+    a = hf.aggregate(j, by="x", c=hf.count())
+    c = a.physical_plan().counts()
+    assert c["hash_exchanges"] == 3
+    assert c["local_sorts"] == 1
+
+
+def test_broadcast_join_zero_shuffles():
+    """(c) REP right side: no exchange, no sort (rank join sorts internally)."""
+    left, right = _frames()
+    j = hf.join(hf.table(left), hf.table(right, "d").replicate(),
+                on=[("k1", "ca"), ("k2", "cb")])
+    c = j.physical_plan().counts()
+    assert c["hash_exchanges"] == 0
+    assert c["local_sorts"] == 0
+    assert c["sample_sorts"] == 0
+
+
+def test_superset_and_reordered_keys_do_not_elide():
+    """hash(k1,k2) satisfies by=(k1,k2); by=(k2,k1) and by=(k1,) vs a
+    partitioning on (k1,k2) do not (reordering/superset rejected)."""
+    left, right = _frames()
+    j = hf.join(hf.table(left), hf.table(right, "d"),
+                on=[("k1", "ca"), ("k2", "cb")])
+    reordered = hf.aggregate(j, by=("k2", "k1"), c=hf.count())
+    assert reordered.physical_plan().counts()["hash_exchanges"] == 3
+    narrower = hf.aggregate(j, by="k1", c=hf.count())
+    assert narrower.physical_plan().counts()["hash_exchanges"] == 3
+    # but a SUBSET partitioning satisfies a wider aggregate key: equal
+    # (k1,k2) tuples are equal on k1, hence co-located.
+    j1 = hf.join(hf.table(left), hf.table(right, "d"), on=("k1", "ca"))
+    wider = hf.aggregate(j1, by=("k1", "k2"), c=hf.count())
+    assert wider.physical_plan().counts()["hash_exchanges"] == 2
+
+
+def test_sort_then_aggregate_elides_everything():
+    """range partitioning + ordering from a sample sort satisfy the
+    aggregate: no hash exchange, no local sort.  (optimize_plan=False so the
+    logical sort-under-aggregate rule doesn't remove the Sort first.)"""
+    left, _ = _frames()
+    cfg = hf.ExecConfig(optimize_plan=False)
+    a = hf.aggregate(hf.table(left).sort(by=("k1", "k2")), by=("k1", "k2"),
+                     c=hf.count())
+    c = a.physical_plan(cfg).counts()
+    assert c["sample_sorts"] == 1
+    assert c["hash_exchanges"] == 0
+    assert c["local_sorts"] == 0
+
+
+def test_sort_prefix_of_range_keys_is_noop():
+    """sort(by=(k1,k2)) then sort(by=k1): the data is already globally
+    sorted by the k1 prefix, so the second sort plans NOTHING — in both
+    prefix directions."""
+    left, _ = _frames()
+    cfg = hf.ExecConfig(optimize_plan=False)   # keep both logical sorts
+    narrower = hf.table(left).sort(by=("k1", "k2")).sort(by="k1")
+    assert narrower.physical_plan(cfg).counts()["sample_sorts"] == 1
+    wider_sorted = hf.table(left).sort(by="k1").sort(by=("k1", "k2"))
+    # the wider re-sort is NOT redundant physically (ordering (k1,) doesn't
+    # cover (k1,k2)) — but the optimizer's Sort∘Sort rule removes the inner
+    # one, so the default config still pays exactly one sample sort.
+    assert wider_sorted.physical_plan(cfg).counts()["sample_sorts"] == 2
+    assert wider_sorted.physical_plan().counts()["sample_sorts"] == 1
+    # results stay oracle-correct with the elision
+    out = narrower.collect(cfg).to_numpy()
+    order = np.lexsort((left["k2"], left["k1"]))
+    np.testing.assert_array_equal(out["k1"], left["k1"][order])
+    np.testing.assert_array_equal(out["k2"], left["k2"][order])
+
+
+def test_elide_exchanges_false_restores_baseline():
+    left, right = _frames()
+    j = hf.join(hf.table(left), hf.table(right, "d"),
+                on=[("k1", "ca"), ("k2", "cb")])
+    a = hf.aggregate(j, by=("k1", "k2"), c=hf.count())
+    c = a.physical_plan(hf.ExecConfig(elide_exchanges=False)).counts()
+    assert c["hash_exchanges"] == 3
+    assert c["local_sorts"] == 1
+
+
+def test_join_chain_reuses_partitioning():
+    """join on k then join on the same key: the second join re-exchanges only
+    the NEW side (the left flow is already hash-partitioned on k)."""
+    rng = np.random.default_rng(33)
+    n = 300
+    a = hf.table({"k": rng.integers(0, 9, n).astype(np.int32),
+                  "x": rng.normal(size=n).astype(np.float32)}, "a")
+    b = hf.table({"k": rng.integers(0, 9, 50).astype(np.int32),
+                  "w": rng.normal(size=50).astype(np.float32)}, "b")
+    c = hf.table({"k": rng.integers(0, 9, 40).astype(np.int32),
+                  "v": rng.normal(size=40).astype(np.float32)}, "c")
+    j2 = hf.join(hf.join(a, b, on="k"), c, on="k")
+    counts = j2.physical_plan().counts()
+    assert counts["hash_exchanges"] == 3        # a, b, c — not 4
+
+
+def test_filter_and_project_preserve_partitioning():
+    """A filter or pure-rename projection between join and aggregate must not
+    reintroduce the exchange; a computed key column must."""
+    left, right = _frames()
+    j = hf.join(hf.table(left), hf.table(right, "d"),
+                on=[("k1", "ca"), ("k2", "cb")])
+    f = j[j["w"] > 0.0]
+    a = hf.aggregate(f, by=("k1", "k2"), c=hf.count())
+    assert a.physical_plan().counts()["hash_exchanges"] == 2
+    ren = f.rename({"k1": "r1", "k2": "r2"})
+    a2 = hf.aggregate(ren, by=("r1", "r2"), c=hf.count())
+    assert a2.physical_plan().counts()["hash_exchanges"] == 2
+    derived = f.with_column("k1", f["k1"] + 1)   # key overwritten: prop lost
+    a3 = hf.aggregate(derived, by=("k1", "k2"), c=hf.count())
+    assert a3.physical_plan().counts()["hash_exchanges"] == 3
+
+
+def test_explain_renders_physical_plan():
+    left, right = _frames()
+    j = hf.join(hf.table(left), hf.table(right, "d"),
+                on=[("k1", "ca"), ("k2", "cb")])
+    a = hf.aggregate(j, by=("k1", "k2"), c=hf.count())
+    text = a.explain()
+    assert "physical plan: 2 shuffles" in text
+    assert "HashExchange(k1,k2)" in text or "HashExchange(ca,cb)" in text
+    assert "MergeJoin" in text and "SegmentAgg" in text
+    assert "part=hash(k1,k2)" in text
+
+
+# -- optimizer: redundant-sort removal ----------------------------------------
+
+
+def test_optimizer_drops_sort_under_aggregate():
+    left, _ = _frames()
+    a = hf.aggregate(hf.table(left).sort("k1"), by="k1", c=hf.count())
+    new_root, n = optimizer.drop_redundant_sorts(a.node)
+    assert n == 1
+    assert not any(isinstance(x, ir.Sort) for x in ir.topo_order(new_root))
+
+
+def test_optimizer_keeps_sort_for_first_agg():
+    left, _ = _frames()
+    df = hf.table(left).sort("x")
+    a = hf.aggregate(df, by="k1", f=hf.first(df["x"]))
+    _, n = optimizer.drop_redundant_sorts(a.node)
+    assert n == 0
+
+
+def test_optimizer_collapses_prefix_sorts():
+    left, _ = _frames()
+    s = hf.table(left).sort("k1").sort(by=("k1", "k2"))
+    new_root, n = optimizer.drop_redundant_sorts(s.node)
+    assert n == 1
+    sorts = [x for x in ir.topo_order(new_root) if isinstance(x, ir.Sort)]
+    assert len(sorts) == 1 and sorts[0].by == ("k1", "k2")
+    # different leading key: NOT redundant
+    s2 = hf.table(left).sort("k2").sort("k1")
+    _, n2 = optimizer.drop_redundant_sorts(s2.node)
+    assert n2 == 0
+
+
+# -- property-rule unit tests -------------------------------------------------
+
+
+def test_colocation_rules():
+    h = pp.Partitioning("hash", ("k1", "k2"))
+    assert pp.colocates(h, ("k1", "k2"))
+    assert pp.colocates(h, ("k1", "k2", "k3"))      # subsequence of wider key
+    assert not pp.colocates(h, ("k2", "k1"))        # reordering rejected
+    assert not pp.colocates(h, ("k1",))             # superset partitioning
+    assert pp.colocates(pp.Partitioning("rep"), ("anything",))
+    assert not pp.colocates(pp.Partitioning("block"), ("k1",))
+
+
+def test_grouping_rules():
+    o = pp.Ordering(("k1", "k2"))
+    assert pp.grouped(o, ("k1",))
+    assert pp.grouped(o, ("k1", "k2"))
+    assert not pp.grouped(o, ("k2",))
+    assert not pp.grouped(o, ("k1", "k2", "k3"))
+
+
+# -- execution cross-checks on 1 / 2 / 8 shards -------------------------------
+
+
+_ELISION_BODY = """
+    rng = np.random.default_rng(31)
+    n, m = 800, 90
+    left = {"k1": rng.integers(0, 7, n).astype(np.int32),
+            "k2": rng.integers(0, 9, n).astype(np.int32),
+            "x": rng.normal(size=n).astype(np.float32)}
+    right = {"ca": rng.integers(0, 7, m).astype(np.int32),
+             "cb": rng.integers(0, 9, m).astype(np.int32),
+             "w": rng.normal(size=m).astype(np.float32)}
+    j = hf.join(hf.table(left), hf.table(right, "d"),
+                on=[("k1", "ca"), ("k2", "cb")])
+    a = hf.aggregate(j, by=("k1", "k2"), s=hf.sum_(j["w"]), c=hf.count())
+    cts = a.physical_plan().counts()
+    assert cts["hash_exchanges"] == 2 and cts["local_sorts"] == 1, cts
+    out = a.collect().to_numpy()
+    # numpy oracle
+    pairs = {}
+    for i in range(m):
+        pairs.setdefault((int(right["ca"][i]), int(right["cb"][i])), []).append(i)
+    ref = {}
+    for i in range(n):
+        kt = (int(left["k1"][i]), int(left["k2"][i]))
+        for ridx in pairs.get(kt, ()):
+            s, c = ref.get(kt, (0.0, 0))
+            ref[kt] = (s + float(right["w"][ridx]), c + 1)
+    got = {(int(a1), int(a2)): (float(s), int(c))
+           for a1, a2, s, c in zip(out["k1"], out["k2"], out["s"], out["c"])}
+    assert len(got) == len(ref), (len(got), len(ref))
+    assert all(abs(got[k][0] - ref[k][0]) < 1e-2 and got[k][1] == ref[k][1]
+               for k in ref)
+    # broadcast join: 0 shuffles, same row count as the shuffled join
+    bj = hf.join(hf.table(left), hf.table(right, "d").replicate(),
+                 on=[("k1", "ca"), ("k2", "cb")])
+    assert bj.physical_plan().counts()["hash_exchanges"] == 0
+    n_pairs = sum(len(pairs.get((int(left["k1"][i]), int(left["k2"][i])), ()))
+                  for i in range(n))
+    assert bj.collect().num_rows() == n_pairs
+    assert j.collect().num_rows() == n_pairs
+"""
+
+
+@pytest.mark.parametrize("devices", [1, 2, 8])
+def test_elision_matches_oracle_sharded(devices):
+    run_sharded(_ELISION_BODY, devices)
+
+
+def test_skewed_key0_composite_splitters_balance():
+    """Regression: 90% of rows tie on the most-significant sort key.  The
+    rank-based composite splitters spread ties by the minor key; the old
+    key0-only splitters piled them onto one shard."""
+    run_sharded("""
+        rng = np.random.default_rng(41)
+        n = 4000
+        k0 = np.zeros(n, np.int32)
+        k0[: n // 10] = rng.integers(1, 5, n // 10)
+        kk = rng.integers(0, 1000, n).astype(np.int32)
+        x = rng.normal(size=n).astype(np.float32)
+        t = hf.table({"k0": k0, "kk": kk, "x": x}).sort(by=("k0", "kk")).collect()
+        counts = np.asarray(t.counts)
+        st = t.to_numpy()
+        order = np.lexsort((kk, k0))
+        assert np.array_equal(st["k0"], k0[order])
+        assert np.array_equal(st["kk"], kk[order])
+        # balanced: no shard holds more than half the rows (the skewed key0
+        # value alone covers 90%)
+        assert counts.max() < 0.5 * n, counts
+    """, devices=8)
+
+
+def test_multi_nunique_matches_oracle():
+    rng = np.random.default_rng(43)
+    n = 1500
+    g = {"id": rng.integers(0, 11, n).astype(np.int32),
+         "u": rng.integers(0, 7, n).astype(np.int32),
+         "v": rng.integers(0, 13, n).astype(np.int32),
+         "x": rng.normal(size=n).astype(np.float32)}
+    dg = hf.table(g)
+    a = hf.aggregate(dg, "id", nu=hf.nunique(dg["u"]), nv=hf.nunique(dg["v"]),
+                     s=hf.sum_(dg["x"]), c=hf.count()).collect().to_numpy()
+    ref = o_aggregate(g, "id", {"nu": ("nunique", g["u"]),
+                                "nv": ("nunique", g["v"]),
+                                "s": ("sum", g["x"]), "c": ("count", None)})
+    o = np.argsort(a["id"])
+    np.testing.assert_array_equal(a["id"][o], ref["id"])
+    np.testing.assert_array_equal(a["nu"][o], ref["nu"])
+    np.testing.assert_array_equal(a["nv"][o], ref["nv"])
+    np.testing.assert_allclose(a["s"][o], ref["s"], atol=1e-3)
+    np.testing.assert_array_equal(a["c"][o], ref["c"])
+
+
+def test_multi_nunique_composite_key_8dev():
+    run_sharded("""
+        rng = np.random.default_rng(44)
+        n = 1003
+        k1 = rng.integers(0, 5, n).astype(np.int32)
+        k2 = rng.integers(0, 4, n).astype(np.int32)
+        u = rng.integers(0, 6, n).astype(np.int32)
+        v = rng.integers(0, 9, n).astype(np.int32)
+        df = hf.table({"k1": k1, "k2": k2, "u": u, "v": v})
+        a = hf.aggregate(df, by=("k1", "k2"), nu=hf.nunique(df["u"]),
+                         nv=hf.nunique(df["v"])).collect().to_numpy()
+        ref = {}
+        for i in range(n):
+            kt = (int(k1[i]), int(k2[i]))
+            su, sv = ref.setdefault(kt, (set(), set()))
+            su.add(int(u[i])); sv.add(int(v[i]))
+        got = {(int(a1), int(a2)): (int(x), int(y))
+               for a1, a2, x, y in zip(a["k1"], a["k2"], a["nu"], a["nv"])}
+        assert len(got) == len(ref)
+        assert all(got[k] == (len(ref[k][0]), len(ref[k][1])) for k in ref)
+    """, devices=8)
+
+
+def test_rep_aggregate_never_exchanges():
+    """Regression: a REP (replicated) aggregate must not shuffle even with
+    elision disabled — every shard already holds the whole table; a
+    collective exchange would multiply groups by the shard count."""
+    left, _ = _frames()
+    rep = hf.table(left).replicate()
+    a = hf.aggregate(rep, by="k1", c=hf.count(), s=hf.sum_(rep["x"]))
+    for cfg in (hf.ExecConfig(), hf.ExecConfig(elide_exchanges=False)):
+        assert a.physical_plan(cfg).counts()["hash_exchanges"] == 0
+    run_sharded("""
+        rng = np.random.default_rng(46)
+        n = 400
+        left = {"k1": rng.integers(0, 7, n).astype(np.int32),
+                "x": rng.normal(size=n).astype(np.float32)}
+        rep = hf.table(left).replicate()
+        a = hf.aggregate(rep, by="k1", c=hf.count(), s=hf.sum_(rep["x"]))
+        out = a.collect(hf.ExecConfig(elide_exchanges=False)).to_numpy()
+        o = np.argsort(out["k1"])
+        uids = np.unique(left["k1"])
+        assert np.array_equal(out["k1"][o], uids)
+        assert np.array_equal(out["c"][o],
+                              [(left["k1"] == u).sum() for u in uids])
+        assert np.allclose(out["s"][o],
+                           [left["x"][left["k1"] == u].sum() for u in uids],
+                           atol=1e-3)
+    """, devices=4)
+
+
+def test_elided_plan_matches_unelided_results():
+    """elide_exchanges on/off must be observationally identical."""
+    left, right = _frames(seed=45)
+    j = hf.join(hf.table(left), hf.table(right, "d"),
+                on=[("k1", "ca"), ("k2", "cb")])
+    a = hf.aggregate(j, by=("k1", "k2"), s=hf.sum_(j["w"]), c=hf.count())
+    on = a.collect(hf.ExecConfig(elide_exchanges=True)).to_numpy()
+    off = a.collect(hf.ExecConfig(elide_exchanges=False)).to_numpy()
+    oo, of = (np.lexsort((on["k2"], on["k1"])), np.lexsort((off["k2"], off["k1"])))
+    for k in on:
+        np.testing.assert_allclose(on[k][oo], off[k][of], rtol=1e-5)

@@ -60,3 +60,28 @@ def run(scale: float = 1.0):
         hf.ExecConfig(use_kernels=True))
     us_k = timeit(plan_k)
     report(f"fig8b_wma_hiframes_kernel_n{n}", us_k, "interpret-mode on CPU")
+
+    # partitioned WMA (OVER (PARTITION BY g ORDER BY t)) downstream of a
+    # join on the partition key: with property elision the window rides the
+    # join's hash layout (2 exchanges total); the baseline re-shuffles (3).
+    rng = np.random.default_rng(7)
+    n_grp = max(16, int(np.sqrt(n)))
+    fact = hf.table({"g": rng.integers(0, n_grp, n).astype(np.int32),
+                     "t": rng.permutation(n).astype(np.int32),
+                     "x": x})
+    dim = hf.table({"g": np.arange(n_grp, dtype=np.int32),
+                    "w0": rng.normal(size=n_grp).astype(np.float32)}, "dim")
+    j = hf.join(fact, dim, on="g")
+    win = hf.wma(j, j["x"] * j["w0"], [1, 2, 1], out="wma",
+                 partition_by="g", order_by="t")
+    shuffles = {cfg_name: win.physical_plan(cfg).shuffle_count()
+                for cfg_name, cfg in
+                [("elided", hf.ExecConfig()),
+                 ("baseline", hf.ExecConfig(elide_exchanges=False))]}
+    us_e = timeit(win.lower())
+    us_b = timeit(win.lower(hf.ExecConfig(elide_exchanges=False)))
+    report(f"fig8b_wma_partitioned_elided_n{n}",
+           us_e, f"shuffles={shuffles['elided']}")
+    report(f"fig8b_wma_partitioned_baseline_n{n}",
+           us_b, f"shuffles={shuffles['baseline']} "
+                 f"speedup={us_b/us_e:.2f}x")

@@ -2,9 +2,11 @@
 
 Prints ``name,us_per_call,derived`` CSV.  --scale shrinks/grows datasets
 (defaults are CPU-feasible stand-ins for the paper's cluster sizes);
---skip lets CI drop the slow subprocess scaling runs.
+--skip lets CI drop the slow subprocess scaling runs; --out additionally
+writes the rows as JSON (the CI bench-smoke artifact).
 """
 import argparse
+import json
 import sys
 import traceback
 
@@ -15,6 +17,8 @@ def main() -> None:
     ap.add_argument("--skip", nargs="*", default=[],
                     choices=["relational", "multikey", "analytics", "udf",
                              "tpcx", "scaling", "kernels"])
+    ap.add_argument("--out", default=None,
+                    help="write results as JSON to this path")
     args = ap.parse_args()
 
     from . import (bench_analytics, bench_kernels, bench_relational,
@@ -39,6 +43,14 @@ def main() -> None:
         except Exception:
             failed.append(name)
             traceback.print_exc()
+    if args.out:
+        from . import common
+        rows = [{"name": n, "us_per_call": us, "derived": d}
+                for (n, us, d) in common.ROWS]
+        with open(args.out, "w") as f:
+            json.dump({"scale": args.scale, "skipped": args.skip,
+                       "failed": failed, "rows": rows}, f, indent=2)
+        print(f"wrote {len(rows)} rows to {args.out}", file=sys.stderr)
     if failed:
         sys.exit(f"benchmark suites failed: {failed}")
 

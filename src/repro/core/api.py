@@ -25,6 +25,18 @@ lexicographically and compare position-wise (TPCx-BB-style query shapes):
 ``on=("id", "cid")`` — a 2-tuple of strings — keeps its historical meaning of
 a SINGLE key pair with different names; use a list for composite keys.
 
+Window functions may be PARTITIONED (SQL ``OVER (PARTITION BY ... ORDER BY
+...)``) — per-group cumsum/SMA/WMA/lag/lead plus rank/row_number and rolling
+sums/means, planned as hash co-location + grouped local sort (both elided
+when the input already provides them — ``join → wma`` over the join keys
+shuffles exactly as much as the bare join):
+
+    w = df.over("g", order_by="t")                 # the OVER clause
+    d1 = w.cumsum(df["x"])                         # per-group running total
+    d2 = w.wma(df["x"], [1, 2, 1], out="wma")      # group-bounded stencil
+    d3 = w.rank()                                  # SQL RANK()
+    d4 = hf.lag(df, df["x"], partition_by="g", order_by="t")   # kwargs form
+
 Every collected column is a plain jax.Array; any jax array can be attached
 with ``with_column`` or referenced directly inside expressions (the paper's
 "any array in the program" rule).
@@ -43,10 +55,18 @@ from .lower import ExecConfig, Lowered, lower
 from .table import DTable
 
 __all__ = [
-    "DataFrame", "table", "join", "aggregate", "concat", "cumsum", "stencil",
-    "sma", "wma", "lag", "lead", "sum_", "mean", "count", "min_", "max_",
-    "var", "std", "first", "nunique", "udf", "ExecConfig", "explain",
+    "DataFrame", "Over", "table", "join", "aggregate", "concat", "cumsum",
+    "stencil", "sma", "wma", "lag", "lead", "rank", "dense_rank",
+    "row_number", "rolling_sum", "rolling_mean", "sum_", "mean", "count",
+    "min_", "max_", "var", "std", "first", "nunique", "udf", "ExecConfig",
+    "explain",
 ]
+
+
+def _over_keys(x) -> tuple[str, ...]:
+    """Normalize an optional partition/order key spec to a tuple (an absent
+    spec — None or an empty sequence — becomes ())."""
+    return () if not x else ir.as_keys(x)
 
 
 class DataFrame:
@@ -102,6 +122,12 @@ class DataFrame:
         (lexicographic, most-significant first)."""
         return DataFrame(ir.Sort(self.node, ir.as_keys(by), ascending),
                          self._rep_nodes)
+
+    def over(self, partition_by, order_by=None) -> "Over":
+        """Partitioned window context (SQL ``OVER (PARTITION BY ... ORDER BY
+        ...)``): ``df.over("g", order_by="t").cumsum(df["x"])``.  See
+        docs/window_functions.md for the plan shapes."""
+        return Over(self, partition_by, order_by)
 
     def replicate(self) -> "DataFrame":
         """Pin this frame to REP (broadcast) — small dimension tables."""
@@ -275,46 +301,165 @@ def concat(*dfs: DataFrame) -> DataFrame:
     return DataFrame(node, frozenset(rep))
 
 
-def cumsum(df: DataFrame, e, out: str = "cumsum") -> DataFrame:
-    """Distributed cumulative sum (MPI_Exscan analogue)."""
-    return DataFrame(ir.Window(df.node, "cumsum", as_expr(e), out),
+def cumsum(df: DataFrame, e, out: str = "cumsum", *,
+           partition_by=None, order_by=None) -> DataFrame:
+    """Distributed cumulative sum (MPI_Exscan analogue).
+
+    With ``partition_by``, the sum restarts at every group boundary
+    (``SUM(...) OVER (PARTITION BY ... ORDER BY ...)``) and rows come back
+    hash-partitioned on the group keys, sorted by (partition, order) keys
+    within each shard — the grouped layout, not input order."""
+    return DataFrame(ir.Window(df.node, "cumsum", as_expr(e), out,
+                               partition_by=_over_keys(partition_by),
+                               order_by=_over_keys(order_by)),
                      df._rep_nodes)
 
 
 def stencil(df: DataFrame, e, weights: Sequence[float], *, scale: float = 1.0,
-            center: int | None = None, out: str = "stencil") -> DataFrame:
+            center: int | None = None, out: str = "stencil",
+            partition_by=None, order_by=None) -> DataFrame:
     """1-D stencil: out[i] = sum_j w[j]/scale * x[i+j-center].
 
     SMA == stencil(x, [1,1,1], scale=3); WMA == stencil(x, [1,2,1], scale=4).
-    """
+    With ``partition_by``, taps never cross a group boundary (the zero-border
+    convention applies per group) — TPCx-BB Q26-style grouped moving
+    averages."""
     w = tuple(float(x) / scale for x in weights)
     c = len(w) // 2 if center is None else center
     return DataFrame(ir.Window(df.node, "stencil", as_expr(e), out,
-                               weights=w, center=c), df._rep_nodes)
+                               weights=w, center=c,
+                               partition_by=_over_keys(partition_by),
+                               order_by=_over_keys(order_by)),
+                     df._rep_nodes)
 
 
-def sma(df: DataFrame, e, window: int = 3, out: str = "sma") -> DataFrame:
-    return stencil(df, e, [1.0] * window, scale=float(window), out=out)
+def sma(df: DataFrame, e, window: int = 3, out: str = "sma", *,
+        partition_by=None, order_by=None) -> DataFrame:
+    return stencil(df, e, [1.0] * window, scale=float(window), out=out,
+                   partition_by=partition_by, order_by=order_by)
 
 
-def wma(df: DataFrame, e, weights: Sequence[float], out: str = "wma") -> DataFrame:
-    return stencil(df, e, weights, scale=float(sum(weights)), out=out)
+def wma(df: DataFrame, e, weights: Sequence[float], out: str = "wma", *,
+        partition_by=None, order_by=None) -> DataFrame:
+    return stencil(df, e, weights, scale=float(sum(weights)), out=out,
+                   partition_by=partition_by, order_by=order_by)
 
 
-def lag(df: DataFrame, e, n: int = 1, out: str = "lag") -> DataFrame:
+def lag(df: DataFrame, e, n: int = 1, out: str = "lag", *,
+        partition_by=None, order_by=None) -> DataFrame:
     """SQL lag(): out[i] = x[i-n] across the distributed order (paper Table 1
     mentions SQL's lag/lead as the window-function alternative to stencils —
-    here they ARE stencils: a one-hot window with offset).  Borders -> 0."""
-    w = [1.0] + [0.0] * n
-    return DataFrame(ir.Window(df.node, "stencil", as_expr(e), out,
-                               weights=tuple(w), center=n), df._rep_nodes)
+    here they ARE stencils: a one-hot window with offset).  Borders -> 0;
+    with ``partition_by`` the border is the group edge."""
+    return stencil(df, e, [1.0] + [0.0] * n, center=n, out=out,
+                   partition_by=partition_by, order_by=order_by)
 
 
-def lead(df: DataFrame, e, n: int = 1, out: str = "lead") -> DataFrame:
-    """SQL lead(): out[i] = x[i+n]; borders -> 0."""
-    w = [0.0] * n + [1.0]
-    return DataFrame(ir.Window(df.node, "stencil", as_expr(e), out,
-                               weights=tuple(w), center=0), df._rep_nodes)
+def lead(df: DataFrame, e, n: int = 1, out: str = "lead", *,
+         partition_by=None, order_by=None) -> DataFrame:
+    """SQL lead(): out[i] = x[i+n]; borders -> 0 (group edges when
+    partitioned)."""
+    return stencil(df, e, [0.0] * n + [1.0], center=0, out=out,
+                   partition_by=partition_by, order_by=order_by)
+
+
+def rolling_sum(df: DataFrame, e, window: int, out: str = "rolling_sum", *,
+                partition_by=None, order_by=None) -> DataFrame:
+    """Trailing rolling sum: out[i] = sum of x over rows [i-window+1 .. i].
+
+    A one-sided stencil (center = window-1), so leading borders — the global
+    start, or each group start when partitioned — contribute zeros."""
+    return stencil(df, e, [1.0] * window, center=window - 1, out=out,
+                   partition_by=partition_by, order_by=order_by)
+
+
+def rolling_mean(df: DataFrame, e, window: int, out: str = "rolling_mean", *,
+                 partition_by=None, order_by=None) -> DataFrame:
+    """Trailing rolling mean = rolling_sum / window.  NOTE: the first
+    window-1 rows of the series (or of each group) divide a zero-padded
+    partial sum by the FULL window, per the stencil border convention."""
+    return stencil(df, e, [1.0] * window, scale=float(window),
+                   center=window - 1, out=out,
+                   partition_by=partition_by, order_by=order_by)
+
+
+def _rank_df(df: DataFrame, kind: str, partition_by, order_by,
+             out: str) -> DataFrame:
+    return DataFrame(ir.Window(df.node, kind, None, out,
+                               partition_by=_over_keys(partition_by),
+                               order_by=_over_keys(order_by)),
+                     df._rep_nodes)
+
+
+def rank(df: DataFrame, partition_by, order_by, out: str = "rank") -> DataFrame:
+    """SQL RANK() OVER (PARTITION BY ... ORDER BY ...): 1-based; equal
+    order-key tuples share a rank, with gaps after ties."""
+    return _rank_df(df, "rank", partition_by, order_by, out)
+
+
+def dense_rank(df: DataFrame, partition_by, order_by,
+               out: str = "dense_rank") -> DataFrame:
+    """SQL DENSE_RANK(): ties share a rank, no gaps."""
+    return _rank_df(df, "dense_rank", partition_by, order_by, out)
+
+
+def row_number(df: DataFrame, partition_by, order_by,
+               out: str = "row_number") -> DataFrame:
+    """SQL ROW_NUMBER(): 1-based position within the group (ties broken by
+    the stable sort, so equal order keys number deterministically by
+    post-exchange arrival order)."""
+    return _rank_df(df, "row_number", partition_by, order_by, out)
+
+
+class Over:
+    """Fluent handle for partitioned windows: ``df.over(partition_by=...,
+    order_by=...)`` then any window verb — the SQL ``OVER`` clause as an
+    object.  Each method returns a new DataFrame with the window column
+    appended; results come back in the grouped (hash-partitioned, locally
+    sorted) layout."""
+
+    def __init__(self, df: DataFrame, partition_by, order_by=None):
+        self.df = df
+        self.partition_by = ir.as_keys(partition_by)
+        self.order_by = _over_keys(order_by)
+
+    def _kw(self):
+        return dict(partition_by=self.partition_by, order_by=self.order_by or None)
+
+    def cumsum(self, e, out: str = "cumsum") -> DataFrame:
+        return cumsum(self.df, e, out, **self._kw())
+
+    def stencil(self, e, weights, *, scale: float = 1.0,
+                center: int | None = None, out: str = "stencil") -> DataFrame:
+        return stencil(self.df, e, weights, scale=scale, center=center,
+                       out=out, **self._kw())
+
+    def sma(self, e, window: int = 3, out: str = "sma") -> DataFrame:
+        return sma(self.df, e, window, out, **self._kw())
+
+    def wma(self, e, weights, out: str = "wma") -> DataFrame:
+        return wma(self.df, e, weights, out, **self._kw())
+
+    def lag(self, e, n: int = 1, out: str = "lag") -> DataFrame:
+        return lag(self.df, e, n, out, **self._kw())
+
+    def lead(self, e, n: int = 1, out: str = "lead") -> DataFrame:
+        return lead(self.df, e, n, out, **self._kw())
+
+    def rolling_sum(self, e, window: int, out: str = "rolling_sum") -> DataFrame:
+        return rolling_sum(self.df, e, window, out, **self._kw())
+
+    def rolling_mean(self, e, window: int, out: str = "rolling_mean") -> DataFrame:
+        return rolling_mean(self.df, e, window, out, **self._kw())
+
+    def rank(self, out: str = "rank") -> DataFrame:
+        return rank(self.df, self.partition_by, self.order_by, out)
+
+    def dense_rank(self, out: str = "dense_rank") -> DataFrame:
+        return dense_rank(self.df, self.partition_by, self.order_by, out)
+
+    def row_number(self, out: str = "row_number") -> DataFrame:
+        return row_number(self.df, self.partition_by, self.order_by, out)
 
 
 def udf(fn, *args) -> UDF:

@@ -65,10 +65,19 @@ _VAR_OUT = (ir.Filter, ir.Join, ir.Aggregate)
 
 
 def requires_block(n: ir.Node) -> bool:
-    """Nodes that REQUIRE 1D_BLOCK inputs: stencil neighborhoods assume even
-    blocks (cumsum masks validity and accepts 1D_VAR); matrix assembly for ML
-    does too (handled via collect_block)."""
-    return isinstance(n, ir.Window) and n.kind == "stencil"
+    """Nodes that REQUIRE 1D_BLOCK inputs: GLOBAL stencil neighborhoods assume
+    even blocks (cumsum masks validity and accepts 1D_VAR); matrix assembly
+    for ML does too (handled via collect_block).  PARTITIONED windows never
+    do — their groups are made shard-local by a hash exchange and taps never
+    cross a group edge, so no halo is needed."""
+    return (isinstance(n, ir.Window) and n.kind == "stencil"
+            and not n.partition_by)
+
+
+def is_partitioned_window(n: ir.Node) -> bool:
+    """Partitioned windows redistribute rows (hash on the partition keys), so
+    their output length per shard is data-dependent: at most 1D_VAR."""
+    return isinstance(n, ir.Window) and bool(n.partition_by)
 
 
 @dataclass
@@ -110,6 +119,8 @@ def infer(root: ir.Node, *, force_rep: set[int] = frozenset(),
                 new = meet(new, ONE_D)
             elif is_bcast_join:
                 new = meet(ONE_D_VAR, dist[n.left.id])
+            elif is_partitioned_window(n):
+                new = meet(ONE_D_VAR, dist[n.child.id])
             elif isinstance(n, _VAR_OUT):
                 # out = 1D_VAR ∧ dist[in1] ∧ dist[in2] ...   (paper §4.4)
                 new = ONE_D_VAR
@@ -140,7 +151,8 @@ def infer(root: ir.Node, *, force_rep: set[int] = frozenset(),
             # REP inputs make relational ops sequential: propagate the meet
             # back to the inputs (paper: "all input and output arrays of an
             # aggregate should be replicated if any of them is").
-            if isinstance(n, _VAR_OUT) and dist[n.id] == REP and not is_bcast_join:
+            if ((isinstance(n, _VAR_OUT) or is_partitioned_window(n))
+                    and dist[n.id] == REP and not is_bcast_join):
                 for c in n.children:
                     if dist[c.id] != REP:
                         dist[c.id] = REP

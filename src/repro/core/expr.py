@@ -10,7 +10,7 @@ to exactly the same HLO as built-in operators — the paper's Figure 10 claim.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Sequence
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp

@@ -263,21 +263,62 @@ class Concat(Node):
         return n
 
 
+# Window kinds whose output is an integer position within the group (they
+# take no input expression — ``expr`` is None).
+RANK_KINDS = ("rank", "dense_rank", "row_number")
+WINDOW_KINDS = ("cumsum", "stencil") + RANK_KINDS
+
+
 @dataclass(eq=False)
 class Window(Node):
-    """Analytics window ops: cumsum or 1-D stencil (SMA/WMA).
+    """Analytics window ops: cumsum, 1-D stencil (SMA/WMA) or rank.
 
-    kind='cumsum'  -> out = prefix sums of ``expr``
-    kind='stencil' -> out[i] = sum_j weights[j] * x[i + j - center]
-    Adds column ``out`` to the child's schema.
+    kind='cumsum'      -> out = prefix sums of ``expr``
+    kind='stencil'     -> out[i] = sum_j weights[j] * x[i + j - center]
+    kind='rank' / 'dense_rank' / 'row_number'
+                       -> SQL ranking over ``order_by`` (requires
+                          ``partition_by``); ``expr`` is None.
+
+    ``partition_by`` non-empty makes the window PARTITIONED (SQL
+    ``OVER (PARTITION BY ... ORDER BY ...)``): the computation restarts at
+    every group boundary and stencil taps never cross one.  The physical
+    planner realizes it as hash(partition_by) co-location plus a
+    (partition_by + order_by) local sort, both elided when the input
+    already provides them.  Output rows come back in that grouped layout
+    (not input order).  Adds column ``out`` to the child's schema.
     """
 
     child: Node
     kind: str
-    expr: Expr
+    expr: Optional[Expr]
     out: str
     weights: tuple[float, ...] = ()
     center: int = 0
+    partition_by: tuple[str, ...] = ()
+    order_by: tuple[str, ...] = ()
+
+    def __post_init__(self):
+        if self.kind not in WINDOW_KINDS:
+            raise ValueError(f"unknown window kind {self.kind!r}")
+        self.partition_by = as_keys(self.partition_by) if self.partition_by else ()
+        self.order_by = as_keys(self.order_by) if self.order_by else ()
+        if self.kind in RANK_KINDS:
+            if not self.partition_by or not self.order_by:
+                raise ValueError(
+                    f"{self.kind} requires partition_by and order_by keys")
+        elif self.order_by and not self.partition_by:
+            # A global ORDER BY (no PARTITION BY) would need a global
+            # re-sort before the scan/stencil; silently computing in
+            # arrival order instead would be wrong — sort first.
+            raise ValueError(
+                f"{self.kind} with order_by requires partition_by; for a "
+                f"globally ordered window, sort(by=order_by) first")
+
+    def sort_keys(self) -> tuple[str, ...]:
+        """Keys the grouped layout must be ordered by: partition keys first,
+        then order keys (dropping duplicates already in the partition)."""
+        return self.partition_by + tuple(
+            k for k in self.order_by if k not in self.partition_by)
 
     @property
     def children(self):
@@ -286,7 +327,8 @@ class Window(Node):
     @property
     def schema(self):
         s = self.child.schema
-        s[self.out] = np.dtype(np.float32)
+        s[self.out] = (np.dtype(np.int32) if self.kind in RANK_KINDS
+                       else np.dtype(np.float32))
         return s
 
     def with_children(self, children):
@@ -295,7 +337,13 @@ class Window(Node):
         return n
 
     def short(self):
-        return f"Window({self.kind}->{self.out})"
+        over = ""
+        if self.partition_by:
+            over = f" over({','.join(self.partition_by)}"
+            if self.order_by:
+                over += f"; {','.join(self.order_by)}"
+            over += ")"
+        return f"Window({self.kind}->{self.out}{over})"
 
 
 @dataclass(eq=False)

@@ -29,7 +29,7 @@ from . import ir, physical as phys
 from . import physical_plan as pp
 from .compat import shard_map as _compat_shard_map
 from .expr import ExternalArray, evaluate
-from .table import DTable, block_counts, pad_to
+from .table import DTable, pad_to
 
 
 # ---------------------------------------------------------------------------
@@ -173,8 +173,23 @@ class Lowered:
                     cols, cnt = env[op.inputs[0]]
                     env_e = dict(cols)
                     env_e.update(ext)
-                    x = evaluate(n.expr, env_e)
-                    if n.kind == "cumsum":
+                    x = (evaluate(n.expr, env_e)
+                         if n.expr is not None else None)
+                    if n.partition_by:
+                        # grouped layout established upstream (hash exchange
+                        # + local sort, possibly elided): segment kernels,
+                        # no collectives.
+                        pk = tuple(cols[k] for k in n.partition_by)
+                        if n.kind == "cumsum":
+                            col = phys.segment_cumsum(x, pk, cnt,
+                                                      prefix_fn=sfn)
+                        elif n.kind == "stencil":
+                            col = phys.segment_stencil1d(x, pk, cnt,
+                                                         n.weights, n.center)
+                        else:
+                            ok = tuple(cols[k] for k in n.order_by)
+                            col = phys.segment_rank(pk, ok, cnt, n.kind)
+                    elif n.kind == "cumsum":
                         col = phys.dist_cumsum(x, cnt, ax,
                                                method=cfg.exscan_method,
                                                prefix_fn=sfn)
@@ -349,7 +364,8 @@ def _node_exprs(n: ir.Node):
             if a.expr is not None:
                 yield a.expr
     elif isinstance(n, ir.Window):
-        yield n.expr
+        if n.expr is not None:
+            yield n.expr
 
 
 def _walk_expr(e):

@@ -26,8 +26,6 @@ already provided by upstream data placement.
 """
 from __future__ import annotations
 
-from typing import Callable
-
 from . import ir
 from .expr import BinOp, ColRef, Expr
 
@@ -173,7 +171,12 @@ def _required_columns(root: ir.Node, keep: set[str] | None) -> dict[int, set[str
                     child_need |= {c for (_t, c) in agg.expr.columns()}
             req.setdefault(n.child.id, set()).update(child_need)
         elif isinstance(n, ir.Window):
-            child_need = (set(need) - {n.out}) | {c for (_t, c) in n.expr.columns()}
+            child_need = set(need) - {n.out}
+            if n.expr is not None:
+                child_need |= {c for (_t, c) in n.expr.columns()}
+            # partition/order keys are read by the segment kernels (and by
+            # the exchange/sort the planner may insert): always live.
+            child_need |= set(n.partition_by) | set(n.order_by)
             req.setdefault(n.child.id, set()).update(child_need)
         elif isinstance(n, ir.Sort):
             req.setdefault(n.child.id, set()).update(set(need) | set(n.by))

@@ -17,7 +17,6 @@ All shapes are static; validity is tracked with counts and masks (DESIGN.md
 from __future__ import annotations
 
 import functools
-from dataclasses import dataclass
 from typing import Sequence
 
 import jax
@@ -448,6 +447,101 @@ def segment_aggregate(keys_sorted, count, values: dict[str, tuple[str, jax.Array
     for name in out:
         out[name] = jnp.where(gvalid, out[name], jnp.zeros((), out[name].dtype))
     return out, jnp.minimum(n_seg, cap_out).astype(jnp.int32), overflow
+
+
+# ---------------------------------------------------------------------------
+# partitioned (segmented) windows — OVER (PARTITION BY ... ORDER BY ...)
+#
+# The physical planner guarantees the input is hash-partitioned on the
+# partition keys (every group lives whole on ONE shard) and locally sorted by
+# (partition keys, order keys), so all three kernels below are collective-free
+# segment computations: the group-by layout that makes relational planning
+# and array analytics compose (paper's core thesis).
+# ---------------------------------------------------------------------------
+
+def run_starts(keys: Sequence[jax.Array], valid: jax.Array) -> jax.Array:
+    """Boolean mask: True at the first row of each run of equal key tuples
+    (grouped input).  Invalid rows are never starts."""
+    neq = functools.reduce(jnp.logical_or, [k[1:] != k[:-1] for k in keys])
+    return valid & jnp.concatenate([jnp.full((1,), True), neq])
+
+
+def _segment_first_index(seg_start: jax.Array) -> jax.Array:
+    """For every row, the index of its segment's first row (running max of
+    start positions; rows before the first start map to 0)."""
+    idx = jnp.arange(seg_start.shape[0], dtype=jnp.int32)
+    return lax.cummax(jnp.where(seg_start, idx, 0))
+
+
+def segment_cumsum(x: jax.Array, part_keys: Sequence[jax.Array], count,
+                   prefix_fn=None):
+    """Grouped cumulative sum: a plain inclusive scan minus the running total
+    at each row's segment start (segment-reset exscan).  No collectives —
+    groups are shard-local under hash(partition_by)."""
+    cap = x.shape[0]
+    valid = valid_mask(count, cap)
+    xz = jnp.where(valid, x, jnp.zeros((), x.dtype))
+    seg_start = run_starts(part_keys, valid)
+    incl = prefix_fn(xz) if prefix_fn is not None else jnp.cumsum(xz)
+    first = _segment_first_index(seg_start)
+    base = jnp.where(first > 0, incl[jnp.maximum(first - 1, 0)],
+                     jnp.zeros((), incl.dtype))
+    return jnp.where(valid, incl - base, jnp.zeros((), incl.dtype))
+
+
+def segment_stencil1d(x: jax.Array, part_keys: Sequence[jax.Array], count,
+                      weights: Sequence[float], center: int):
+    """Boundary-masked 1-D stencil: taps that would cross a group edge are
+    zeroed (the zero-border convention applied per group).  No halo exchange
+    — groups are shard-local, so neighbors outside the group are simply
+    masked by segment-id mismatch."""
+    w = np.asarray(weights, dtype=np.float32)
+    k_left, k_right = center, len(w) - 1 - center
+    cap = x.shape[0]
+    valid = valid_mask(count, cap)
+    xz = jnp.where(valid, x.astype(jnp.float32), 0.0)
+    seg_start = run_starts(part_keys, valid)
+    sid = jnp.cumsum(seg_start.astype(jnp.int32)) - 1
+    sid = jnp.where(valid, sid, -1)                 # padding never matches
+    ext_x = jnp.concatenate([jnp.zeros((k_left,), jnp.float32), xz,
+                             jnp.zeros((k_right,), jnp.float32)])
+    ext_s = jnp.concatenate([jnp.full((k_left,), -2, jnp.int32), sid,
+                             jnp.full((k_right,), -2, jnp.int32)])
+    out = jnp.zeros((cap,), jnp.float32)
+    for j, wj in enumerate(w):
+        same = ext_s[j:j + cap] == sid
+        out = out + np.float32(wj) * jnp.where(same, ext_x[j:j + cap], 0.0)
+    return jnp.where(valid, out, 0.0)
+
+
+def segment_rank(part_keys: Sequence[jax.Array],
+                 order_keys: Sequence[jax.Array], count, kind: str):
+    """SQL ranking within groups of rows sorted by (part_keys, order_keys).
+
+    row_number: 1-based position in the group (ties broken by the stable
+    sort).  rank: 1 + position of the first row with the same order-key
+    tuple (ties share, gaps after).  dense_rank: 1 + number of distinct
+    order-key tuples before this row's (ties share, no gaps).  Reuses the
+    run-boundary machinery of lex_ranks/segment_aggregate: a (part, order)
+    run start is where ANY key column differs from the previous row.
+    """
+    cap = part_keys[0].shape[0]
+    valid = valid_mask(count, cap)
+    idx = jnp.arange(cap, dtype=jnp.int32)
+    seg_start = run_starts(part_keys, valid)
+    seg_first = _segment_first_index(seg_start)
+    if kind == "row_number":
+        r = idx - seg_first + 1
+    else:
+        order_start = run_starts(tuple(part_keys) + tuple(order_keys), valid)
+        if kind == "rank":
+            r = _segment_first_index(order_start) - seg_first + 1
+        elif kind == "dense_rank":
+            runs = jnp.cumsum(order_start.astype(jnp.int32))
+            r = runs - runs[seg_first] + 1
+        else:
+            raise ValueError(kind)
+    return jnp.where(valid, r, 0).astype(jnp.int32)
 
 
 # ---------------------------------------------------------------------------

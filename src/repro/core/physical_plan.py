@@ -51,13 +51,24 @@ from . import ir
 
 @dataclass(frozen=True)
 class Partitioning:
-    """Row placement across shards; ``keys`` only meaningful for hash/range."""
+    """Row placement across shards; ``keys`` only meaningful for hash/range.
+
+    ``ascending`` records the DIRECTION of range shard boundaries (shard 0
+    holds the smallest tuples iff True).  Co-location never depends on it,
+    but global-sortedness checks do: a locally ascending ordering over
+    descending shard ranges is NOT globally sorted.  Meaningless (always
+    True) for hash/rep/block.
+    """
 
     kind: str                       # "hash" | "range" | "rep" | "block"
     keys: tuple[str, ...] = ()
+    ascending: bool = True
 
     def short(self) -> str:
-        return f"{self.kind}({','.join(self.keys)})" if self.keys else self.kind
+        if not self.keys:
+            return self.kind
+        d = "" if self.ascending else " desc"
+        return f"{self.kind}({','.join(self.keys)}){d}"
 
 
 @dataclass(frozen=True)
@@ -158,7 +169,19 @@ class Map(POp):
 
 @dataclass(eq=False)
 class WindowOp(POp):
-    """cumsum / stencil (exscan or halo exchange, row-preserving)."""
+    """cumsum / stencil / rank (row-preserving).
+
+    Global: exscan or halo exchange.  Partitioned (``partition_by`` on the
+    logical node): collective-free segment kernels over the grouped layout
+    the planner establishes upstream (hash exchange + local sort, both
+    elided when already provided)."""
+
+    def short(self):
+        n = self.node
+        if n.partition_by:
+            ob = f"; {','.join(n.order_by)}" if n.order_by else ""
+            return f"WindowOp({n.kind} over {','.join(n.partition_by)}{ob})"
+        return f"WindowOp({n.kind})"
 
 
 @dataclass(eq=False)
@@ -307,7 +330,9 @@ def _remap_props(part: Partitioning, order: Ordering,
     new_part = part
     if part.kind in ("hash", "range"):
         if all(k in inv for k in part.keys):
-            new_part = Partitioning(part.kind, tuple(inv[k] for k in part.keys))
+            new_part = Partitioning(part.kind,
+                                    tuple(inv[k] for k in part.keys),
+                                    part.ascending)
         else:
             new_part = BLOCK
     prefix: list[str] = []
@@ -374,20 +399,52 @@ def plan_physical(root: ir.Node, dists: dict[int, str], cfg) -> PhysicalPlan:
 
         elif isinstance(n, ir.Window):
             c = plan.final_op(n.child)
-            # row-preserving, adds column n.out (may shadow an existing one)
-            part, order = c.part, c.order
+            if n.partition_by:
+                # Partitioned window: require hash(partition_by) co-location
+                # plus (partition_by, order_by) ascending grouping; insert
+                # the exchange/sort only where the input doesn't already
+                # provide them.  join -> window over the join keys therefore
+                # plans ZERO extra shuffles, and aggregate -> window on the
+                # same keys reuses the grouped layout entirely.
+                src = c
+                if dists[n.id] != D.REP and \
+                        not (elide and colocates(src.part, n.partition_by)):
+                    src = hash_exchange(n, src, n.partition_by)
+                skeys = n.sort_keys()
+                if not (elide and grouped(src.order, skeys)
+                        and src.order.ascending):
+                    src = local_sort(n, src, skeys)
+                part, order = src.part, src.order
+            else:
+                # global window: row-preserving pass-through
+                part, order = c.part, c.order
+                src = c
+            # adds column n.out (may shadow an existing one)
             if n.out in part.keys:
                 part = BLOCK
             if n.out in order.keys:
                 order = Ordering(order.keys[: order.keys.index(n.out)],
                                  order.ascending)
-            op = emit(WindowOp, n, (c,), part, order)
+            op = emit(WindowOp, n, (src,), part, order)
 
         elif isinstance(n, ir.Rebalance):
             c = plan.final_op(n.child)
-            # positional exchange: co-location is lost; per-shard order is a
-            # concatenation of source runs -> unordered (conservative).
-            op = emit(RebalanceOp, n, (c,), BLOCK, UNORDERED)
+            # Positional exchange: key co-location is lost (an equal-key run
+            # may now straddle a shard boundary, so even a range input can't
+            # keep its partitioning).  Ordering is another story: rebalance
+            # preserves the GLOBAL concatenated row order, so when the input
+            # was globally sorted — range-partitioned with the range keys
+            # and local ordering agreeing prefix-wise — every output shard
+            # receives a contiguous slice of a sorted sequence and stays
+            # locally sorted.  Per-shard-only ordering (e.g. hash + sort)
+            # does NOT survive: a shard may receive [tail of s0, head of s1].
+            order = UNORDERED
+            if elide and c.order.keys and c.part.kind == "range" \
+                    and c.part.ascending == c.order.ascending and (
+                    c.part.keys == c.order.keys[: len(c.part.keys)]
+                    or c.order.keys == c.part.keys[: len(c.order.keys)]):
+                order = c.order
+            op = emit(RebalanceOp, n, (c,), BLOCK, order)
 
         elif isinstance(n, ir.Concat):
             parts = [plan.final_op(p) for p in n.parts]
@@ -409,10 +466,14 @@ def plan_physical(root: ir.Node, dists: dict[int, str], cfg) -> PhysicalPlan:
             # tuple co-locate; minor keys order locally) or `by` a prefix of
             # the range keys (lexicographic order implies order on any key
             # prefix, and eliding preserves the stable tie order a re-sort
-            # would produce).
-            range_ok = c.part.kind == "range" and (
-                c.part.keys == n.by[: len(c.part.keys)]
-                or n.by == c.part.keys[: len(n.by)])
+            # would produce).  Shard-range DIRECTION must agree too: an
+            # ascending local order over descending shard ranges (e.g. a
+            # planner-inserted ascending LocalSort downstream of a
+            # descending sample sort) is not globally sorted.
+            range_ok = c.part.kind == "range" \
+                and c.part.ascending == n.ascending and (
+                    c.part.keys == n.by[: len(c.part.keys)]
+                    or n.by == c.part.keys[: len(n.by)])
             globally_sorted = sorted_already and (c.part.kind == "rep"
                                                   or range_ok)
             if globally_sorted:
@@ -420,7 +481,8 @@ def plan_physical(root: ir.Node, dists: dict[int, str], cfg) -> PhysicalPlan:
                 op = c
             else:
                 pre = (elide and grouped(c.order, n.by) and c.order.ascending)
-                op = emit(SampleSort, n, (c,), Partitioning("range", n.by),
+                op = emit(SampleSort, n, (c,),
+                          Partitioning("range", n.by, n.ascending),
                           Ordering(n.by, n.ascending), pre_sorted=pre)
 
         elif isinstance(n, ir.Join):

@@ -27,8 +27,6 @@ import time
 from typing import Any
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import configs

@@ -14,7 +14,6 @@ import numpy as np
 
 from repro import configs
 from repro.launch import steps as S
-from repro.launch.mesh import make_local_mesh
 from repro.models import lm, whisper
 
 

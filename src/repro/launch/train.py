@@ -15,7 +15,6 @@ import argparse
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro import configs
 from repro.configs import ShapeSpec
@@ -23,7 +22,7 @@ from repro.data.pipeline import PipelineConfig, TokenPipeline
 from repro.data.synth import token_corpus
 from repro.launch import steps as S
 from repro.launch.mesh import make_local_mesh, make_production_mesh
-from repro.models import lm, moe as moe_mod, sharding, whisper
+from repro.models import lm, moe as moe_mod
 from repro.optim import OptConfig, adamw
 from repro.runtime import FTConfig, TrainDriver
 

@@ -9,7 +9,6 @@ memory, identical FLOPs, compiles on CPU and runs on TPU.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
 
 import jax
 import jax.numpy as jnp

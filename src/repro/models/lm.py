@@ -7,7 +7,6 @@ Python loop of scans.  Decode carries caches through the same scans.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax

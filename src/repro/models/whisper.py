@@ -11,8 +11,6 @@ KV computed once from the encoder output at prefill.
 """
 from __future__ import annotations
 
-from typing import Any
-
 import jax
 import jax.numpy as jnp
 import numpy as np

@@ -9,9 +9,7 @@ emits from the sharding specs alone.
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
-from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -50,7 +48,10 @@ def lr_at(step, cfg: OptConfig):
 
 def init_state(params, cfg: OptConfig):
     sdt = jnp.dtype(cfg.state_dtype)
-    zeros = lambda p: jnp.zeros(p.shape, sdt)
+
+    def zeros(p):
+        return jnp.zeros(p.shape, sdt)
+
     state = {"m": jax.tree.map(zeros, params),
              "v": jax.tree.map(zeros, params),
              "step": jnp.zeros((), jnp.int32)}
@@ -62,7 +63,10 @@ def init_state(params, cfg: OptConfig):
 def state_specs(params, cfg: OptConfig):
     """ShapeDtypeStructs of the optimizer state (dry-run, no allocation)."""
     sdt = jnp.dtype(cfg.state_dtype)
-    spec = lambda p: jax.ShapeDtypeStruct(p.shape, sdt)
+
+    def spec(p):
+        return jax.ShapeDtypeStruct(p.shape, sdt)
+
     out = {"m": jax.tree.map(spec, params), "v": jax.tree.map(spec, params),
            "step": jax.ShapeDtypeStruct((), jnp.int32)}
     if cfg.use_master:

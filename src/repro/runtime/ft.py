@@ -17,7 +17,6 @@ single-process.  The three mechanisms the paper's deployment story needs:
 """
 from __future__ import annotations
 
-import dataclasses
 import signal
 import time
 from dataclasses import dataclass, field
@@ -138,4 +137,4 @@ def run_with_overflow_retry(build_and_run: Callable[[float], Any],
     raise RuntimeError(
         f"shuffle capacity overflow persisted after {max_retries} retries "
         f"(final slack {slack/2}) — data skew exceeds plan bounds (cf. paper "
-        f"Q05 skew discussion)")
+        "Q05 skew discussion)")

@@ -114,3 +114,64 @@ def o_stencil(x: np.ndarray, weights, center: int) -> np.ndarray:
 def sorted_cols(cols: dict, by: tuple[str, ...]) -> dict:
     order = np.lexsort(tuple(cols[k] for k in reversed(by)))
     return {k: v[order] for k, v in cols.items()}
+
+
+# ---------------------------------------------------------------------------
+# partitioned (OVER (PARTITION BY ... ORDER BY ...)) window oracles
+# ---------------------------------------------------------------------------
+
+
+def o_group_apply(cols: dict, partition_by, order_by, x: np.ndarray, fn,
+                  out: str = "_o", dtype=np.float32) -> dict:
+    """Sort rows by (partition, order) keys, apply ``fn`` to each group's
+    slice of ``x`` independently, and return the sorted columns plus the
+    result column ``out`` — the reference semantics of every partitioned
+    window: computation restarts at each group boundary."""
+    pk, ok = _as_keys(partition_by), _as_keys(order_by) if order_by else ()
+    keys = pk + tuple(k for k in ok if k not in pk)
+    order = np.lexsort(tuple(np.asarray(cols[k]) for k in reversed(keys)))
+    out_cols = {k: np.asarray(v)[order] for k, v in cols.items()}
+    xs = np.asarray(x)[order]
+    gk = [out_cols[k] for k in pk]
+    res = np.zeros(len(xs), dtype)
+    i = 0
+    while i < len(xs):
+        j = i
+        while j < len(xs) and all(k[j] == k[i] for k in gk):
+            j += 1
+        res[i:j] = fn(xs[i:j])
+        i = j
+    out_cols[out] = res
+    return out_cols
+
+
+def o_group_rank(cols: dict, partition_by, order_by, kind: str,
+                 out: str = "_o") -> dict:
+    """SQL rank/dense_rank/row_number oracle over the grouped-sorted layout."""
+    pk, ok = _as_keys(partition_by), _as_keys(order_by)
+    keys = pk + tuple(k for k in ok if k not in pk)
+    order = np.lexsort(tuple(np.asarray(cols[k]) for k in reversed(keys)))
+    out_cols = {k: np.asarray(v)[order] for k, v in cols.items()}
+    n = len(order)
+    gk = [out_cols[k] for k in pk]
+    okv = [out_cols[k] for k in ok]
+    res = np.zeros(n, np.int32)
+    i = 0
+    while i < n:
+        j = i
+        while j < n and all(k[j] == k[i] for k in gk):
+            j += 1
+        r = dense = 0
+        for p in range(i, j):
+            new_tuple = p == i or any(k[p] != k[p - 1] for k in okv)
+            if new_tuple:
+                r, dense = p - i + 1, dense + 1
+            if kind == "row_number":
+                res[p] = p - i + 1
+            elif kind == "rank":
+                res[p] = r
+            else:
+                res[p] = dense
+        i = j
+    out_cols[out] = res
+    return out_cols

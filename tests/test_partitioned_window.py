@@ -1,0 +1,238 @@
+"""Partitioned window functions (`over(partition_by=..., order_by=...)`).
+
+Correctness is checked against per-group numpy oracles (tests/oracle.py):
+duplicate and empty groups, groups spanning input-shard boundaries, fewer
+groups than shards, and 1/2/8 fake devices via subprocesses.  Plan-shape
+assertions live in tests/test_plan_census.py.
+"""
+import numpy as np
+import pytest
+
+from repro import hiframes as hf
+from repro.core import ir
+from oracle import o_group_apply, o_group_rank, o_stencil
+from test_physical_plan import run_sharded
+
+
+def _grouped_frame(n=600, n_groups=9, seed=7):
+    """Groups interleaved across the whole input (they span shard
+    boundaries under any block layout); group ids are sparse (2 of every 3
+    ids in the key space are EMPTY); ``t`` is unique per row so every
+    order-dependent window is deterministic."""
+    rng = np.random.default_rng(seed)
+    return {"g": (3 * rng.integers(0, n_groups, n)).astype(np.int32),
+            "t": rng.permutation(n).astype(np.int32),
+            "x": rng.normal(size=n).astype(np.float32)}
+
+
+def _sorted_out(out: dict, keys=("g", "t")) -> dict:
+    order = np.lexsort(tuple(out[k] for k in reversed(keys)))
+    return {k: v[order] for k, v in out.items()}
+
+
+# -- single-process oracle checks ---------------------------------------------
+
+
+def test_grouped_cumsum_matches_oracle():
+    cols = _grouped_frame()
+    df = hf.table(cols)
+    out = _sorted_out(df.over("g", order_by="t").cumsum(df["x"], out="c")
+                      .collect().to_numpy())
+    ref = o_group_apply(cols, "g", "t", cols["x"], np.cumsum)
+    np.testing.assert_array_equal(out["g"], ref["g"])
+    np.testing.assert_array_equal(out["t"], ref["t"])
+    np.testing.assert_allclose(out["c"], ref["_o"], atol=1e-3)
+
+
+@pytest.mark.parametrize("weights,center", [([1, 2, 1], 1), ([1, 1, 1], 1),
+                                            ([1, 0, 0, 2], 3)])
+def test_grouped_stencil_masks_group_edges(weights, center):
+    """Taps crossing a group boundary contribute zero — each group behaves
+    like an independent series with the zero-border convention."""
+    cols = _grouped_frame(seed=8)
+    df = hf.table(cols)
+    out = _sorted_out(
+        hf.stencil(df, df["x"], weights, center=center, out="s",
+                   partition_by="g", order_by="t").collect().to_numpy())
+    ref = o_group_apply(cols, "g", "t", cols["x"],
+                        lambda s: o_stencil(s, weights, center))
+    np.testing.assert_array_equal(out["g"], ref["g"])
+    np.testing.assert_allclose(out["s"], ref["_o"], atol=1e-3)
+
+
+def test_grouped_wma_and_lag_lead():
+    cols = _grouped_frame(seed=9)
+    df = hf.table(cols)
+    w = df.over("g", order_by="t")
+    wma = _sorted_out(w.wma(df["x"], [1, 2, 1], out="w").collect().to_numpy())
+    ref = o_group_apply(cols, "g", "t", cols["x"],
+                        lambda s: o_stencil(s, [0.25, 0.5, 0.25], 1))
+    np.testing.assert_allclose(wma["w"], ref["_o"], atol=1e-3)
+
+    lag = _sorted_out(w.lag(df["x"], n=2, out="l").collect().to_numpy())
+    ref_lag = o_group_apply(
+        cols, "g", "t", cols["x"],
+        lambda s: np.concatenate([np.zeros(min(2, len(s)), np.float32),
+                                  s[:-2]])[: len(s)])
+    np.testing.assert_allclose(lag["l"], ref_lag["_o"], atol=1e-5)
+
+    lead = _sorted_out(w.lead(df["x"], n=1, out="l").collect().to_numpy())
+    ref_lead = o_group_apply(
+        cols, "g", "t", cols["x"],
+        lambda s: np.concatenate([s[1:], np.zeros(min(1, len(s)), np.float32)]))
+    np.testing.assert_allclose(lead["l"], ref_lead["_o"], atol=1e-5)
+
+
+def test_grouped_rolling_sum_mean():
+    cols = _grouped_frame(seed=10)
+    df = hf.table(cols)
+    w = df.over("g", order_by="t")
+    out = _sorted_out(w.rolling_sum(df["x"], 4, out="r").collect().to_numpy())
+
+    def roll(s):
+        acc = np.zeros(len(s), np.float32)
+        for i in range(len(s)):
+            acc[i] = s[max(0, i - 3): i + 1].sum()
+        return acc
+
+    ref = o_group_apply(cols, "g", "t", cols["x"], roll)
+    np.testing.assert_allclose(out["r"], ref["_o"], atol=1e-3)
+    # rolling_mean == rolling_sum / window (zero-padded borders, see api doc)
+    mean = _sorted_out(w.rolling_mean(df["x"], 4, out="m").collect().to_numpy())
+    np.testing.assert_allclose(mean["m"], ref["_o"] / 4.0, atol=1e-3)
+
+
+@pytest.mark.parametrize("kind", ["rank", "dense_rank", "row_number"])
+def test_rank_kinds_with_duplicate_order_keys(kind):
+    cols = _grouped_frame(seed=11)
+    cols["t"] = (cols["t"] // 7).astype(np.int32)      # duplicate order keys
+    df = hf.table(cols)
+    out = hf.__dict__[kind](df, "g", "t", out="r").collect().to_numpy()
+    ref = o_group_rank(cols, "g", "t", kind)
+    # ties make row identity ambiguous: compare the multiset of ranks per
+    # (g, t) pair — identical for rank/dense_rank, a permutation of
+    # 1..#ties offsets for row_number.
+    def by_pair(g, t, r):
+        m = {}
+        for a, b, c in zip(g, t, r):
+            m.setdefault((int(a), int(b)), []).append(int(c))
+        return {k: sorted(v) for k, v in m.items()}
+    assert by_pair(out["g"], out["t"], out["r"]) == \
+        by_pair(ref["g"], ref["t"], ref["_o"])
+
+
+def test_rank_requires_keys():
+    df = hf.table(_grouped_frame())
+    with pytest.raises(ValueError):
+        hf.rank(df, "g", ())
+    with pytest.raises(ValueError):
+        ir.Window(df.node, "rank", None, "r", partition_by=(), order_by=("t",))
+    with pytest.raises(ValueError):
+        ir.Window(df.node, "nope", None, "r")
+
+
+def test_over_fluent_equals_kwargs_form():
+    cols = _grouped_frame(seed=12)
+    df = hf.table(cols)
+    a = df.over("g", order_by="t").cumsum(df["x"], out="c")
+    b = hf.cumsum(df, df["x"], out="c", partition_by="g", order_by="t")
+    assert a.node.short() == b.node.short()
+    na, nb = _sorted_out(a.collect().to_numpy()), _sorted_out(b.collect().to_numpy())
+    np.testing.assert_allclose(na["c"], nb["c"], atol=1e-6)
+
+
+def test_column_pruning_keeps_window_keys():
+    """Selecting only the window output must not prune the partition/order
+    keys (they feed the exchange, the sort and the segment kernels)."""
+    cols = _grouped_frame(seed=13)
+    df = hf.table(cols)
+    win = df.over("g", order_by="t").cumsum(df["x"], out="c")
+    only_c = win[["c"]].collect().to_numpy()
+    ref = o_group_apply(cols, "g", "t", cols["x"], np.cumsum)
+    np.testing.assert_allclose(np.sort(only_c["c"]), np.sort(ref["_o"]),
+                               atol=1e-3)
+
+
+def test_duplicate_partition_order_key_column():
+    """order_by repeating a partition column must not double-sort or crash."""
+    cols = _grouped_frame(seed=14)
+    df = hf.table(cols)
+    node = hf.cumsum(df, df["x"], out="c", partition_by="g",
+                     order_by=("g", "t")).node
+    assert node.sort_keys() == ("g", "t")
+
+
+def test_elided_vs_baseline_join_window_equal():
+    """elide_exchanges on/off must be observationally identical for the
+    join -> partitioned-window pipeline."""
+    rng = np.random.default_rng(15)
+    n = 400
+    left = {"k": rng.integers(0, 6, n).astype(np.int32),
+            "t": rng.permutation(n).astype(np.int32),
+            "x": rng.normal(size=n).astype(np.float32)}
+    right = {"k": np.arange(6, dtype=np.int32),
+             "w": rng.normal(size=6).astype(np.float32)}
+    j = hf.join(hf.table(left), hf.table(right, "d"), on="k")
+    win = hf.wma(j, j["x"] * j["w"], [1, 2, 1], out="v",
+                 partition_by="k", order_by="t")
+    on = _sorted_out(win.collect(hf.ExecConfig(elide_exchanges=True)).to_numpy(),
+                     keys=("k", "t"))
+    off = _sorted_out(win.collect(hf.ExecConfig(elide_exchanges=False)).to_numpy(),
+                      keys=("k", "t"))
+    for c in on:
+        np.testing.assert_allclose(on[c], off[c], rtol=1e-5)
+
+
+# -- sharded subprocess checks (groups span shard boundaries) -----------------
+
+
+_GROUPED_BODY = """
+    from oracle import o_group_apply, o_group_rank, o_stencil
+    rng = np.random.default_rng(21)
+    n = 700
+    cols = {"g": (3 * rng.integers(0, 5, n)).astype(np.int32),
+            "t": rng.permutation(n).astype(np.int32),
+            "x": rng.normal(size=n).astype(np.float32)}
+    df = hf.table(cols)
+    w = df.over("g", order_by="t")
+
+    def sort_out(out):
+        order = np.lexsort((out["t"], out["g"]))
+        return {k: v[order] for k, v in out.items()}
+
+    out = sort_out(w.cumsum(df["x"], out="c").collect().to_numpy())
+    ref = o_group_apply(cols, "g", "t", cols["x"], np.cumsum)
+    assert np.array_equal(out["g"], ref["g"]) and np.array_equal(out["t"], ref["t"])
+    assert np.allclose(out["c"], ref["_o"], atol=1e-3)
+
+    out = sort_out(w.wma(df["x"], [1, 2, 1], out="w").collect().to_numpy())
+    ref = o_group_apply(cols, "g", "t", cols["x"],
+                        lambda s: o_stencil(s, [0.25, 0.5, 0.25], 1))
+    assert np.allclose(out["w"], ref["_o"], atol=1e-3)
+
+    out = sort_out(w.lag(df["x"], out="l").collect().to_numpy())
+    ref = o_group_apply(cols, "g", "t", cols["x"],
+                        lambda s: np.concatenate([[np.float32(0)], s[:-1]]))
+    assert np.allclose(out["l"], ref["_o"], atol=1e-5)
+
+    out = sort_out(w.rank(out="r").collect().to_numpy())
+    ref = o_group_rank(cols, "g", "t", "rank")
+    assert np.array_equal(out["r"], ref["_o"])
+
+    # fewer groups than shards: some shards hold zero groups after the
+    # exchange — counts must still reconcile and values match.
+    few = {"g": np.repeat(np.int32(4), 64) * (np.arange(64) % 2).astype(np.int32),
+           "t": np.arange(64, dtype=np.int32),
+           "x": np.ones(64, np.float32)}
+    fdf = hf.table(few, "few")
+    fout = sort_out(fdf.over("g", order_by="t").cumsum(fdf["x"], out="c")
+                    .collect().to_numpy())
+    fref = o_group_apply(few, "g", "t", few["x"], np.cumsum)
+    assert np.array_equal(fout["g"], fref["g"])
+    assert np.allclose(fout["c"], fref["_o"], atol=1e-4)
+"""
+
+
+@pytest.mark.parametrize("devices", [1, 2, 8])
+def test_grouped_windows_match_oracle_sharded(devices):
+    run_sharded(_GROUPED_BODY, devices)

@@ -32,7 +32,9 @@ def run_sharded(body: str, devices: int):
         print("SUBPROC_OK")
     """)
     env = dict(os.environ)
-    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    # src for the package, tests for the numpy oracles (oracle.py)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(ROOT, "src"), os.path.join(ROOT, "tests")])
     env.pop("XLA_FLAGS", None)
     res = subprocess.run([sys.executable, "-c", script], env=env,
                          capture_output=True, text=True, timeout=600)

@@ -1,0 +1,182 @@
+"""Shuffle-census regression gate for the canonical pipelines.
+
+The physical planner is deterministic and device-free, so these tests pin
+the EXACT number of hash exchanges / local sorts / sample sorts / rebalances
+each canonical pipeline plans — both through ``physical_plan().counts()``
+and through the ``explain()`` header the CI logs show.  An optimizer or
+planner regression that silently re-introduces a shuffle fails here loudly
+instead of shipping a slow plan.  Run explicitly in CI as its own step.
+"""
+import numpy as np
+
+from repro import hiframes as hf
+from repro.core import physical_plan as pp
+
+
+def _frames(n=400, m=60, seed=3):
+    rng = np.random.default_rng(seed)
+    left = {"k1": rng.integers(0, 7, n).astype(np.int32),
+            "k2": rng.integers(0, 9, n).astype(np.int32),
+            "t": rng.permutation(n).astype(np.int32),
+            "x": rng.normal(size=n).astype(np.float32)}
+    right = {"ca": rng.integers(0, 7, m).astype(np.int32),
+             "cb": rng.integers(0, 9, m).astype(np.int32),
+             "w": rng.normal(size=m).astype(np.float32)}
+    return left, right
+
+
+def _census(df, cfg=None, **expect):
+    """Assert exact counts and that the explain() header agrees."""
+    plan = df.physical_plan(cfg or hf.ExecConfig())
+    c = plan.counts()
+    for k, v in expect.items():
+        assert c[k] == v, f"{k}: planned {c[k]}, census expects {v}\n{plan.render()}"
+    header = df.explain(cfg).split("\n\n")[1].splitlines()[0]
+    assert f"physical plan: {plan.shuffle_count()} shuffles" in header
+    return plan
+
+
+def test_census_join_then_aggregate_same_keys():
+    left, right = _frames()
+    j = hf.join(hf.table(left), hf.table(right, "d"),
+                on=[("k1", "ca"), ("k2", "cb")])
+    a = hf.aggregate(j, by=("k1", "k2"), s=hf.sum_(j["w"]), c=hf.count())
+    _census(a, hash_exchanges=2, local_sorts=1, sample_sorts=0, rebalances=0)
+
+
+def test_census_join_then_aggregate_baseline():
+    left, right = _frames()
+    j = hf.join(hf.table(left), hf.table(right, "d"),
+                on=[("k1", "ca"), ("k2", "cb")])
+    a = hf.aggregate(j, by=("k1", "k2"), c=hf.count())
+    _census(a, hf.ExecConfig(elide_exchanges=False),
+            hash_exchanges=3, local_sorts=1)
+
+
+def test_census_broadcast_join():
+    left, right = _frames()
+    j = hf.join(hf.table(left), hf.table(right, "d").replicate(),
+                on=[("k1", "ca"), ("k2", "cb")])
+    _census(j, hash_exchanges=0, local_sorts=0, sample_sorts=0, rebalances=0)
+
+
+def test_census_sort_then_aggregate_same_key():
+    left, _ = _frames()
+    a = hf.aggregate(hf.table(left).sort(by=("k1", "k2")), by=("k1", "k2"),
+                     c=hf.count())
+    _census(a, hf.ExecConfig(optimize_plan=False),
+            hash_exchanges=0, local_sorts=0, sample_sorts=1)
+
+
+def test_census_join_then_window_over_join_keys():
+    """The PR 3 acceptance shape: join -> wma OVER the join keys plans the
+    SAME number of hash exchanges as the bare join — the window adds zero
+    shuffles, only the grouped local sort."""
+    left, right = _frames()
+    l, r = hf.table(left), hf.table(right, "d")
+    bare = hf.join(l, r, on=[("k1", "ca"), ("k2", "cb")])
+    bare_hash = bare.physical_plan().counts()["hash_exchanges"]
+    win = hf.wma(bare, bare["x"] * bare["w"], [1, 2, 1], out="v",
+                 partition_by=("k1", "k2"), order_by="t")
+    plan = _census(win, hash_exchanges=bare_hash, local_sorts=1,
+                   sample_sorts=0, rebalances=0)
+    assert bare_hash == 2
+    # the same pipeline without elision pays the window's own exchange
+    base = win.physical_plan(hf.ExecConfig(elide_exchanges=False)).counts()
+    assert base["hash_exchanges"] == 3
+    assert any(isinstance(op, pp.WindowOp) for op in plan.ops)
+
+
+def test_census_aggregate_then_window_same_key():
+    """aggregate -> window over the aggregate key reuses the grouped layout:
+    no extra exchange AND no extra sort."""
+    left, _ = _frames()
+    df = hf.table(left)
+    a = hf.aggregate(df, "k1", s=hf.sum_(df["x"]))
+    w = hf.cumsum(a, a["s"], out="cs", partition_by="k1")
+    _census(w, hash_exchanges=1, local_sorts=1)
+
+
+def test_census_partitioned_window_on_scan():
+    """A bare scan provides nothing: the window pays one exchange + one sort
+    (and nothing more)."""
+    left, _ = _frames()
+    df = hf.table(left)
+    w = df.over("k1", order_by="t").cumsum(df["x"], out="c")
+    _census(w, hash_exchanges=1, local_sorts=1, sample_sorts=0, rebalances=0)
+
+
+def test_census_rebalance_preserves_global_order():
+    """ROADMAP follow-up: range-partitioned + locally-sorted inputs stay
+    globally sorted through Rebalance — the re-sort after a global stencil
+    rides the preserved ordering (SampleSort pre_sorted, no local pre-sort)."""
+    left, _ = _frames()
+    cfg = hf.ExecConfig(optimize_plan=False)
+    s = hf.table(left).sort("t")
+    st = hf.sma(s, s["x"], 3, out="m")
+    again = st.sort("t")
+    plan = _census(again, cfg, sample_sorts=2, rebalances=1, hash_exchanges=0)
+    reb = [op for op in plan.ops if isinstance(op, pp.RebalanceOp)]
+    assert reb and reb[0].order.keys == ("t",), plan.render()
+    final = [op for op in plan.ops if isinstance(op, pp.SampleSort)][-1]
+    assert final.pre_sorted, plan.render()
+    # the conservative baseline (elision off) drops the ordering again
+    plan_off = again.physical_plan(hf.ExecConfig(optimize_plan=False,
+                                                 elide_exchanges=False))
+    reb_off = [op for op in plan_off.ops if isinstance(op, pp.RebalanceOp)]
+    assert reb_off and reb_off[0].order.keys == ()
+
+
+def test_descending_range_never_satisfies_ascending_sort():
+    """Regression (direction-blind range partitioning): a descending sample
+    sort leaves descending shard ranges; a planner-inserted ascending
+    LocalSort (partitioned window) must NOT let a later ascending Sort
+    become a no-op — the data is locally but not globally ascending."""
+    left, _ = _frames(seed=6)
+    cfg = hf.ExecConfig(optimize_plan=False)
+    d = hf.table(left).sort("k1", ascending=False)
+    w = d.over("k1", order_by="t").cumsum(d["x"], out="c")
+    again = w.sort(by=("k1", "t"))
+    plan = again.physical_plan(cfg)
+    # descending sample sort + the final ascending sort both plan
+    assert plan.counts()["sample_sorts"] == 2, plan.render()
+    out = again.collect(cfg).to_numpy()
+    assert np.array_equal(out["k1"], np.sort(left["k1"]))
+    run_sharded_desc = """
+        rng = np.random.default_rng(6)
+        n = 400
+        left = {"k1": rng.integers(0, 7, n).astype(np.int32),
+                "t": rng.permutation(n).astype(np.int32),
+                "x": rng.normal(size=n).astype(np.float32)}
+        cfg = hf.ExecConfig(optimize_plan=False)
+        d = hf.table(left).sort("k1", ascending=False)
+        w = d.over("k1", order_by="t").cumsum(d["x"], out="c")
+        out = w.sort(by=("k1", "t")).collect(cfg).to_numpy()
+        assert np.array_equal(out["k1"], np.sort(left["k1"])), out["k1"]
+    """
+    from test_physical_plan import run_sharded
+    run_sharded(run_sharded_desc, devices=8)
+
+
+def test_global_order_by_without_partition_raises():
+    """SQL SUM() OVER (ORDER BY t) with no PARTITION BY is not silently
+    computed in arrival order — it is rejected with guidance to sort."""
+    left, _ = _frames()
+    df = hf.table(left)
+    import pytest
+    with pytest.raises(ValueError, match="sort"):
+        hf.cumsum(df, df["x"], order_by="t")
+    with pytest.raises(ValueError, match="sort"):
+        hf.wma(df, df["x"], [1, 2, 1], order_by="t")
+
+
+def test_census_rebalance_result_still_sorted():
+    """Execution cross-check for the rebalance-ordering fix."""
+    left, _ = _frames(seed=5)
+    cfg = hf.ExecConfig(optimize_plan=False)
+    s = hf.table(left).sort("t")
+    res = hf.sma(s, s["x"], 3, out="m").sort("t").collect(cfg).to_numpy()
+    assert np.array_equal(res["t"], np.sort(left["t"]))
+    ref = np.convolve(left["x"][np.argsort(left["t"])],
+                      np.ones(3, np.float32) / 3, mode="same")
+    np.testing.assert_allclose(res["m"], ref, atol=1e-3)

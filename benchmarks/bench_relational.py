@@ -103,10 +103,33 @@ def bench_aggregate_multikey(n):
            f"speedup={us_np/us_hf:.2f}x")
 
 
+def bench_groupby_partialagg(n):
+    """Map-side partial aggregation A/B (paper Fig. 10 axis: shuffle volume
+    dominates group-by cost).  Low-cardinality keys are the favorable case:
+    the partial stage collapses each shard's rows to <= n_keys partial rows
+    before the exchange.  The derived field records the P=8 collective/byte
+    census so the bench JSON captures the wire-volume delta, not just time."""
+    n_keys = 64
+    rng = np.random.default_rng(7)
+    t = {"k": rng.integers(0, n_keys, n).astype(np.int32),
+         "x": rng.normal(size=n).astype(np.float32)}
+    df = hf.table(t)
+    frame = hf.aggregate(df, "k", s=hf.sum_(df["x"]), c=hf.count(),
+                         m=hf.mean(df["x"]))
+    for tag, cfg in (("on", hf.ExecConfig(agg_group_cap=2 * n_keys)),
+                     ("off", hf.ExecConfig(partial_agg=False))):
+        census = frame.physical_plan(cfg).shuffle_census(P=8)
+        us = timeit(frame.lower(cfg))
+        report(f"fig10_groupby_partialagg_{tag}_n{n}", us,
+               f"collectives={census['all_to_all']};"
+               f"payload_bytes={census['payload_bytes']};rows={n}")
+
+
 def run(scale: float = 1.0):
     bench_filter(int(2_000_000 * scale))
     bench_join(int(500_000 * scale), int(50_000 * scale))
     bench_aggregate(int(1_000_000 * scale))
+    bench_groupby_partialagg(int(1_000_000 * scale))
 
 
 def run_multikey(scale: float = 1.0):

@@ -117,6 +117,17 @@ def run(scale: float = 1.0):
         report(f"fig11_q26_multikey_{tag}_sf{scale}", us,
                f"shuffles={shuffles};local_sorts={sorts};rows={n_sales}")
 
+    # Q26 packed-exchange A/B: the same multikey pipeline with the payload
+    # word-packing on (2 all_to_all per exchange) vs per-column collectives.
+    # derived records the P=8 collective census alongside the timing.
+    for tag, cfg in (("on", hf.ExecConfig()),
+                     ("off", hf.ExecConfig(packed_exchange=False))):
+        census = frame.physical_plan(cfg).shuffle_census(P=8)
+        us = timeit(frame.lower(cfg))
+        report(f"fig11_q26_packed_{tag}_sf{scale}", us,
+               f"collectives={census['all_to_all']};"
+               f"payload_bytes={census['payload_bytes']};rows={n_sales}")
+
     wcs = synth.web_clickstream(n_sales, n_items, n_cust, seed=12, skew=1.1)
     # Q05 under skew: run through the overflow-retry driver and report the
     # number of replans the skew forced (the paper's Q05 story).

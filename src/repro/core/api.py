@@ -155,7 +155,10 @@ class DataFrame:
                 return t
             cfg = _dc.replace(cfg,
                               join_expansion=max(cfg.join_expansion, 1.0) * 2,
-                              shuffle_slack=cfg.shuffle_slack * 2)
+                              shuffle_slack=cfg.shuffle_slack * 2,
+                              agg_group_cap=(max(1, cfg.agg_group_cap) * 2
+                                             if cfg.agg_group_cap is not None
+                                             else None))
         return t
 
     def lower(self, cfg: ExecConfig | None = None, keep: Sequence[str] | None = None,

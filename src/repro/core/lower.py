@@ -57,6 +57,20 @@ class ExecConfig:
     # restores the exchange-per-operator baseline — the A/B lever for
     # benchmarks and a safety valve.
     elide_exchanges: bool = True
+    # -- shuffle engine v2 levers (both A/B-gated like elide_exchanges) -----
+    # packed_exchange: ship ALL columns of an exchange as ONE word-packed
+    # (P, bucket, W) uint32 payload — exactly 2 all_to_all per exchange
+    # (counts + payload) instead of 1 + n_columns.  False restores the
+    # per-column-collective baseline.
+    packed_exchange: bool = True
+    # partial_agg: split a shuffling aggregate with decomposable agg fns
+    # into PartialAgg -> HashExchange -> FinalAgg, so each shard ships at
+    # most its DISTINCT local key groups instead of all raw rows.
+    partial_agg: bool = True
+    # agg_group_cap: optional user bound on distinct groups per shard; when
+    # set, PartialAgg buffers (and the post-partial exchange bucket) shrink
+    # to it.  Overflow-flagged and doubled by the collect() retry loop.
+    agg_group_cap: int | None = None
     # capacity-overflow auto-retry (runtime/ft.py semantics, built into
     # collect): replan with doubled expansion, at most this many times.
     auto_retry: int = 3
@@ -205,7 +219,8 @@ class Lowered:
                     out, cnt2, ovf = phys.shuffle_by_key(
                         cols, cnt, op.keys, axes=axes,
                         bucket_cap=op.bucket, cap_out=op.cap,
-                        partition_fn=pfn, prefix_fn=sfn)
+                        partition_fn=pfn, prefix_fn=sfn,
+                        packed=cfg.packed_exchange)
                     flags.append(ovf)
                     res = (out, cnt2)
 
@@ -241,28 +256,44 @@ class Lowered:
                         out["__v_" + name] = arr
                     res = (out, cnt)
 
-                elif isinstance(op, pp.SegmentAgg):
+                elif isinstance(op, pp.PartialAgg):
                     cols, cnt = env[op.inputs[0]]
                     values = {name: (agg.fn, cols["__v_" + name])
                               for name, agg in n.aggs.items()}
                     keys = tuple(cols[k] for k in n.key)
-                    out, n_seg, ovf = phys.segment_aggregate(
+                    out, n_seg, ovf = phys.partial_aggregate(
                         keys, cnt, values, cap_out=op.cap,
                         segsum_fn=kernels.get("segment_sums"))
                     flags.append(ovf)
-                    # key columns come back as __key<i>__ in key order;
-                    # restore names, keeping them FIRST (schema order).
-                    renamed = {k: out.pop(f"__key{i}__")
-                               for i, k in enumerate(n.key)}
-                    renamed.update(out)
-                    res = (renamed, n_seg)
+                    res = (_restore_key_names(out, n.key), n_seg)
+
+                elif isinstance(op, pp.SegmentAgg):
+                    cols, cnt = env[op.inputs[0]]
+                    keys = tuple(cols[k] for k in n.key)
+                    if op.from_partials:
+                        out, n_seg, ovf = phys.final_aggregate(
+                            keys, cnt,
+                            {name: agg.fn for name, agg in n.aggs.items()},
+                            cols, cap_out=op.cap,
+                            segsum_fn=kernels.get("segment_sums"))
+                    else:
+                        values = {name: (agg.fn, cols["__v_" + name])
+                                  for name, agg in n.aggs.items()}
+                        out, n_seg, ovf = phys.segment_aggregate(
+                            keys, cnt, values, cap_out=op.cap,
+                            segsum_fn=kernels.get("segment_sums"),
+                            presorted=(op.nunique_ride,)
+                            if op.nunique_ride else ())
+                    flags.append(ovf)
+                    res = (_restore_key_names(out, n.key), n_seg)
 
                 elif isinstance(op, pp.SampleSort):
                     cols, cnt = env[op.inputs[0]]
                     out, cnt2, ovf = phys.sample_sort(
                         cols, cnt, n.by, axes=ax, bucket_cap=op.bucket,
                         cap_out=op.cap, ascending=n.ascending,
-                        pre_sorted=op.pre_sorted)
+                        pre_sorted=op.pre_sorted,
+                        packed=cfg.packed_exchange)
                     flags.append(ovf)
                     res = (out, cnt2)
 
@@ -270,13 +301,14 @@ class Lowered:
                     cols, cnt = env[op.inputs[0]]
                     out, cnt2, ovf = phys.rebalance(
                         cols, cnt, axes=axes, bucket_cap=op.bucket,
-                        cap_out=op.cap, partition_fn=pfn, prefix_fn=sfn)
+                        cap_out=op.cap, partition_fn=pfn, prefix_fn=sfn,
+                        packed=cfg.packed_exchange)
                     flags.append(ovf)
                     res = (out, cnt2)
 
                 elif isinstance(op, pp.ConcatOp):
                     parts = [env[i] for i in op.inputs]
-                    out, cnt, ovf = phys.concat(parts, op.cap)
+                    out, cnt, ovf = phys.concat(parts, op.cap, prefix_fn=sfn)
                     flags.append(ovf)
                     res = (out, cnt)
 
@@ -352,6 +384,14 @@ class Lowered:
         return DTable(columns=out["cols"], counts=out["count"],
                       capacity=cap, nshards=self.P, dist=self.dists[self.root.id],
                       overflow=bool(np.any(np.asarray(out["overflow"]))))
+
+
+def _restore_key_names(out: dict, key: tuple[str, ...]) -> dict:
+    """Segment-aggregation outputs name key columns ``__key<i>__`` in key
+    order; restore the real names, keeping them FIRST (schema order)."""
+    renamed = {k: out.pop(f"__key{i}__") for i, k in enumerate(key)}
+    renamed.update(out)
+    return renamed
 
 
 def _node_exprs(n: ir.Node):

@@ -88,24 +88,101 @@ def hash_keys(cols: dict[str, jax.Array], key_names: Sequence[str]) -> jax.Array
 
 def compact(cols: dict[str, jax.Array], keep: jax.Array, cap_out: int,
             prefix_fn=None):
-    """Move rows where ``keep`` into the prefix of fresh (cap_out,) buffers.
+    """Move rows where ``keep`` into the prefix of fresh (cap_out, ...) buffers.
 
     Returns (cols_out, count_out, overflow).  Rows beyond cap_out are dropped
     and flagged — the driver's retry hook (fault tolerance for capacity
     planning, DESIGN.md §2).  ``prefix_fn`` routes the slot-assignment scan
-    through the stream_compact Pallas kernel.
+    through the stream_compact Pallas kernel; ``keep`` may be boolean or an
+    integer 0/1 vector — both take the same kernel fast path.  Columns may
+    carry trailing dims (the packed-word matrix of :func:`pack_columns`
+    compacts row-wise like any scalar column).  A zero-length shard (empty
+    ``keep``) short-circuits before any scan runs — the prefix kernel never
+    sees a zero-size input.
     """
+    if keep.shape[0] == 0:
+        out = {name: jnp.zeros((cap_out,) + v.shape[1:], v.dtype)
+               for name, v in cols.items()}
+        return out, jnp.int32(0), jnp.array(False)
     keep = keep.astype(jnp.int32)
     incl = prefix_fn(keep) if prefix_fn is not None else jnp.cumsum(keep)
     dest = incl - 1
-    total = dest[-1] + 1 if keep.shape[0] else jnp.int32(0)
+    total = incl[-1]
     dest = jnp.where(keep > 0, dest, cap_out)          # parked -> dropped
     overflow = total > cap_out
     out = {}
     for name, v in cols.items():
-        buf = jnp.zeros((cap_out,), v.dtype)
+        buf = jnp.zeros((cap_out,) + v.shape[1:], v.dtype)
         out[name] = buf.at[dest].set(v, mode="drop")
     return out, jnp.minimum(total, cap_out).astype(jnp.int32), overflow
+
+
+# ---------------------------------------------------------------------------
+# column packing — the byte-transport layer of the packed exchange
+# ---------------------------------------------------------------------------
+
+# Word width of the packed transport buffer: every column is bitcast into
+# uint32 words, so a whole table shuffles as ONE (P, bucket_cap, W) payload.
+PACK_WORD_BYTES = 4
+
+
+def col_words(dtype) -> int:
+    """uint32 words one value of ``dtype`` occupies in the packed layout.
+
+    4-byte types bitcast 1:1; 8-byte types split into two words; sub-word
+    types (bool, int8/16, fp16/bf16) zero-extend into one word — the packed
+    layout trades a little padding on narrow columns for a single collective.
+    """
+    dtype = np.dtype(dtype)
+    if dtype == np.bool_:
+        return 1
+    return max(1, dtype.itemsize // PACK_WORD_BYTES)
+
+
+def pack_columns(cols: dict[str, jax.Array]):
+    """Bitcast-pack every column into one (rows, W) uint32 word matrix.
+
+    Returns ``(words, layout)`` where ``layout`` is the per-column
+    ``(name, dtype, word_offset, n_words)`` recipe :func:`unpack_columns`
+    inverts.  Pure bit movement (``lax.bitcast_convert_type``): floats keep
+    their payload bits exactly — NaNs, signed zeros and all.
+    """
+    words, layout, off = [], [], 0
+    for name, v in cols.items():
+        dt = jnp.dtype(v.dtype)
+        if dt == jnp.bool_:
+            w = v.astype(jnp.uint32)[:, None]
+        elif dt.itemsize == 4:
+            w = lax.bitcast_convert_type(v, jnp.uint32)[:, None]
+        elif dt.itemsize == 8:
+            w = lax.bitcast_convert_type(v, jnp.uint32)       # (rows, 2)
+        elif dt.itemsize == 2:
+            w = lax.bitcast_convert_type(v, jnp.uint16).astype(jnp.uint32)[:, None]
+        else:                                                 # 1-byte ints
+            w = lax.bitcast_convert_type(v, jnp.uint8).astype(jnp.uint32)[:, None]
+        layout.append((name, dt, off, w.shape[1]))
+        off += w.shape[1]
+        words.append(w)
+    return jnp.concatenate(words, axis=1), layout
+
+
+def unpack_columns(words: jax.Array, layout) -> dict[str, jax.Array]:
+    """Invert :func:`pack_columns`: slice each column's words and bitcast
+    back to its original dtype."""
+    out = {}
+    for name, dt, off, nw in layout:
+        w = words[:, off:off + nw]
+        if dt == jnp.bool_:
+            out[name] = w[:, 0] != 0
+        elif dt.itemsize == 4:
+            out[name] = lax.bitcast_convert_type(w[:, 0], dt)
+        elif dt.itemsize == 8:
+            out[name] = lax.bitcast_convert_type(w, dt)       # (rows, 2) -> (rows,)
+        elif dt.itemsize == 2:
+            out[name] = lax.bitcast_convert_type(w[:, 0].astype(jnp.uint16), dt)
+        else:
+            out[name] = lax.bitcast_convert_type(w[:, 0].astype(jnp.uint8), dt)
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -115,15 +192,22 @@ def compact(cols: dict[str, jax.Array], keep: jax.Array, cap_out: int,
 
 def exchange(cols: dict[str, jax.Array], count, dest: jax.Array, *,
              axes: Axes, bucket_cap: int, cap_out: int,
-             partition_fn=None, prefix_fn=None):
+             partition_fn=None, prefix_fn=None, packed: bool = True):
     """Route row i of this shard to shard ``dest[i]``.
 
     Static-shape plan: rows are stably grouped by destination into a
-    (P, bucket_cap) buffer per column, exchanged with one all_to_all, then
+    per-shard bucket buffer, exchanged with ``lax.all_to_all``, then
     compacted into a (cap_out,) valid-prefix buffer.  Counts ride along as a
-    (P,) vector through the same all_to_all.  Stability: row order within a
+    (P,) vector through their own all_to_all.  Stability: row order within a
     (src, dst) pair is preserved and receives are concatenated in src order,
     so global row order is preserved for order-sensitive users (rebalance).
+
+    ``packed=True`` (default) ships ALL columns as one word-packed
+    (P, bucket_cap, W) uint32 payload (:func:`pack_columns`), so an exchange
+    of any table costs exactly TWO collectives — counts + payload — with a
+    single fused scatter for slot assignment and one unpack after the wire.
+    ``packed=False`` restores the one-collective-per-column baseline (the
+    ``ExecConfig.packed_exchange`` A/B lever).
     """
     P = nshards(axes) if axes else 1
     valid = valid_mask(count, dest.shape[0])
@@ -153,6 +237,25 @@ def exchange(cols: dict[str, jax.Array], count, dest: jax.Array, *,
     sent = jnp.minimum(send_counts, bucket_cap)
     recv_counts = lax.all_to_all(sent.reshape(P, 1), axes, 0, 0).reshape(P)
 
+    slot_idx = jnp.arange(bucket_cap, dtype=jnp.int32)[None, :]
+    keep = (slot_idx < recv_counts[:, None]).reshape(-1)
+
+    if packed:
+        # ONE payload collective for the whole table: pack -> one fused
+        # scatter into (P, bucket_cap+1, W) -> one all_to_all -> compact the
+        # word matrix row-wise -> unpack.
+        words, layout = pack_columns(cols)
+        if reorder is not None:
+            words = words[reorder]
+        buf = jnp.zeros((P, bucket_cap + 1, words.shape[1]), jnp.uint32)
+        buf = buf.at[sdest, scatter_slot].set(words, mode="drop")
+        recv = lax.all_to_all(buf[:, :bucket_cap, :], axes, 0, 0)
+        flat = {"__packed__": recv.reshape(P * bucket_cap, -1)}
+        out, count_out, overflow_recv = compact(flat, keep, cap_out,
+                                                prefix_fn=prefix_fn)
+        out = unpack_columns(out["__packed__"], layout)
+        return out, count_out, overflow_send | overflow_recv
+
     recv = {}
     for name, v in cols.items():
         buf = jnp.zeros((P, bucket_cap + 1), v.dtype)
@@ -161,8 +264,6 @@ def exchange(cols: dict[str, jax.Array], count, dest: jax.Array, *,
         buf = buf[:, :bucket_cap]
         recv[name] = lax.all_to_all(buf, axes, 0, 0)
 
-    slot_idx = jnp.arange(bucket_cap, dtype=jnp.int32)[None, :]
-    keep = (slot_idx < recv_counts[:, None]).reshape(-1)
     flat = {k: v.reshape(-1) for k, v in recv.items()}
     out, count_out, overflow_recv = compact(flat, keep, cap_out, prefix_fn=prefix_fn)
     return out, count_out, overflow_send | overflow_recv
@@ -170,7 +271,7 @@ def exchange(cols: dict[str, jax.Array], count, dest: jax.Array, *,
 
 def shuffle_by_key(cols: dict[str, jax.Array], count, key_names, *,
                    axes: Axes, bucket_cap: int, cap_out: int,
-                   partition_fn=None, prefix_fn=None):
+                   partition_fn=None, prefix_fn=None, packed: bool = True):
     """Hash-partition rows so equal (possibly composite) keys co-locate.
 
     ``key_names`` is a column name or a sequence of names; multiple names
@@ -182,7 +283,7 @@ def shuffle_by_key(cols: dict[str, jax.Array], count, key_names, *,
     dest = (hash_keys(cols, key_names) % np.uint32(P)).astype(jnp.int32)
     return exchange(cols, count, dest, axes=axes, bucket_cap=bucket_cap,
                     cap_out=cap_out, partition_fn=partition_fn,
-                    prefix_fn=prefix_fn)
+                    prefix_fn=prefix_fn, packed=packed)
 
 
 # ---------------------------------------------------------------------------
@@ -337,7 +438,8 @@ def merge_join(lcols, lcount, rcols, rcount, lkeys, rkeys, *,
 # ---------------------------------------------------------------------------
 
 def segment_aggregate(keys_sorted, count, values: dict[str, tuple[str, jax.Array]],
-                      *, cap_out: int, segsum_fn=None):
+                      *, cap_out: int, segsum_fn=None,
+                      presorted: Sequence[str] = ()):
     """Aggregate ``values`` over runs of equal (grouped) composite keys.
 
     ``keys_sorted`` is one key array or a tuple of them; the valid prefix
@@ -350,6 +452,10 @@ def segment_aggregate(keys_sorted, count, values: dict[str, tuple[str, jax.Array
     ``lax.sort`` and counts within-run value boundaries; the aux sort is
     ascending, so its group order matches the main segment order only for
     ascending inputs (the physical planner inserts a LocalSort otherwise).
+    ``presorted`` names nunique entries whose value column already arrives
+    sorted WITHIN each key run (it rode the planner's LocalSort as a trailing
+    sort key) — those skip the aux ``lax.sort`` and count boundaries off the
+    main segment machinery directly.
     Returns ``({__key0__..., **aggs}, n_groups, overflow)`` with one output
     column per key, in key order, named ``__key<i>__``.
     """
@@ -423,6 +529,15 @@ def segment_aggregate(keys_sorted, count, values: dict[str, tuple[str, jax.Array
                 jnp.where(valid, jnp.arange(cap, dtype=jnp.int32), cap),
                 seg_id, num_segments=cap_out + 1)[:cap_out]
             out[name] = x[jnp.clip(first_idx, 0, cap - 1)]
+        elif fn == "nunique" and name in presorted:
+            # aux-sort elision: x is already sorted within each key run (it
+            # was a trailing key of the planner's LocalSort), so distinct
+            # values are contiguous and boundaries fall out of the MAIN
+            # segment machinery — no extra lax.sort.
+            vprev = jnp.concatenate([jnp.full((1,), True), x[1:] != x[:-1]])
+            boundary = (seg_start | vprev) & valid
+            out[name] = jax.ops.segment_sum(boundary.astype(jnp.int32), seg_id,
+                                            num_segments=cap_out + 1)[:cap_out]
         elif fn == "nunique":
             # independent aux sort by (keys..., x): groups x within each key
             # run.  Group ORDER matches the main segment order because both
@@ -447,6 +562,105 @@ def segment_aggregate(keys_sorted, count, values: dict[str, tuple[str, jax.Array
     for name in out:
         out[name] = jnp.where(gvalid, out[name], jnp.zeros((), out[name].dtype))
     return out, jnp.minimum(n_seg, cap_out).astype(jnp.int32), overflow
+
+
+# ---------------------------------------------------------------------------
+# map-side partial aggregation (combiner algebra for the shuffle engine)
+#
+# Every decomposable agg fn splits into partial statistics a shard can
+# pre-reduce over its LOCAL key groups before the hash exchange, so the wire
+# carries at most the shard's DISTINCT key tuples instead of all raw rows:
+#
+#   sum   -> (s)        combine: sum of partial sums
+#   count -> (n)        combine: sum of partial counts
+#   min   -> (m)        combine: min of partial mins      (max symmetric)
+#   mean  -> (s, n)     combine: sum(s) / sum(n)
+#   var   -> (s, q, n)  combine: sum(q)/N - (sum(s)/N)^2  (std = sqrt)
+#
+# first (arrival-order-sensitive) and nunique (set-valued partial state)
+# are NOT decomposable — the planner keeps those on the raw-row path.
+# ---------------------------------------------------------------------------
+
+DECOMPOSABLE_AGGS = frozenset({"sum", "count", "mean", "min", "max",
+                               "var", "std"})
+
+
+def partial_decompose(name: str, fn: str, x: jax.Array):
+    """Partial-column specs for one decomposable agg output: a list of
+    ``(partial_name, partial_fn, array)`` triples feeding segment_aggregate."""
+    if fn == "sum":
+        return [(f"__p_{name}__s", "sum", x)]
+    if fn == "count":
+        return [(f"__p_{name}__n", "count", x)]
+    if fn in ("min", "max"):
+        return [(f"__p_{name}__m", fn, x)]
+    if fn == "mean":
+        return [(f"__p_{name}__s", "sum", x.astype(jnp.float32)),
+                (f"__p_{name}__n", "count", x)]
+    if fn in ("var", "std"):
+        xf = x.astype(jnp.float32)
+        return [(f"__p_{name}__s", "sum", xf),
+                (f"__p_{name}__q", "sum", xf * xf),
+                (f"__p_{name}__n", "count", x)]
+    raise ValueError(f"{fn} is not decomposable")
+
+
+def partial_aggregate(keys_sorted, count, values: dict[str, tuple[str, jax.Array]],
+                      *, cap_out: int, segsum_fn=None):
+    """Map-side stage: reduce each LOCAL key run to its partial statistics.
+
+    Same grouped-input contract and ``(__key<i>__, ...)`` output convention
+    as :func:`segment_aggregate`; the output rows (one per local distinct key
+    tuple) are what the hash exchange ships.
+    """
+    pvals: dict[str, tuple[str, jax.Array]] = {}
+    for name, (fn, x) in values.items():
+        for pcol, pfn, arr in partial_decompose(name, fn, x):
+            pvals[pcol] = (pfn, arr)
+    return segment_aggregate(keys_sorted, count, pvals, cap_out=cap_out,
+                             segsum_fn=segsum_fn)
+
+
+def final_aggregate(keys_sorted, count, agg_fns: dict[str, str],
+                    cols: dict[str, jax.Array], *, cap_out: int,
+                    segsum_fn=None):
+    """Reduce-side stage: combine :func:`partial_aggregate` rows from every
+    shard (grouped by key after the exchange + local sort) into final
+    results.  ``agg_fns`` maps output name -> original agg fn; ``cols``
+    holds the partial ``__p_<name>__*`` columns.
+    """
+    cvals: dict[str, tuple[str, jax.Array]] = {}
+    for name, fn in agg_fns.items():
+        if fn in ("sum", "mean", "var", "std"):
+            cvals[f"__p_{name}__s"] = ("sum", cols[f"__p_{name}__s"])
+        if fn in ("count", "mean", "var", "std"):
+            cvals[f"__p_{name}__n"] = ("sum", cols[f"__p_{name}__n"])
+        if fn in ("var", "std"):
+            cvals[f"__p_{name}__q"] = ("sum", cols[f"__p_{name}__q"])
+        if fn in ("min", "max"):
+            cvals[f"__p_{name}__m"] = (fn, cols[f"__p_{name}__m"])
+    agg, n_seg, ovf = segment_aggregate(keys_sorted, count, cvals,
+                                        cap_out=cap_out, segsum_fn=segsum_fn)
+    out = {k: v for k, v in agg.items() if k.startswith("__key")}
+    for name, fn in agg_fns.items():
+        if fn == "sum":
+            out[name] = agg[f"__p_{name}__s"]
+        elif fn == "count":
+            out[name] = agg[f"__p_{name}__n"]
+        elif fn in ("min", "max"):
+            out[name] = agg[f"__p_{name}__m"]
+        elif fn == "mean":
+            n_ = jnp.maximum(agg[f"__p_{name}__n"], 1)
+            out[name] = agg[f"__p_{name}__s"] / n_
+        elif fn in ("var", "std"):
+            n_ = jnp.maximum(agg[f"__p_{name}__n"], 1)
+            m = agg[f"__p_{name}__s"] / n_
+            m2 = agg[f"__p_{name}__q"] / n_
+            v = jnp.maximum(m2 - m * m, 0.0)
+            out[name] = jnp.sqrt(v) if fn == "std" else v
+        else:
+            raise ValueError(f"{fn} is not decomposable")
+    return out, n_seg, ovf
 
 
 # ---------------------------------------------------------------------------
@@ -663,7 +877,8 @@ def stencil1d(x: jax.Array, count, weights: Sequence[float], center: int,
 # ---------------------------------------------------------------------------
 
 def rebalance(cols: dict[str, jax.Array], count, *, axes: Axes,
-              bucket_cap: int, cap_out: int, partition_fn=None, prefix_fn=None):
+              bucket_cap: int, cap_out: int, partition_fn=None, prefix_fn=None,
+              packed: bool = True):
     """Even out row counts across shards, preserving global row order."""
     P = nshards(axes) if axes else 1
     cap = next(iter(cols.values())).shape[0]
@@ -678,13 +893,15 @@ def rebalance(cols: dict[str, jax.Array], count, *, axes: Axes,
                      g // jnp.maximum(block, 1), P).astype(jnp.int32)
     out, cnt, ovf = exchange(cols, count, dest, axes=axes,
                              bucket_cap=bucket_cap, cap_out=cap_out,
-                             partition_fn=partition_fn, prefix_fn=prefix_fn)
+                             partition_fn=partition_fn, prefix_fn=prefix_fn,
+                             packed=packed)
     return out, cnt, ovf
 
 
 def sample_sort(cols: dict[str, jax.Array], count, key_names, *,
                 axes: Axes, bucket_cap: int, cap_out: int, n_samples: int = 64,
-                ascending: bool = True, pre_sorted: bool = False):
+                ascending: bool = True, pre_sorted: bool = False,
+                packed: bool = True):
     """Global sort: local sort -> splitter selection -> route -> local sort.
 
     ``key_names`` may name several columns (lexicographic order, all
@@ -750,7 +967,8 @@ def sample_sort(cols: dict[str, jax.Array], count, key_names, *,
     else:
         dest = jnp.zeros((cap,), jnp.int32)
     out, cnt, ovf = exchange(scols, count, dest, axes=axes,
-                             bucket_cap=bucket_cap, cap_out=cap_out)
+                             bucket_cap=bucket_cap, cap_out=cap_out,
+                             packed=packed)
     out, _ = local_sort(out, cnt, key_names)
     if not ascending:
         # reverse valid prefix
@@ -767,10 +985,11 @@ def sample_sort(cols: dict[str, jax.Array], count, key_names, *,
 # concat
 # ---------------------------------------------------------------------------
 
-def concat(parts: Sequence[tuple[dict[str, jax.Array], jax.Array]], cap_out: int):
+def concat(parts: Sequence[tuple[dict[str, jax.Array], jax.Array]], cap_out: int,
+           prefix_fn=None):
     """Vertical concat of per-shard tables (counts add; padding squeezed)."""
     names = list(parts[0][0])
     stacked = {n: jnp.concatenate([p[0][n] for p in parts]) for n in names}
     keep = jnp.concatenate([valid_mask(c, p[next(iter(p))].shape[0])
                             for p, c in parts])
-    return compact(stacked, keep, cap_out)
+    return compact(stacked, keep, cap_out, prefix_fn=prefix_fn)

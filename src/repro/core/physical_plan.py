@@ -38,10 +38,14 @@ the downstream op keeps the (smaller) local capacity.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Optional
+from typing import Any, Optional
+
+import numpy as np
 
 from . import distribution as D
 from . import ir
+from .expr import ColRef
+from .physical import DECOMPOSABLE_AGGS, PACK_WORD_BYTES, col_words
 
 
 # ---------------------------------------------------------------------------
@@ -58,15 +62,23 @@ class Partitioning:
     but global-sortedness checks do: a locally ascending ordering over
     descending shard ranges is NOT globally sorted.  Meaningless (always
     True) for hash/rep/block.
+
+    ``globally_sorted`` marks a BLOCK partitioning whose shard boundaries
+    follow the op's Ordering: the concatenation of shard valid prefixes is
+    globally sorted by the ordering keys (a Rebalance of a globally sorted
+    stream).  It gives no key co-location — an equal-key run may straddle a
+    boundary — but lets a downstream Sort on an ordering prefix plan a full
+    no-op instead of paying splitter routing.
     """
 
     kind: str                       # "hash" | "range" | "rep" | "block"
     keys: tuple[str, ...] = ()
     ascending: bool = True
+    globally_sorted: bool = False   # block-only: shard order follows Ordering
 
     def short(self) -> str:
         if not self.keys:
-            return self.kind
+            return self.kind + (" sorted" if self.globally_sorted else "")
         d = "" if self.ascending else " desc"
         return f"{self.kind}({','.join(self.keys)}){d}"
 
@@ -147,6 +159,9 @@ class POp:
     op_id: int = -1                 # assigned by the plan
     cap: int = 0
     bucket: int = 0
+    # output schema estimate (name -> np.dtype), filled by annotate_schemas;
+    # drives the collective/byte census of the packed exchange.
+    schema: dict = field(default_factory=dict)
 
     def short(self) -> str:
         return type(self).__name__
@@ -220,9 +235,29 @@ class AggPrep(POp):
 
 
 @dataclass(eq=False)
-class SegmentAgg(POp):
+class PartialAgg(POp):
+    """Map-side partial aggregation: reduce local key runs to decomposable
+    partial statistics BEFORE the hash exchange, so the wire carries at most
+    this shard's distinct key tuples (physical.partial_aggregate)."""
+
     def short(self):
-        return f"SegmentAgg(by={','.join(self.node.key)})"
+        return f"PartialAgg(by={','.join(self.node.key)})"
+
+
+@dataclass(eq=False)
+class SegmentAgg(POp):
+    # from_partials: combine PartialAgg statistics (physical.final_aggregate)
+    # instead of aggregating raw rows.
+    from_partials: bool = False
+    # aux-sort elision: name of the nunique agg whose value column rode the
+    # planner-inserted LocalSort as a trailing key (skips one lax.sort).
+    nunique_ride: Optional[str] = None
+
+    def short(self):
+        tag = ", combine" if self.from_partials else ""
+        if self.nunique_ride:
+            tag += f", nunique_ride={self.nunique_ride}"
+        return f"SegmentAgg(by={','.join(self.node.key)}{tag})"
 
 
 @dataclass(eq=False)
@@ -250,11 +285,23 @@ class ConcatOp(POp):
 # ---------------------------------------------------------------------------
 
 
+def _row_words(schema: dict) -> int:
+    """uint32 words one packed row of ``schema`` occupies (physical.col_words)."""
+    return sum(col_words(dt) for dt in schema.values())
+
+
+def _row_bytes_unpacked(schema: dict) -> int:
+    """Native bytes per row when each column ships as its own collective."""
+    return sum(np.dtype(dt).itemsize for dt in schema.values())
+
+
 @dataclass
 class PhysicalPlan:
     ops: list[POp] = field(default_factory=list)
     op_of: dict[int, int] = field(default_factory=dict)  # logical id -> op id
     root_id: int = -1
+    packed: bool = True             # cfg.packed_exchange at plan time
+    cfg: Any = None                 # the ExecConfig the plan was built under
 
     def add(self, op: POp) -> POp:
         op.op_id = len(self.ops)
@@ -271,7 +318,8 @@ class PhysicalPlan:
     def counts(self) -> dict[str, int]:
         """Data-movement / sort census used by tests, explain and benches."""
         c = {"hash_exchanges": 0, "local_sorts": 0, "sample_sorts": 0,
-             "rebalances": 0, "merge_joins": 0, "segment_aggs": 0}
+             "rebalances": 0, "merge_joins": 0, "segment_aggs": 0,
+             "partial_aggs": 0}
         for op in self.ops:
             if isinstance(op, HashExchange):
                 c["hash_exchanges"] += 1
@@ -283,6 +331,8 @@ class PhysicalPlan:
                 c["rebalances"] += 1
             elif isinstance(op, MergeJoin):
                 c["merge_joins"] += 1
+            elif isinstance(op, PartialAgg):
+                c["partial_aggs"] += 1
             elif isinstance(op, SegmentAgg):
                 c["segment_aggs"] += 1
         return c
@@ -292,21 +342,87 @@ class PhysicalPlan:
         c = self.counts()
         return c["hash_exchanges"] + c["sample_sorts"] + c["rebalances"]
 
+    # -- collective / byte census (the packed-exchange regression gate) ------
+
+    def _exchange_ops(self) -> list[POp]:
+        return [op for op in self.ops
+                if isinstance(op, (HashExchange, SampleSort, RebalanceOp))]
+
+    def op_collectives(self, op: POp) -> int:
+        """all_to_all collectives ONE exchange issues at P>1: the count
+        vector plus either one packed payload or one payload per column."""
+        return 2 if self.packed else 1 + len(op.schema)
+
+    def op_row_bytes(self, op: POp) -> int:
+        """Wire bytes one row of this exchange costs (packed: 4 bytes per
+        uint32 word incl. sub-word padding; unpacked: native itemsizes)."""
+        return (_row_words(op.schema) * PACK_WORD_BYTES if self.packed
+                else _row_bytes_unpacked(op.schema))
+
+    def collective_count(self) -> int:
+        """Total all_to_all collectives the plan issues per execution (P>1).
+        A packed plan pays exactly 2 per exchange regardless of width."""
+        return sum(self.op_collectives(op) for op in self._exchange_ops())
+
+    def shuffle_row_bytes(self) -> int:
+        """Wire bytes ONE row costs summed over every exchange it crosses —
+        a shard-count-free volume estimate."""
+        return sum(self.op_row_bytes(op) for op in self._exchange_ops())
+
+    def source_rows(self) -> dict[int, int]:
+        """Scan id -> row count, read off the Source ops' bound arrays."""
+        return {op.node.id: len(next(iter(op.node.columns.values())))
+                for op in self.ops if isinstance(op, Source)}
+
+    def shuffle_census(self, P: int = 8) -> dict:
+        """Deterministic collective + byte census at a FIXED shard count.
+
+        Uses a scratch capacity pass at shard count ``P`` (never the live
+        device count, so census regression gates stay environment-stable).
+        Per exchange: ``collectives`` (all_to_all issued), ``row_bytes``
+        (wire cost of one row) and ``payload_bytes`` (the full per-shard
+        payload buffer, P * bucket * row_bytes — the count vector's P*4
+        bytes are omitted as noise).  Map-side partial aggregation shows up
+        as the post-partial exchange carrying ``__p_*`` statistic columns
+        with a bucket sized by the (smaller) PartialAgg capacity.
+        """
+        caps = compute_capacities(self, P, self.cfg, self.source_rows())
+        entries = []
+        for op in self._exchange_ops():
+            rb = self.op_row_bytes(op)
+            _cap, bucket = caps[op.op_id]
+            entries.append({"op": op.short(), "ncols": len(op.schema),
+                            "row_bytes": rb,
+                            "collectives": self.op_collectives(op),
+                            "payload_bytes": P * bucket * rb})
+        return {"P": P, "packed": self.packed,
+                "all_to_all": sum(e["collectives"] for e in entries),
+                "payload_bytes": sum(e["payload_bytes"] for e in entries),
+                "exchanges": entries}
+
     def render(self) -> str:
         c = self.counts()
         lines = [f"physical plan: {self.shuffle_count()} shuffles "
                  f"({c['hash_exchanges']} hash exchanges, "
                  f"{c['sample_sorts']} sample sorts, "
                  f"{c['rebalances']} rebalances), "
-                 f"{c['local_sorts']} local sorts"]
+                 f"{c['local_sorts']} local sorts, "
+                 f"{c['partial_aggs']} partial aggs; "
+                 f"{self.collective_count()} all_to_all "
+                 f"({'packed' if self.packed else 'per-column'}), "
+                 f"~{self.shuffle_row_bytes()} B/row shuffled"]
         for op in self.ops:
             src = ",".join(f"#{i}" for i in op.inputs)
             cap = f" cap={op.cap}" if op.cap else ""
             bkt = f" bucket={op.bucket}" if op.bucket else ""
+            wire = ""
+            if isinstance(op, (HashExchange, SampleSort, RebalanceOp)):
+                wire = (f" wire={self.op_collectives(op)}coll/"
+                        f"{self.op_row_bytes(op)}B-row")
             lines.append(
                 f"  #{op.op_id} {op.short()}  <- [{src}]  "
                 f"part={op.part.short()} order={op.order.short()}"
-                f"  [{op.dist}]{cap}{bkt}")
+                f"  [{op.dist}]{cap}{bkt}{wire}")
         return "\n".join(lines)
 
 
@@ -359,13 +475,18 @@ def plan_physical(root: ir.Node, dists: dict[int, str], cfg) -> PhysicalPlan:
     """Walk the distribution-annotated logical plan; insert exchanges and
     sorts only where a required property is not provided.
 
-    ``cfg`` is an ExecConfig (broadcast_join / elide_exchanges are read).
-    With ``elide_exchanges=False`` provided properties are ignored and every
-    Join/Aggregate/Sort pays its full exchange+sort — the pre-elision
-    baseline, kept as an A/B lever for benchmarks.
+    ``cfg`` is an ExecConfig (broadcast_join / elide_exchanges /
+    partial_agg / packed_exchange are read).  With ``elide_exchanges=False``
+    provided properties are ignored and every Join/Aggregate/Sort pays its
+    full exchange+sort — the pre-elision baseline, kept as an A/B lever for
+    benchmarks.  With ``partial_agg=True`` (default) an aggregate whose
+    exchange survives and whose agg fns are all decomposable splits into
+    PartialAgg -> HashExchange -> LocalSort -> SegmentAgg(combine), so each
+    shard ships at most its distinct local key groups.
     """
-    plan = PhysicalPlan()
+    plan = PhysicalPlan(packed=getattr(cfg, "packed_exchange", True), cfg=cfg)
     elide = getattr(cfg, "elide_exchanges", True)
+    partial_agg = getattr(cfg, "partial_agg", True)
 
     def emit(cls, node, inputs, part, order, **kw) -> POp:
         d = dists[node.id]
@@ -434,17 +555,27 @@ def plan_physical(root: ir.Node, dists: dict[int, str], cfg) -> PhysicalPlan:
             # keep its partitioning).  Ordering is another story: rebalance
             # preserves the GLOBAL concatenated row order, so when the input
             # was globally sorted — range-partitioned with the range keys
-            # and local ordering agreeing prefix-wise — every output shard
-            # receives a contiguous slice of a sorted sequence and stays
-            # locally sorted.  Per-shard-only ordering (e.g. hash + sort)
-            # does NOT survive: a shard may receive [tail of s0, head of s1].
+            # and local ordering agreeing prefix-wise, or an already
+            # globally-sorted block stream — every output shard receives a
+            # contiguous slice of a sorted sequence and stays locally
+            # sorted.  Per-shard-only ordering (e.g. hash + sort) does NOT
+            # survive: a shard may receive [tail of s0, head of s1].  A
+            # preserved ordering additionally marks the output partitioning
+            # ``globally_sorted``: shard boundaries still follow the global
+            # order, so a downstream Sort on an ordering prefix is a full
+            # no-op (no splitter routing).
             order = UNORDERED
-            if elide and c.order.keys and c.part.kind == "range" \
-                    and c.part.ascending == c.order.ascending and (
-                    c.part.keys == c.order.keys[: len(c.part.keys)]
-                    or c.order.keys == c.part.keys[: len(c.order.keys)]):
+            part = BLOCK
+            range_sorted = (c.part.kind == "range"
+                            and c.part.ascending == c.order.ascending and (
+                                c.part.keys == c.order.keys[: len(c.part.keys)]
+                                or c.order.keys == c.part.keys[: len(c.order.keys)]))
+            block_sorted = c.part.kind == "block" and c.part.globally_sorted
+            if elide and c.order.keys and (range_sorted or block_sorted):
                 order = c.order
-            op = emit(RebalanceOp, n, (c,), BLOCK, order)
+                part = Partitioning("block", (), order.ascending,
+                                    globally_sorted=True)
+            op = emit(RebalanceOp, n, (c,), part, order)
 
         elif isinstance(n, ir.Concat):
             parts = [plan.final_op(p) for p in n.parts]
@@ -474,8 +605,13 @@ def plan_physical(root: ir.Node, dists: dict[int, str], cfg) -> PhysicalPlan:
                 and c.part.ascending == n.ascending and (
                     c.part.keys == n.by[: len(c.part.keys)]
                     or n.by == c.part.keys[: len(n.by)])
+            # a globally-sorted block stream (rebalanced sorted data) is
+            # sorted by any prefix of its ordering keys; ``sorted_already``
+            # checks exactly that prefix + direction, so the flag alone
+            # upgrades the local check to a global one.
+            block_ok = c.part.kind == "block" and c.part.globally_sorted
             globally_sorted = sorted_already and (c.part.kind == "rep"
-                                                  or range_ok)
+                                                  or range_ok or block_ok)
             if globally_sorted:
                 plan.op_of[n.id] = c.op_id      # full no-op: reuse child
                 op = c
@@ -520,15 +656,46 @@ def plan_physical(root: ir.Node, dists: dict[int, str], cfg) -> PhysicalPlan:
             # table) — independent of elision, like the join/sort rep guards.
             needs_exchange = dists[n.id] != D.REP and \
                 not (elide and colocates(src.part, n.key))
-            if needs_exchange:
+            decomposable = all(a.fn in DECOMPOSABLE_AGGS
+                               for a in n.aggs.values())
+            if needs_exchange and decomposable and partial_agg:
+                # Map-side partial aggregation: pre-reduce local key runs so
+                # the exchange ships at most this shard's DISTINCT key
+                # tuples.  A pre-partitioned input (needs_exchange False)
+                # skips the partial stage entirely — the elision rules and
+                # this rewrite compose rather than stack.
+                if not (elide and grouped(src.order, n.key)
+                        and src.order.ascending):
+                    src = local_sort(n, src, n.key)
+                src = emit(PartialAgg, n, (src,), src.part,
+                           Ordering(n.key, True))
                 src = hash_exchange(n, src, n.key)
-            has_nu = any(a.fn == "nunique" for a in n.aggs.values())
-            pre_grouped = (elide and grouped(src.order, n.key)
-                           and (src.order.ascending or not has_nu))
-            if not pre_grouped:
                 src = local_sort(n, src, n.key)
-            op = emit(SegmentAgg, n, (src,), src.part,
-                      Ordering(n.key, src.order.ascending))
+                op = emit(SegmentAgg, n, (src,), src.part,
+                          Ordering(n.key, True), from_partials=True)
+            else:
+                if needs_exchange:
+                    src = hash_exchange(n, src, n.key)
+                nu_names = [name for name, a in n.aggs.items()
+                            if a.fn == "nunique"]
+                has_first = any(a.fn == "first" for a in n.aggs.values())
+                pre_grouped = (elide and grouped(src.order, n.key)
+                               and (src.order.ascending or not nu_names))
+                ride = None
+                if not pre_grouped:
+                    skeys = n.key
+                    if nu_names and not has_first:
+                        # aux-sort elision: the FIRST nunique column rides
+                        # this LocalSort as a trailing key, so
+                        # segment_aggregate skips its own lax.sort for it.
+                        # ("first" pins the in-group arrival order, which a
+                        # trailing value key would scramble — no ride then.)
+                        ride = nu_names[0]
+                        skeys = n.key + ("__v_" + ride,)
+                    src = local_sort(n, src, skeys)
+                op = emit(SegmentAgg, n, (src,), src.part,
+                          Ordering(n.key, src.order.ascending),
+                          nunique_ride=ride)
 
         else:
             raise TypeError(n)
@@ -536,7 +703,59 @@ def plan_physical(root: ir.Node, dists: dict[int, str], cfg) -> PhysicalPlan:
         plan.op_of[n.id] = op.op_id
 
     plan.root_id = plan.op_of[root.id]
+    annotate_schemas(plan)
     return plan
+
+
+def annotate_schemas(plan: PhysicalPlan) -> None:
+    """Fill every op's output ``schema`` estimate (name -> np.dtype).
+
+    One forward pass (ops are emitted in topo order): inserted exchanges and
+    sorts pass their input schema through; AggPrep narrows to keys + __v_*
+    value columns (dtype from the child column for pure ColRef expressions,
+    the float32 default otherwise — same refinement policy as ir.Project);
+    PartialAgg replaces values with the decomposed __p_* statistics.  The
+    estimates drive the collective/byte census of the packed exchange.
+    """
+    f32 = np.dtype(np.float32)
+    i32 = np.dtype(np.int32)
+    for op in plan.ops:
+        n = op.node
+        if isinstance(op, (HashExchange, LocalSort)):
+            op.schema = dict(plan.ops[op.inputs[0]].schema)
+        elif isinstance(op, AggPrep):
+            base = plan.ops[op.inputs[0]].schema
+            sch = {k: base.get(k, f32) for k in n.key}
+            for name, agg in n.aggs.items():
+                if agg.fn == "count" or agg.expr is None:
+                    dt = i32
+                else:
+                    dt = (np.dtype(base[agg.expr.name])
+                          if isinstance(agg.expr, ColRef)
+                          and agg.expr.name in base else f32)
+                sch["__v_" + name] = dt
+            op.schema = sch
+        elif isinstance(op, PartialAgg):
+            base = plan.ops[op.inputs[0]].schema
+            sch = {k: base.get(k, f32) for k in n.key}
+            for name, agg in n.aggs.items():
+                vd = np.dtype(base.get("__v_" + name, f32))
+                if agg.fn == "sum":
+                    sch[f"__p_{name}__s"] = i32 if vd == np.bool_ else vd
+                elif agg.fn == "count":
+                    sch[f"__p_{name}__n"] = i32
+                elif agg.fn in ("min", "max"):
+                    sch[f"__p_{name}__m"] = vd
+                elif agg.fn == "mean":
+                    sch[f"__p_{name}__s"] = f32
+                    sch[f"__p_{name}__n"] = i32
+                elif agg.fn in ("var", "std"):
+                    sch[f"__p_{name}__s"] = f32
+                    sch[f"__p_{name}__q"] = f32
+                    sch[f"__p_{name}__n"] = i32
+            op.schema = sch
+        else:
+            op.schema = {k: np.dtype(dt) for k, dt in n.schema.items()}
 
 
 def _hash_alignment(part: Partitioning,
@@ -559,41 +778,67 @@ def _ceil_div(a: int, b: int) -> int:
     return -(-a // b)
 
 
-def plan_capacities(plan: PhysicalPlan, P: int, cfg,
-                    source_rows: dict[int, int]) -> None:
-    """Fill ``cap``/``bucket`` on every op.
+def compute_capacities(plan: PhysicalPlan, P: int, cfg,
+                       source_rows: dict[int, int]) -> dict[int, tuple[int, int]]:
+    """Capacity plan as a pure map op_id -> (cap, bucket) — shared by
+    :func:`plan_capacities` (which writes the live fields) and the
+    shuffle-byte census (which probes a FIXED P without touching them).
 
     Exchanges get (src,dst) bucket capacities and a post-exchange capacity;
     pass-through ops inherit their input capacity.  An elided exchange means
     the consumer keeps the local capacity — smaller buffers, not just fewer
     collectives.  Policy matches the original lower.py planner: "safe" bounds
     every buffer by the worst case; otherwise capacities are input*slack and
-    overflow is flagged (driver retry, DESIGN.md §2).
+    overflow is flagged (driver retry, DESIGN.md §2).  A PartialAgg holds at
+    most its input rows, and ``cfg.agg_group_cap`` (a user bound on distinct
+    groups per shard) tightens it further — shrinking the bucket of the
+    post-partial exchange, not just its row count.
     """
+    safe = getattr(cfg, "safe_capacities", True)
+    slack = getattr(cfg, "shuffle_slack", 2.0)
+    join_exp = getattr(cfg, "join_expansion", 1.5)
+    group_cap = getattr(cfg, "agg_group_cap", None)
+    caps: dict[int, tuple[int, int]] = {}
 
     def shuffle_plan(cap_in: int) -> tuple[int, int]:
-        if cfg.safe_capacities:
+        if safe:
             bucket = cap_in                 # worst case: all rows to one shard
             out = P * bucket
         else:
-            bucket = max(32, _ceil_div(int(cap_in * cfg.shuffle_slack), P))
-            out = max(32, int(cap_in * cfg.shuffle_slack))
+            bucket = max(32, _ceil_div(int(cap_in * slack), P))
+            out = max(32, int(cap_in * slack))
         return bucket, out
 
     for op in plan.ops:
-        ins = [plan.ops[i] for i in op.inputs]
+        ins = [caps[i] for i in op.inputs]
+        cap, bucket = 0, 0
         if isinstance(op, Source):
             rows = source_rows[op.node.id]
-            op.cap = rows if op.dist == D.REP else max(1, _ceil_div(rows, P))
+            cap = rows if op.dist == D.REP else max(1, _ceil_div(rows, P))
         elif isinstance(op, (HashExchange, SampleSort)):
-            op.bucket, op.cap = shuffle_plan(ins[0].cap)
+            bucket, cap = shuffle_plan(ins[0][0])
         elif isinstance(op, MergeJoin):
-            lcap, rcap = ins[0].cap, ins[1].cap
-            op.cap = max(1, int(max(cfg.join_expansion, 1.0) * (lcap + rcap)))
+            lcap, rcap = ins[0][0], ins[1][0]
+            cap = max(1, int(max(join_exp, 1.0) * (lcap + rcap)))
         elif isinstance(op, ConcatOp):
-            op.cap = sum(i.cap for i in ins)
+            cap = sum(i[0] for i in ins)
         elif isinstance(op, RebalanceOp):
-            op.bucket = ins[0].cap
-            op.cap = ins[0].cap
+            bucket = ins[0][0]
+            cap = ins[0][0]
+        elif isinstance(op, PartialAgg):
+            cap = ins[0][0]
+            if group_cap is not None:
+                cap = max(1, min(cap, int(group_cap)))
         else:   # Compact / Map / WindowOp / AggPrep / LocalSort / SegmentAgg
-            op.cap = ins[0].cap
+            cap = ins[0][0]
+        caps[op.op_id] = (cap, bucket)
+    return caps
+
+
+def plan_capacities(plan: PhysicalPlan, P: int, cfg,
+                    source_rows: dict[int, int]) -> None:
+    """Fill ``cap``/``bucket`` on every op (see :func:`compute_capacities`)."""
+    for op_id, (cap, bucket) in compute_capacities(plan, P, cfg,
+                                                   source_rows).items():
+        plan.ops[op_id].cap = cap
+        plan.ops[op_id].bucket = bucket

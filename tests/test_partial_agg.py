@@ -1,0 +1,306 @@
+"""Map-side partial aggregation (shuffle engine v2, PR 4).
+
+The planner splits a shuffling aggregate with decomposable agg fns into
+PartialAgg -> HashExchange -> LocalSort -> SegmentAgg(combine), so each shard
+ships at most its DISTINCT local key groups.  These tests cover the combine
+algebra for every decomposable fn, heavy key skew in both directions (all
+rows one group / all rows distinct), the pre-partitioned skip rule, the
+agg_group_cap capacity lever, and the nunique aux-sort elision satellite.
+"""
+import os
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro import hiframes as hf
+from repro.core import physical_plan as pp
+from oracle import o_aggregate
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+from test_physical_plan import run_sharded  # noqa: E402
+from test_packed_exchange import _count_prim  # noqa: E402
+
+
+def _table(n=500, n_keys=9, seed=21):
+    rng = np.random.default_rng(seed)
+    return {"k": rng.integers(0, n_keys, n).astype(np.int32),
+            "x": rng.normal(size=n).astype(np.float32),
+            "y": rng.integers(0, 50, n).astype(np.int32)}
+
+
+def _check_against_oracle(t, out, aggs, atol=1e-2):
+    ref = o_aggregate(t, "k", aggs)
+    order = np.argsort(out["k"][: len(ref["k"])])
+    assert len(out["k"]) == len(ref["k"])
+    np.testing.assert_array_equal(out["k"][order], ref["k"])
+    for name in aggs:
+        np.testing.assert_allclose(out[name][order], ref[name], atol=atol,
+                                   err_msg=name)
+
+
+# -- plan shapes ---------------------------------------------------------------
+
+
+def test_partial_agg_plan_shape():
+    t = _table()
+    df = hf.table(t)
+    a = hf.aggregate(df, "k", s=hf.sum_(df["x"]), c=hf.count())
+    plan = a.physical_plan()
+    kinds = [type(op).__name__ for op in plan.ops]
+    i_p, i_e = kinds.index("PartialAgg"), kinds.index("HashExchange")
+    i_f = kinds.index("SegmentAgg")
+    assert i_p < i_e < i_f, plan.render()
+    final = [op for op in plan.ops if isinstance(op, pp.SegmentAgg)][0]
+    assert final.from_partials
+    # partial rows ship decomposed __p_* statistics, not raw values
+    ex = [op for op in plan.ops if isinstance(op, pp.HashExchange)][0]
+    assert any(c.startswith("__p_") for c in ex.schema), ex.schema
+
+
+def test_prepartitioned_input_skips_partial_stage():
+    """join -> aggregate(join keys): the exchange is elided, so the partial
+    stage must be skipped entirely (the rewrite composes with elision rather
+    than stacking a useless pre-aggregation)."""
+    rng = np.random.default_rng(5)
+    n, m = 400, 60
+    left = {"k": rng.integers(0, 7, n).astype(np.int32),
+            "x": rng.normal(size=n).astype(np.float32)}
+    right = {"k": rng.integers(0, 7, m).astype(np.int32),
+             "w": rng.normal(size=m).astype(np.float32)}
+    j = hf.join(hf.table(left), hf.table(right, "d"), on="k")
+    a = hf.aggregate(j, "k", s=hf.sum_(j["w"]))
+    c = a.physical_plan().counts()
+    assert c["partial_aggs"] == 0
+    assert c["hash_exchanges"] == 2          # just the join's
+    # REP aggregates skip it too (no exchange at all)
+    rep = hf.table(left).replicate()
+    ar = hf.aggregate(rep, "k", s=hf.sum_(rep["x"]))
+    cr = ar.physical_plan().counts()
+    assert cr["partial_aggs"] == 0 and cr["hash_exchanges"] == 0
+
+
+def test_non_decomposable_aggs_stay_on_raw_path():
+    t = _table()
+    df = hf.table(t)
+    for agg in (dict(nu=hf.nunique(df["y"])), dict(f=hf.first(df["x"]))):
+        a = hf.aggregate(df, "k", **agg)
+        c = a.physical_plan().counts()
+        assert c["partial_aggs"] == 0, agg
+    # mixing one non-decomposable fn disables the rewrite for the whole node
+    a = hf.aggregate(df, "k", s=hf.sum_(df["x"]), nu=hf.nunique(df["y"]))
+    assert a.physical_plan().counts()["partial_aggs"] == 0
+
+
+# -- correctness: every decomposable fn, P=1 -----------------------------------
+
+
+def test_all_decomposable_fns_match_oracle():
+    t = _table()
+    df = hf.table(t)
+    a = hf.aggregate(df, "k",
+                     s=hf.sum_(df["x"]), c=hf.count(), m=hf.mean(df["x"]),
+                     mn=hf.min_(df["x"]), mx=hf.max_(df["x"]),
+                     v=hf.var(df["x"]), sd=hf.std(df["x"]))
+    assert a.physical_plan().counts()["partial_aggs"] == 1
+    out = a.collect().to_numpy()
+    _check_against_oracle(t, out, {
+        "s": ("sum", t["x"]), "c": ("count", t["x"]), "m": ("mean", t["x"]),
+        "mn": ("min", t["x"]), "mx": ("max", t["x"]),
+        "v": ("var", t["x"]), "sd": ("std", t["x"])})
+
+
+def test_partial_matches_raw_path_exactly_for_ints():
+    """Integer sums/counts/min/max are exact: partial and raw paths agree
+    bit-for-bit."""
+    t = _table()
+    df = hf.table(t)
+    a = hf.aggregate(df, "k", s=hf.sum_(df["y"]), c=hf.count(),
+                     mn=hf.min_(df["y"]), mx=hf.max_(df["y"]))
+    on = a.collect(hf.ExecConfig()).to_numpy()
+    off = a.collect(hf.ExecConfig(partial_agg=False)).to_numpy()
+    for k in on:
+        np.testing.assert_array_equal(on[k], off[k], err_msg=k)
+
+
+# -- key skew on 1/2/8 shards --------------------------------------------------
+
+
+_SKEW_BODY = """
+    rng = np.random.default_rng(31)
+    n = 640
+    from oracle import o_aggregate
+
+    def check(t):
+        df = hf.table(t)
+        a = hf.aggregate(df, "k", s=hf.sum_(df["x"]), c=hf.count(),
+                         m=hf.mean(df["x"]), v=hf.var(df["x"]))
+        out = a.collect().to_numpy()
+        ref = o_aggregate(t, "k", {"s": ("sum", t["x"]),
+                                   "c": ("count", t["x"]),
+                                   "m": ("mean", t["x"]),
+                                   "v": ("var", t["x"])})
+        ngroups = len(ref["k"])
+        assert len(out["k"]) == ngroups, (len(out["k"]), ngroups)
+        order = np.argsort(out["k"])
+        np.testing.assert_array_equal(out["k"][order], ref["k"])
+        np.testing.assert_allclose(out["s"][order], ref["s"], atol=1e-2)
+        np.testing.assert_array_equal(out["c"][order], ref["c"])
+        np.testing.assert_allclose(out["m"][order], ref["m"], atol=1e-3)
+        np.testing.assert_allclose(out["v"][order], ref["v"], atol=1e-2)
+
+    # all rows ONE group: the partial stage collapses each shard to 1 row
+    check({"k": np.zeros(n, np.int32),
+           "x": rng.normal(size=n).astype(np.float32)})
+    # all rows DISTINCT groups: partial aggregation is a no-op pass-through
+    check({"k": rng.permutation(n).astype(np.int32),
+           "x": rng.normal(size=n).astype(np.float32)})
+    # zipf-ish skew between the extremes
+    check({"k": (rng.zipf(1.5, n) % 13).astype(np.int32),
+           "x": rng.normal(size=n).astype(np.float32)})
+"""
+
+
+@pytest.mark.parametrize("devices", [1, 2, 8])
+def test_partial_agg_under_skew(devices):
+    run_sharded(_SKEW_BODY, devices=devices)
+
+
+# -- agg_group_cap: the capacity lever -----------------------------------------
+
+
+def test_agg_group_cap_shrinks_exchange_buffers():
+    """With a distinct-groups bound, the post-partial exchange bucket (and
+    its census byte estimate) shrink; results stay correct because at most
+    `groups` rows survive the partial stage per shard."""
+    t = _table(n=800, n_keys=6)
+    df = hf.table(t)
+    a = hf.aggregate(df, "k", s=hf.sum_(df["x"]), c=hf.count())
+    free = a.physical_plan(hf.ExecConfig())
+    capped = a.physical_plan(hf.ExecConfig(agg_group_cap=16))
+    assert capped.shuffle_census(P=8)["payload_bytes"] < \
+        free.shuffle_census(P=8)["payload_bytes"]
+    # low-cardinality keys: 6 distinct groups fit the bound with NO retry —
+    # the proof that at most distinct-groups rows crossed the wire per shard
+    cfg = hf.ExecConfig(agg_group_cap=16, auto_retry=0)
+    out = a.collect(cfg)
+    assert not out.overflow
+    _check_against_oracle(t, out.to_numpy(),
+                          {"s": ("sum", t["x"]), "c": ("count", t["x"])})
+
+
+def test_agg_group_cap_overflow_retries():
+    """A too-tight bound flags overflow; collect()'s retry loop doubles
+    agg_group_cap until the partial rows fit."""
+    t = _table(n=400, n_keys=64)
+    df = hf.table(t)
+    a = hf.aggregate(df, "k", c=hf.count())
+    tight = hf.ExecConfig(agg_group_cap=4, auto_retry=0)
+    assert a.collect(tight).overflow
+    healed = a.collect(hf.ExecConfig(agg_group_cap=4, auto_retry=6))
+    assert not healed.overflow
+    _check_against_oracle(t, healed.to_numpy(), {"c": ("count", t["x"])})
+
+
+def test_agg_group_cap_multi_device():
+    run_sharded("""
+        rng = np.random.default_rng(41)
+        n = 800
+        t = {"k": rng.integers(0, 6, n).astype(np.int32),
+             "x": rng.normal(size=n).astype(np.float32)}
+        df = hf.table(t)
+        a = hf.aggregate(df, "k", s=hf.sum_(df["x"]), c=hf.count())
+        out = a.collect(hf.ExecConfig(agg_group_cap=8, auto_retry=0))
+        assert not out.overflow
+        o = out.to_numpy()
+        uids = np.unique(t["k"])
+        order = np.argsort(o["k"])
+        np.testing.assert_array_equal(o["k"][order], uids)
+        np.testing.assert_allclose(
+            o["s"][order], [t["x"][t["k"] == u].sum() for u in uids],
+            atol=1e-2)
+    """, devices=8)
+
+
+# -- nunique aux-sort elision (satellite) --------------------------------------
+
+
+def _count_sorts(lowered) -> int:
+    fn, inputs = lowered._prepare()
+    jaxpr = jax.make_jaxpr(lambda s, e: fn(s, e))(inputs["scans"],
+                                                  inputs["ext"])
+    return _count_prim(jaxpr, "sort")
+
+
+def test_nunique_rides_planner_sort():
+    """When the planner inserts the aggregate's LocalSort anyway, the FIRST
+    nunique column rides it as a trailing key: one lax.sort fewer in the
+    traced program, same results."""
+    t = _table()
+    df = hf.table(t)
+    a1 = hf.aggregate(df, "k", nu=hf.nunique(df["y"]))
+    plan = a1.physical_plan()
+    seg = [op for op in plan.ops if isinstance(op, pp.SegmentAgg)][0]
+    assert seg.nunique_ride == "nu", plan.render()
+    ls = [op for op in plan.ops if isinstance(op, pp.LocalSort)][0]
+    assert ls.keys == ("k", "__v_nu"), plan.render()
+    # RELATIVE sort-primitive counts (the exchange itself contributes an
+    # argsort at P>1, so absolute counts are device-dependent): a second
+    # nunique pays its own aux sort — exactly ONE more than the riding plan.
+    s1 = _count_sorts(a1.lower())
+    a2 = hf.aggregate(df, "k", nu=hf.nunique(df["y"]),
+                      nx=hf.nunique(df["x"]))
+    seg2 = [op for op in a2.physical_plan().ops
+            if isinstance(op, pp.SegmentAgg)][0]
+    assert seg2.nunique_ride == "nu"
+    assert _count_sorts(a2.lower()) == s1 + 1
+    # adding `first` disables the ride: the SAME single nunique now costs
+    # its aux sort again (one more sort than the riding plan)
+    anf = hf.aggregate(df, "k", nu=hf.nunique(df["y"]), f=hf.first(df["x"]))
+    assert _count_sorts(anf.lower()) == s1 + 1
+    if jax.device_count() == 1:
+        # single shard: the exchange is a compact (no argsort), so the
+        # riding plan's ONLY sort is the LocalSort itself
+        assert s1 == 1
+
+
+def test_nunique_ride_disabled_by_first():
+    """`first` reads in-group arrival order; a trailing value sort key would
+    scramble it, so the ride is disabled when first is present."""
+    t = _table()
+    df = hf.table(t)
+    a = hf.aggregate(df, "k", nu=hf.nunique(df["y"]), f=hf.first(df["x"]))
+    seg = [op for op in a.physical_plan().ops
+           if isinstance(op, pp.SegmentAgg)][0]
+    assert seg.nunique_ride is None
+    ls = [op for op in a.physical_plan().ops
+          if isinstance(op, pp.LocalSort)][0]
+    assert ls.keys == ("k",)
+
+
+def test_nunique_ride_correctness():
+    t = _table(n=700, n_keys=8, seed=33)
+    df = hf.table(t)
+    a = hf.aggregate(df, "k", nu=hf.nunique(df["y"]), c=hf.count(),
+                     s=hf.sum_(df["x"]))
+    out = a.collect().to_numpy()
+    _check_against_oracle(t, out, {"nu": ("nunique", t["y"]),
+                                   "c": ("count", t["y"]),
+                                   "s": ("sum", t["x"])})
+    run_sharded("""
+        from oracle import o_aggregate
+        rng = np.random.default_rng(34)
+        n = 700
+        t = {"k": rng.integers(0, 8, n).astype(np.int32),
+             "y": rng.integers(0, 30, n).astype(np.int32)}
+        df = hf.table(t)
+        a = hf.aggregate(df, "k", nu=hf.nunique(df["y"]), c=hf.count())
+        out = a.collect().to_numpy()
+        ref = o_aggregate(t, "k", {"nu": ("nunique", t["y"]),
+                                   "c": ("count", t["y"])})
+        order = np.argsort(out["k"])
+        np.testing.assert_array_equal(out["k"][order], ref["k"])
+        np.testing.assert_array_equal(out["nu"][order], ref["nu"])
+        np.testing.assert_array_equal(out["c"][order], ref["c"])
+    """, devices=8)

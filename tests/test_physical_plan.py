@@ -72,14 +72,21 @@ def test_join_agg_same_keys_two_exchanges_one_sort():
 
 
 def test_join_agg_different_keys_three_exchanges():
-    """(b) aggregate by a NON-join key still pays its own exchange."""
+    """(b) aggregate by a NON-join key still pays its own exchange — which,
+    with decomposable agg fns, takes the partial-aggregation path (one extra
+    local sort, but the exchange ships only distinct local groups)."""
     left, right = _frames()
     j = hf.join(hf.table(left), hf.table(right, "d"),
                 on=[("k1", "ca"), ("k2", "cb")])
     a = hf.aggregate(j, by="x", c=hf.count())
     c = a.physical_plan().counts()
     assert c["hash_exchanges"] == 3
-    assert c["local_sorts"] == 1
+    assert c["local_sorts"] == 2
+    assert c["partial_aggs"] == 1
+    c_off = a.physical_plan(hf.ExecConfig(partial_agg=False)).counts()
+    assert c_off["hash_exchanges"] == 3
+    assert c_off["local_sorts"] == 1
+    assert c_off["partial_aggs"] == 0
 
 
 def test_broadcast_join_zero_shuffles():
@@ -150,9 +157,13 @@ def test_elide_exchanges_false_restores_baseline():
     j = hf.join(hf.table(left), hf.table(right, "d"),
                 on=[("k1", "ca"), ("k2", "cb")])
     a = hf.aggregate(j, by=("k1", "k2"), c=hf.count())
-    c = a.physical_plan(hf.ExecConfig(elide_exchanges=False)).counts()
+    # the FULL baseline needs both PR-2 elision and PR-4 partial aggregation
+    # off (each is its own A/B lever)
+    c = a.physical_plan(hf.ExecConfig(elide_exchanges=False,
+                                      partial_agg=False)).counts()
     assert c["hash_exchanges"] == 3
     assert c["local_sorts"] == 1
+    assert c["partial_aggs"] == 0
 
 
 def test_join_chain_reuses_partitioning():

@@ -49,8 +49,13 @@ def test_census_join_then_aggregate_baseline():
     j = hf.join(hf.table(left), hf.table(right, "d"),
                 on=[("k1", "ca"), ("k2", "cb")])
     a = hf.aggregate(j, by=("k1", "k2"), c=hf.count())
+    # full pre-PR2 baseline: elision AND partial aggregation both off
+    _census(a, hf.ExecConfig(elide_exchanges=False, partial_agg=False),
+            hash_exchanges=3, local_sorts=1, partial_aggs=0)
+    # with elision off but partial agg on, the surviving aggregate exchange
+    # splits into PartialAgg -> exchange -> FinalAgg (one extra local sort)
     _census(a, hf.ExecConfig(elide_exchanges=False),
-            hash_exchanges=3, local_sorts=1)
+            hash_exchanges=3, local_sorts=2, partial_aggs=1)
 
 
 def test_census_broadcast_join():
@@ -89,12 +94,17 @@ def test_census_join_then_window_over_join_keys():
 
 def test_census_aggregate_then_window_same_key():
     """aggregate -> window over the aggregate key reuses the grouped layout:
-    no extra exchange AND no extra sort."""
+    no extra exchange AND no extra sort.  The aggregate itself (a bare scan
+    input, so its exchange survives) takes the partial-agg path: a local
+    pre-sort, the exchange of partial rows, and the combine-side sort."""
     left, _ = _frames()
     df = hf.table(left)
     a = hf.aggregate(df, "k1", s=hf.sum_(df["x"]))
     w = hf.cumsum(a, a["s"], out="cs", partition_by="k1")
-    _census(w, hash_exchanges=1, local_sorts=1)
+    _census(w, hash_exchanges=1, local_sorts=2, partial_aggs=1)
+    # partial agg off: the historical 1-exchange 1-sort plan
+    _census(w, hf.ExecConfig(partial_agg=False),
+            hash_exchanges=1, local_sorts=1, partial_aggs=0)
 
 
 def test_census_partitioned_window_on_scan():
@@ -107,24 +117,48 @@ def test_census_partitioned_window_on_scan():
 
 
 def test_census_rebalance_preserves_global_order():
-    """ROADMAP follow-up: range-partitioned + locally-sorted inputs stay
-    globally sorted through Rebalance — the re-sort after a global stencil
-    rides the preserved ordering (SampleSort pre_sorted, no local pre-sort)."""
+    """ROADMAP follow-ups (PR 3 + PR 4): range-partitioned + locally-sorted
+    inputs stay globally sorted through Rebalance, and the rebalanced stream
+    now carries the ``globally_sorted`` block-partitioning flag — so the
+    re-sort after a global stencil plans a FULL no-op (no splitter routing,
+    no exchange), not just a pre_sorted sample sort."""
     left, _ = _frames()
     cfg = hf.ExecConfig(optimize_plan=False)
     s = hf.table(left).sort("t")
     st = hf.sma(s, s["x"], 3, out="m")
     again = st.sort("t")
-    plan = _census(again, cfg, sample_sorts=2, rebalances=1, hash_exchanges=0)
+    plan = _census(again, cfg, sample_sorts=1, rebalances=1, hash_exchanges=0)
     reb = [op for op in plan.ops if isinstance(op, pp.RebalanceOp)]
     assert reb and reb[0].order.keys == ("t",), plan.render()
-    final = [op for op in plan.ops if isinstance(op, pp.SampleSort)][-1]
-    assert final.pre_sorted, plan.render()
-    # the conservative baseline (elision off) drops the ordering again
+    assert reb[0].part.kind == "block" and reb[0].part.globally_sorted, \
+        plan.render()
+    # the downstream Sort planned NOTHING: the root op is the stencil window
+    # itself, still carrying the globally-sorted block partitioning through.
+    assert isinstance(plan.root_op, pp.WindowOp), plan.render()
+    assert plan.root_op.part.globally_sorted, plan.render()
+    # the conservative baseline (elision off) drops the ordering again and
+    # pays the second sample sort
     plan_off = again.physical_plan(hf.ExecConfig(optimize_plan=False,
                                                  elide_exchanges=False))
     reb_off = [op for op in plan_off.ops if isinstance(op, pp.RebalanceOp)]
     assert reb_off and reb_off[0].order.keys == ()
+    assert not reb_off[0].part.globally_sorted
+    assert plan_off.counts()["sample_sorts"] == 2
+
+
+def test_census_rebalanced_sorted_stream_chains():
+    """The globally_sorted flag survives a second Rebalance and a filter:
+    sort -> stencil -> rebalance -> sort(prefix) stays a no-op even when the
+    second sort asks for the SAME key prefix through a filter."""
+    left, _ = _frames(seed=9)
+    cfg = hf.ExecConfig(optimize_plan=False)
+    s = hf.table(left).sort(by=("t", "k1"))
+    st = hf.sma(s, s["x"], 3, out="m")
+    f = st[st["x"] < 10.0]              # keeps every row; preserves order
+    again = f.sort("t")                 # prefix of the preserved ordering
+    plan = _census(again, cfg, sample_sorts=1, rebalances=1, hash_exchanges=0)
+    out = again.collect(cfg).to_numpy()
+    assert np.array_equal(out["t"], np.sort(left["t"]))
 
 
 def test_descending_range_never_satisfies_ascending_sort():
@@ -168,6 +202,70 @@ def test_global_order_by_without_partition_raises():
         hf.cumsum(df, df["x"], order_by="t")
     with pytest.raises(ValueError, match="sort"):
         hf.wma(df, df["x"], [1, 2, 1], order_by="t")
+
+
+def test_census_collectives_and_bytes_join_agg():
+    """PR 4 gate: the census now pins COLLECTIVES ISSUED and SHUFFLED-BYTE
+    estimates, not just exchange counts.  join -> aggregate(join keys) at a
+    fixed P=8: two packed exchanges cost exactly 2 all_to_all each; the
+    per-column baseline pays 1 + n_columns per exchange over identical
+    payload bytes."""
+    left, right = _frames()
+    j = hf.join(hf.table(left), hf.table(right, "d"),
+                on=[("k1", "ca"), ("k2", "cb")])
+    a = hf.aggregate(j, by=("k1", "k2"), s=hf.sum_(j["w"]), c=hf.count())
+    packed = a.physical_plan().shuffle_census(P=8)
+    assert packed["packed"] and packed["all_to_all"] == 4, packed
+    # left ships (k1,k2)=8B/row, right (ca,cb,w)=12B/row after pruning
+    rows = {e["op"]: e for e in packed["exchanges"]}
+    assert rows["HashExchange(k1,k2)"]["row_bytes"] == 8
+    assert rows["HashExchange(ca,cb)"]["row_bytes"] == 12
+    assert packed["payload_bytes"] == 3968          # 8*50*8 + 8*8*12
+    unpacked = a.physical_plan(
+        hf.ExecConfig(packed_exchange=False)).shuffle_census(P=8)
+    assert unpacked["all_to_all"] == 7              # (1+2) + (1+3)
+    assert unpacked["payload_bytes"] == packed["payload_bytes"]
+    # render() surfaces the same census in the explain() header
+    header = a.explain().split("\n\n")[1].splitlines()[0]
+    assert "4 all_to_all (packed)" in header, header
+    assert "B/row shuffled" in header, header
+
+
+def test_census_wide_table_two_collectives_per_exchange():
+    """Acceptance shape at the PLAN level: shuffling a >=8-column table is
+    exactly 2 collectives packed vs 1 + n_columns per column unpacked (the
+    jaxpr-level cross-check lives in test_packed_exchange.py)."""
+    rng = np.random.default_rng(8)
+    n = 300
+    t = {f"c{i}": rng.normal(size=n).astype(np.float32) for i in range(8)}
+    t["k"] = rng.integers(0, 5, n).astype(np.int32)
+    df = hf.table(t)
+    agg = {f"s{i}": hf.sum_(df[f"c{i}"]) for i in range(8)}
+    a = hf.aggregate(df, "k", **agg)
+    cfg = hf.ExecConfig(partial_agg=False)      # one 9-column exchange
+    plan = a.physical_plan(cfg)
+    ex = [op for op in plan.ops if isinstance(op, pp.HashExchange)]
+    assert len(ex) == 1 and len(ex[0].schema) == 9, plan.render()
+    assert plan.op_collectives(ex[0]) == 2
+    off = a.physical_plan(hf.ExecConfig(partial_agg=False,
+                                        packed_exchange=False))
+    assert off.collective_count() == 10             # counts + 9 columns
+
+
+def test_census_partial_agg_shrinks_wire_volume():
+    """The partial-agg + agg_group_cap pair shrinks the post-partial
+    exchange's byte estimate (bucket follows the distinct-group bound)."""
+    left, _ = _frames()
+    df = hf.table(left)
+    a = hf.aggregate(df, "k1", s=hf.sum_(df["x"]), c=hf.count())
+    free = a.physical_plan().shuffle_census(P=8)
+    capped = a.physical_plan(hf.ExecConfig(agg_group_cap=8)).shuffle_census(P=8)
+    assert capped["payload_bytes"] < free["payload_bytes"], (capped, free)
+    assert capped["all_to_all"] == free["all_to_all"] == 2
+    # the exchange ships decomposed partial statistics, not raw rows
+    ex = [op for op in a.physical_plan().ops
+          if isinstance(op, pp.HashExchange)][0]
+    assert any(c.startswith("__p_") for c in ex.schema)
 
 
 def test_census_rebalance_result_still_sorted():

@@ -28,11 +28,17 @@ print("=== WMA plan (stencil on 1D_BLOCK, no rebalance needed) ===")
 print(smooth.explain())
 
 # filtered series then SMA — note the Rebalance the pass inserts (1D_VAR
-# filter output -> stencil needs 1D_BLOCK)
-liquid = df[df["volume"] > 150.0]
-liquid_sma = hf.sma(liquid, liquid["price"], 3, out="sma")
+# filter output -> stencil needs 1D_BLOCK).  Fluent chain + df.volume sugar.
+liquid = df[df.volume > 150.0]
+liquid_sma = hf.sma(liquid, liquid.price, 3, out="sma")
 print("\n=== filtered SMA plan (Rebalance inserted automatically) ===")
 print(liquid_sma.explain())
+
+# trailing rolling mean, padded vs exact borders: the exact mode divides by
+# the rows that actually contributed (pandas min_periods=1), so the leading
+# edge is unbiased instead of damped toward zero.
+rm_pad = hf.rolling_mean(df, df.price, 20, out="rm")
+rm_exact = hf.rolling_mean(df, df.price, 20, out="rm", exact=True)
 
 out = turnover.collect().to_numpy()
 ref = np.cumsum(price.astype(np.float64) * volume)
@@ -41,6 +47,11 @@ print("\ncumsum rel-err:",
 
 w = smooth.collect().to_numpy()["wma"]
 print("wma sample:", w[1000:1003], "vs raw:", price[1000:1003])
+
+pad = rm_pad.collect().to_numpy()["rm"]
+exact = rm_exact.collect().to_numpy()["rm"]
+print("rolling-mean row 0: padded", pad[0], "exact", exact[0],
+      "raw", price[0])
 
 ls = liquid_sma.collect()
 print(f"liquid rows: {ls.num_rows()} / {n}")

@@ -26,15 +26,15 @@ def customer_model(min_count: int, num_centroids: int, iterations: int,
     store_sales = hf.table(ss, "store_sales")
     item = hf.table(it, "item")
 
-    # -- relational stage (compiled, distributed) ----------------------------
-    sale_items = hf.join(store_sales, item, on=("ss_item_sk", "i_item_sk"))
-    c_i_points = hf.aggregate(
-        sale_items, "ss_customer_sk",
-        c_i_count=hf.count(),
-        id1=hf.sum_(sale_items["i_class_id"] == 1),
-        id2=hf.sum_(sale_items["i_class_id"] == 2),
-        id3=hf.sum_(sale_items["i_class_id"] == 3))
-    c_i_points = c_i_points[c_i_points["c_i_count"] > min_count]
+    # -- relational stage (compiled, distributed; fluent chain) --------------
+    sale_items = store_sales.merge(item, on=("ss_item_sk", "i_item_sk"))
+    c_i_points = (sale_items
+                  .groupby("ss_customer_sk")
+                  .agg(c_i_count="count",
+                       id1=(sale_items.i_class_id == 1, "sum"),
+                       id2=(sale_items.i_class_id == 2, "sum"),
+                       id3=(sale_items.i_class_id == 3, "sum")))
+    c_i_points = c_i_points[c_i_points.c_i_count > min_count]
 
     # -- feature scaling as column assignment (id3 standardized) -------------
     t = c_i_points.collect()

@@ -1,4 +1,4 @@
-"""Quickstart: the HiFrames data-frame API (paper Table 1) in 40 lines.
+"""Quickstart: the fluent HiFrames data-frame API in 40 lines.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -16,37 +16,54 @@ df = hf.table({
     "y": rng.normal(size=n).astype(np.float32),
 })
 
-# filter — compiles to a no-communication compaction (1D_VAR output)
-small = df[df["id"] < 10]
-
-# join — hash-shuffle + sort-merge; different key names allowed
+# a dimension table to join against
 dim = hf.table({"cid": np.arange(100, dtype=np.int32),
                 "weight": rng.normal(size=100).astype(np.float32)}, "dim")
-joined = hf.join(df, dim, on=("id", "cid"))
 
-# aggregate with expressions (sum(:x < 1.0) — the paper's sugar)
-stats = hf.aggregate(joined, "id",
-                     xc=hf.sum_(joined["x"] < 1.0),
-                     ym=hf.mean(joined["y"]),
-                     n=hf.count())
+# the fluent chain: filter -> join -> derived column -> group-by -> top-k.
+# Everything is LAZY; collect() compiles ONE SPMD program.
+stats = (df[df.id < 50]                          # filter: no communication
+           .merge(dim, on=("id", "cid"))         # join (key-pair form)
+           .assign(wx=lambda d: d.x * d.weight)  # derived column
+           .groupby("id")
+           .agg(xc=(df.x < 1.0, "sum"),          # expression agg (paper sugar)
+                ym=("y", "mean"),
+                ws=("wx", "sum"),
+                n="count")
+           .sort_values("n", ascending=False)
+           .head(10))                            # top-k: count clamps only
 
-# analytics: cumsum (MPI_Exscan pattern) and WMA (stencil + halo exchange)
-cs = hf.cumsum(df, df["x"], out="running")
-wma = hf.wma(df, df["x"], [1, 2, 1], out="smooth")
+# column assignment, the paper's df[:c] = ... form
+df["r"] = df.x / (abs(df.y) + 1.0)
+
+# analytics: running total and weighted moving average (halo-exchange stencil)
+cs = hf.cumsum(df, df.x, out="running")
+wma = hf.wma(df, df.x, [1, 2, 1], out="smooth")
+# exact rolling mean (pandas min_periods=1 borders)
+rm = hf.rolling_mean(df, df.x, 5, out="rm", exact=True)
 
 # UDFs compile into the same program — zero overhead (paper Fig. 10)
-via_udf = df[hf.udf(lambda x, y: np.cos(1.0) * x + y > 0.0, df["x"], df["y"])]
+via_udf = df[hf.udf(lambda x, y: np.cos(1.0) * x + y > 0.0, df.x, df.y)]
 
-# EXPLAIN shows the optimized plan + inferred distributions (Fig. 7 lattice)
-f = joined[joined["weight"] > 0.0]        # will push below the join
-print("=== optimized plan (note Filter pushed under Join) ===")
-print(f.explain())
+# EXPLAIN shows the optimized plan + the physical plan with its shuffle census
+print("=== plan ===")
+print(stats.explain())
+
+# persist(): materialize WITH layout — the repeated-query hook.  The second
+# aggregation below plans ZERO exchanges and ZERO sorts and its device
+# shards re-enter execution without a host round-trip.
+hot = df.groupby("id").agg(s=("x", "sum"), m=("y", "mean")).persist()
+again = hot.groupby("id").agg(total=("s", "sum"))
+print("\n=== persisted re-aggregation (0 shuffles, 0 sorts) ===")
+print(again.explain().split("\n\n")[1].splitlines()[0])
 
 print("\n=== results ===")
 t = stats.collect()
-print("aggregate:", t)
+print("top-10 groups:", t)
 out = t.to_numpy()
 print("first rows:", {k: v[:4] for k, v in out.items()})
 print("cumsum tail:", cs.collect().to_numpy()["running"][-3:])
 print("wma head:", wma.collect().to_numpy()["smooth"][:3])
+print("exact rolling-mean head:", rm.collect().to_numpy()["rm"][:3])
 print("udf rows:", via_udf.collect().num_rows())
+print("persisted re-agg rows:", again.collect().num_rows())

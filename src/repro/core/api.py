@@ -1,65 +1,89 @@
-"""HiFrames user API — data frames tightly integrated with array code.
+"""HiFrames user API — fluent, pandas-flavored data frames that compile
+with the surrounding array code.
 
-Mirrors the paper's Table 1 surface:
+The surface is METHOD-CHAINED (API v2); every relational verb returns a new
+lazy DataFrame wrapping a logical plan node:
 
     import repro.hiframes as hf
-    df  = hf.table({"id": ids, "x": xs})          # DataSource analogue
-    v   = df["x"]                                  # projection -> expression
-    df2 = df[df["id"] < 100]                       # filter
-    df3 = hf.join(df1, df2, on=("id", "cid"))      # join (different key names OK)
-    df4 = hf.aggregate(df1, "id", xc=hf.sum(df1["x"] < 1.0), ym=hf.mean(df1["y"]))
-    df5 = hf.concat(df1, df2)                      # [df1; df2]
-    c   = hf.cumsum(df1, df1["x"])                 # analytics
-    a   = hf.stencil(df1, df1["x"], [1, 2, 1], scale=4.0)   # WMA
-    out = df4.collect()                            # optimize+distribute+jit+run
+    df = hf.table({"id": ids, "x": xs, "y": ys})   # DataSource analogue
 
-Composite (multi-column) keys are supported end-to-end — join, group-by and
+    out = (df[df.x > 0.0]                          # filter (df.x == df["x"])
+             .merge(dim, on=("id", "cid"))         # equi-join
+             .assign(z=df.x * 2.0)                 # derived columns
+             .groupby("id")                        # GroupBy proxy
+             .agg(total=("z", "sum"),              # pandas named-agg specs
+                  n=("z", "count"),
+                  ym=hf.mean(df.y))                # ...or AggExpr spellings
+             .sort_values("total", ascending=False)
+             .head(10)
+             .collect())                           # optimize+distribute+jit+run
+
+    df["r"] = df.x / df.y                          # column assignment
+    df2 = df.drop(["y"])                           # column removal
+
+Composite (multi-column) keys are supported end-to-end — merge, groupby and
 sort accept key tuples, which shuffle on a combined hash, sort
 lexicographically and compare position-wise (TPCx-BB-style query shapes):
 
-    hf.join(l, r, on=[("a", "ca"), ("b", "cb")])   # 2-column equi-join
-    hf.join(l, r, on=["k1", "k2"])                 # same names both sides
-    hf.aggregate(df, by=("k1", "k2"), s=hf.sum_(df["x"]))
+    l.merge(r, on=[("a", "ca"), ("b", "cb")])      # 2-column equi-join
+    df.groupby(("k1", "k2")).agg(s=("x", "sum"))
     df.sort(by=("k1", "k2"))
 
 ``on=("id", "cid")`` — a 2-tuple of strings — keeps its historical meaning of
 a SINGLE key pair with different names; use a list for composite keys.
 
+**Materialization with a layout contract** — the repeated-query hook:
+
+    hot = df.groupby(("k1", "k2")).agg(s=("x", "sum")).persist()
+
+``persist()`` (alias ``cache()``) executes the plan ONCE and returns a new
+DataFrame backed by a Scan that carries the materialized layout — hash/range
+partitioning keys, per-shard sort order, global sortedness, per-shard valid
+counts.  The device shards re-enter later executions without a host
+round-trip, and downstream ``groupby``/``merge``/``over``/``sort`` on the
+persisted keys plan ZERO exchanges and ZERO sorts (docs/api.md).  A persisted
+dimension table turns every query against it into the elided plan.
+
 Window functions may be PARTITIONED (SQL ``OVER (PARTITION BY ... ORDER BY
 ...)``) — per-group cumsum/SMA/WMA/lag/lead plus rank/row_number and rolling
 sums/means, planned as hash co-location + grouped local sort (both elided
-when the input already provides them — ``join → wma`` over the join keys
-shuffles exactly as much as the bare join):
+when the input already provides them):
 
     w = df.over("g", order_by="t")                 # the OVER clause
-    d1 = w.cumsum(df["x"])                         # per-group running total
-    d2 = w.wma(df["x"], [1, 2, 1], out="wma")      # group-bounded stencil
+    d1 = w.cumsum(df.x)                            # per-group running total
+    d2 = w.rolling_mean(df.x, 5, exact=True)       # pandas min_periods=1 mode
     d3 = w.rank()                                  # SQL RANK()
-    d4 = hf.lag(df, df["x"], partition_by="g", order_by="t")   # kwargs form
 
 Every collected column is a plain jax.Array; any jax array can be attached
-with ``with_column`` or referenced directly inside expressions (the paper's
-"any array in the program" rule).
+with ``with_column``/``assign`` or referenced directly inside expressions
+(the paper's "any array in the program" rule).
+
+The pre-v2 free functions (``hf.join(df, ...)``, ``hf.aggregate(df, by,
+...)``, ``hf.cumsum(df, ...)``) remain as thin shims delegating to the
+fluent surface — existing code keeps working unchanged (migration table in
+docs/api.md).
 """
 from __future__ import annotations
 
+import dataclasses as _dc
 from typing import Any, Sequence
 
 import numpy as np
 
 from . import distribution as D
 from . import ir
-from .expr import (AggExpr, ColRef, Expr, UDF, as_expr, count, first, fn_expr,
-                   max_, mean, min_, nunique, std, sum_, var)
+from .expr import (AGG_FNS, AggExpr, ColRef, Expr, UDF, all_, any_, as_expr,
+                   count, first, fn_expr, max_, mean, min_, nunique, prod,
+                   std, sum_, var)
 from .lower import ExecConfig, Lowered, lower
 from .table import DTable
 
 __all__ = [
-    "DataFrame", "Over", "table", "join", "aggregate", "concat", "cumsum",
-    "stencil", "sma", "wma", "lag", "lead", "rank", "dense_rank",
+    "DataFrame", "GroupBy", "Over", "table", "join", "aggregate", "concat",
+    "cumsum", "stencil", "sma", "wma", "lag", "lead", "rank", "dense_rank",
     "row_number", "rolling_sum", "rolling_mean", "sum_", "mean", "count",
-    "min_", "max_", "var", "std", "first", "nunique", "udf", "ExecConfig",
-    "explain",
+    "min_", "max_", "prod", "any_", "all_", "var", "std", "first", "nunique",
+    "udf", "ExecConfig", "explain",
 ]
 
 
@@ -84,6 +108,9 @@ class DataFrame:
     def _replicated(self) -> bool:
         return self.node.id in self._rep_nodes
 
+    def _wrap(self, node: ir.Node) -> "DataFrame":
+        return DataFrame(node, self._rep_nodes)
+
     # -- schema ---------------------------------------------------------------
     @property
     def schema(self) -> dict[str, np.dtype]:
@@ -93,39 +120,127 @@ class DataFrame:
     def columns(self) -> list[str]:
         return list(self.node.schema)
 
-    # -- expression building ----------------------------------------------------
+    # -- expression building ---------------------------------------------------
     def __getitem__(self, key):
         if isinstance(key, str):
             return ColRef(self.node.id, key)
         if isinstance(key, Expr):                       # df[pred] -> filter
-            return DataFrame(ir.Filter(self.node, key), self._rep_nodes)
+            return self._wrap(ir.Filter(self.node, key))
         if isinstance(key, (list, tuple)):              # df[["a","b"]] -> project
             cols = {k: ColRef(self.node.id, k) for k in key}
-            return DataFrame(ir.Project(self.node, cols), self._rep_nodes)
+            return self._wrap(ir.Project(self.node, cols))
         raise TypeError(key)
 
-    def with_column(self, name: str, e) -> "DataFrame":
-        """Attach a derived column (df[:id3] = expr analogue)."""
-        cols = {k: ColRef(self.node.id, k) for k in self.node.schema}
-        cols[name] = as_expr(e)
-        return DataFrame(ir.Project(self.node, cols), self._rep_nodes)
+    def __getattr__(self, name: str):
+        """Column access as attributes: ``df.x`` is ``df["x"]``.  Methods and
+        real attributes win (this hook only fires when normal lookup fails);
+        columns shadowed by a method name need the subscript form."""
+        try:
+            node = object.__getattribute__(self, "node")
+        except AttributeError:
+            raise AttributeError(name) from None
+        if not name.startswith("_") and name in node.schema:
+            return ColRef(node.id, name)
+        raise AttributeError(
+            f"DataFrame has no attribute or column {name!r} "
+            f"(columns: {list(node.schema)})")
 
-    def rename(self, mapping: dict[str, str]) -> "DataFrame":
+    def __setitem__(self, name: str, value):
+        """In-place column assignment, ``df["c"] = expr`` — the paper's
+        ``df[:c] = ...``.  Rebinds this wrapper to a Project over the old
+        node; previously built expressions stay valid (columns are resolved
+        by name at evaluation)."""
+        if not isinstance(name, str):
+            raise TypeError(f"column name must be a str, got {name!r}")
+        cols = {k: ColRef(self.node.id, k) for k in self.node.schema}
+        cols[name] = as_expr(value)
+        new = ir.Project(self.node, cols)
+        if self.node.id in self._rep_nodes:
+            self._rep_nodes = self._rep_nodes | {new.id}
+        self.node = new
+
+    def with_column(self, name: str, e) -> "DataFrame":
+        """Attach a derived column (non-mutating form of ``df[name] = e``)."""
+        return self.assign(**{name: e})
+
+    def assign(self, **exprs) -> "DataFrame":
+        """pandas-style ``df.assign(z=df.x * 2, w=lambda d: d.x + d.y)``:
+        returns a new frame with the given columns added (or replaced).
+        Values may be expressions, scalars, arrays, or callables taking the
+        frame."""
+        cols = {k: ColRef(self.node.id, k) for k in self.node.schema}
+        for name, e in exprs.items():
+            if callable(e) and not isinstance(e, Expr):
+                e = e(self)
+            cols[name] = as_expr(e)
+        return self._wrap(ir.Project(self.node, cols))
+
+    def rename(self, mapping: dict[str, str] | None = None, *,
+               columns: dict[str, str] | None = None) -> "DataFrame":
+        """Rename columns; accepts the mapping positionally or as the
+        pandas-style ``columns=`` keyword."""
+        mapping = mapping if mapping is not None else (columns or {})
         cols = {mapping.get(k, k): ColRef(self.node.id, k) for k in self.node.schema}
-        return DataFrame(ir.Project(self.node, cols), self._rep_nodes)
+        return self._wrap(ir.Project(self.node, cols))
 
     def select(self, *names: str) -> "DataFrame":
         return self[list(names)]
 
+    def drop(self, columns, *more: str) -> "DataFrame":
+        """Drop columns: ``df.drop("a")``, ``df.drop(["a", "b"])`` or
+        ``df.drop(columns=[...])``."""
+        dropped = set(ir.as_keys(columns)) | set(more)
+        missing = dropped - set(self.node.schema)
+        if missing:
+            raise KeyError(f"drop: {sorted(missing)} not in columns "
+                           f"{list(self.node.schema)}")
+        return self[[c for c in self.node.schema if c not in dropped]]
+
+    # -- relational verbs -------------------------------------------------------
+    def merge(self, right: "DataFrame", on, how: str = "inner",
+              suffix: str = "_r") -> "DataFrame":
+        """Equi-join; ``on`` is a name, a (left_name, right_name) pair, or a
+        list of names / pairs for composite (multi-column) keys.
+
+        how="left" keeps unmatched left rows (right columns zero-filled; a
+        ``_matched`` int column distinguishes real zeros — the static-shape
+        stand-in for SQL NULLs, documented in DESIGN.md)."""
+        lo, ro = _parse_on(on)
+        if how not in ("inner", "left"):
+            raise ValueError(how)
+        rep = self._rep_nodes | right._rep_nodes
+        node = ir.Join(self.node, right.node, lo, ro, suffix, how)
+        if self._replicated and right._replicated:
+            rep = rep | {node.id}
+        return DataFrame(node, rep)
+
+    def groupby(self, by) -> "GroupBy":
+        """Group-by proxy: ``df.groupby("k").agg(total=("x", "sum"))``.
+        ``by`` is a column name or a tuple/list of names (composite key)."""
+        return GroupBy(self, by)
+
+    def head(self, n: int = 5) -> "DataFrame":
+        """First ``n`` rows in global (shard-concatenation) order — no data
+        movement, just per-shard count clamps; partitioning and ordering
+        survive, so a downstream verb on the same keys stays elided."""
+        return self._wrap(ir.Limit(self.node, n))
+
+    def limit(self, n: int) -> "DataFrame":
+        """SQL-style alias of :meth:`head`."""
+        return self.head(n)
+
     def sort(self, by, ascending: bool = True) -> "DataFrame":
         """Global sort; ``by`` is a column name or a tuple/list of names
         (lexicographic, most-significant first)."""
-        return DataFrame(ir.Sort(self.node, ir.as_keys(by), ascending),
-                         self._rep_nodes)
+        return self._wrap(ir.Sort(self.node, ir.as_keys(by), ascending))
+
+    def sort_values(self, by, ascending: bool = True) -> "DataFrame":
+        """pandas-style alias of :meth:`sort`."""
+        return self.sort(by, ascending)
 
     def over(self, partition_by, order_by=None) -> "Over":
         """Partitioned window context (SQL ``OVER (PARTITION BY ... ORDER BY
-        ...)``): ``df.over("g", order_by="t").cumsum(df["x"])``.  See
+        ...)``): ``df.over("g", order_by="t").cumsum(df.x)``.  See
         docs/window_functions.md for the plan shapes."""
         return Over(self, partition_by, order_by)
 
@@ -138,12 +253,11 @@ class DataFrame:
     def _force_rep(self) -> set[int]:
         return set(self._rep_nodes)
 
-    def collect(self, cfg: ExecConfig | None = None, keep: Sequence[str] | None = None,
-                kernels: dict | None = None) -> DTable:
-        """Execute with capacity-overflow auto-retry (doubled expansion —
-        the 1D_VAR static-capacity fault-tolerance hook, DESIGN.md §2)."""
-        import dataclasses as _dc
-        cfg = cfg or ExecConfig()
+    def _execute(self, cfg: ExecConfig, keep: Sequence[str] | None = None,
+                 kernels: dict | None = None) -> tuple[Lowered, DTable]:
+        """Lower + run with capacity-overflow auto-retry (doubled expansion —
+        the 1D_VAR static-capacity fault-tolerance hook, DESIGN.md §2).
+        Shared by :meth:`collect` and :meth:`persist`."""
         # Clamp once up front: a negative auto_retry means "no retries", and
         # the loop below must still run (and bind ``t``) exactly once.
         retries = max(cfg.auto_retry, 0)
@@ -152,14 +266,73 @@ class DataFrame:
                                force_rep=self._force_rep(), kernels=kernels)
             t = lowered()
             if not t.overflow or _attempt == retries:
-                return t
+                return lowered, t
             cfg = _dc.replace(cfg,
                               join_expansion=max(cfg.join_expansion, 1.0) * 2,
                               shuffle_slack=cfg.shuffle_slack * 2,
                               agg_group_cap=(max(1, cfg.agg_group_cap) * 2
                                              if cfg.agg_group_cap is not None
                                              else None))
-        return t
+        return lowered, t
+
+    def collect(self, cfg: ExecConfig | None = None, keep: Sequence[str] | None = None,
+                kernels: dict | None = None) -> DTable:
+        """Execute the plan and return the materialized DTable."""
+        return self._execute(cfg or ExecConfig(), keep, kernels)[1]
+
+    def persist(self, cfg: ExecConfig | None = None, *, name: str = "persist",
+                kernels: dict | None = None) -> "DataFrame":
+        """Execute ONCE and return a new DataFrame over the materialized
+        result, carrying the layout the plan produced.
+
+        The returned frame's Scan records the root op's partitioning
+        (hash/range keys, direction, global sortedness) and per-shard
+        ordering plus the 1D_VAR carrier (per-shard counts + capacity), so:
+
+          * its device shards re-enter later executions directly — no host
+            gather, no re-pad;
+          * downstream ``groupby``/``merge``/``over``/``sort`` on the
+            persisted keys plan zero exchanges and zero sorts (the plan
+            census pins this, tests/test_api_v2.py).
+
+        Hash/range claims are shard-count-bound: re-executing under a
+        different device count falls back to a host gather and a plain
+        block scan (correct, just not elided).  Replicated results re-enter
+        as host tables pinned REP — a persisted dimension table keeps
+        broadcasting.
+        """
+        cfg = cfg or ExecConfig()
+        lowered, t = self._execute(cfg, kernels=kernels)
+        if t.overflow:
+            # collect() returns the flagged table for the caller to inspect;
+            # baking truncated shards into a reusable frame would silently
+            # drop rows from every later query.
+            raise RuntimeError(
+                "persist(): capacity overflow survived the auto-retries — "
+                "raise ExecConfig.shuffle_slack/join_expansion/auto_retry")
+        root_op = lowered.pplan.root_op
+        layout = ir.ScanLayout(
+            kind=root_op.part.kind, partitioned_by=root_op.part.keys,
+            ascending=root_op.part.ascending,
+            globally_sorted=root_op.part.globally_sorted,
+            sorted_by=root_op.order.keys,
+            order_ascending=root_op.order.ascending,
+            counts=np.asarray(t.counts, dtype=np.int32),
+            capacity=int(t.capacity), nshards=int(t.nshards), dist=t.dist)
+        if t.dist == D.REP:
+            # replicated results are tiny by construction: re-enter as a
+            # plain host table pinned REP, keeping the ordering contract.
+            scan = ir.Scan(name, t.to_numpy(),
+                           layout=_dc.replace(layout, kind="rep",
+                                              counts=None))
+            return DataFrame(scan, frozenset({scan.id}))
+        scan = ir.Scan(name, dict(t.columns), layout=layout)
+        return DataFrame(scan)
+
+    def cache(self, cfg: ExecConfig | None = None, *,
+              name: str = "cache") -> "DataFrame":
+        """Alias of :meth:`persist` (Spark spelling)."""
+        return self.persist(cfg, name=name)
 
     def lower(self, cfg: ExecConfig | None = None, keep: Sequence[str] | None = None,
               collect_block: bool = False, kernels: dict | None = None) -> Lowered:
@@ -218,8 +391,93 @@ class DataFrame:
         return f"DataFrame({list(self.node.schema)})\n{ir.plan_str(self.node)}"
 
 
+# pandas-spelled aliases for the named-agg table (everything else matches).
+_AGG_ALIASES = {"product": "prod", "size": "count", "average": "mean"}
+
+
+class GroupBy:
+    """Deferred group-by: ``df.groupby(keys)`` then :meth:`agg` (or a
+    whole-frame sugar method).  Aggregation specs accept three spellings:
+
+      * pandas named-agg tuples: ``agg(total=("x", "sum"))`` — the column
+        may also be an expression: ``agg(hits=(df.x > 0, "sum"))``;
+      * AggExpr objects: ``agg(total=hf.sum_(df.x))``;
+      * row count: ``agg(n="count")`` (or the :meth:`size` sugar).
+
+    Available fns: sum, mean, count, min, max, prod, any, all, var, std,
+    first, nunique (``product``/``size``/``average`` alias the obvious
+    ones).  Output rows come back hash-partitioned on the keys and sorted by
+    them within each shard — the layout a following :meth:`DataFrame.persist`
+    captures."""
+
+    def __init__(self, df: DataFrame, by):
+        self.df = df
+        self.keys = ir.as_keys(by)
+        missing = set(self.keys) - set(df.node.schema)
+        if missing:
+            raise KeyError(f"groupby: {sorted(missing)} not in columns "
+                           f"{list(df.node.schema)}")
+
+    def _spec(self, name: str, a) -> AggExpr:
+        if isinstance(a, AggExpr):
+            return a
+        if isinstance(a, str):
+            fn = _AGG_ALIASES.get(a, a)
+            if fn == "count":
+                return AggExpr("count", None)
+            raise TypeError(
+                f"agg {name}={a!r}: bare strings only spell 'count'/'size'; "
+                f"use a (column, fn) tuple")
+        if isinstance(a, tuple) and len(a) == 2:
+            col, fn = a
+            fn = _AGG_ALIASES.get(fn, fn)
+            if not isinstance(fn, str) or fn not in AGG_FNS:
+                raise TypeError(f"agg {name}: unknown fn {fn!r}; "
+                                f"valid: {AGG_FNS} (+ aliases "
+                                f"{tuple(_AGG_ALIASES)})")
+            if isinstance(col, str) and col not in self.df.node.schema:
+                raise KeyError(f"agg {name}: no column {col!r}")
+            if fn == "count":
+                return AggExpr("count", None)
+            e = col if isinstance(col, Expr) else ColRef(self.df.node.id, col)
+            return AggExpr(fn, as_expr(e))
+        raise TypeError(f"agg {name}: expected (column, fn), an AggExpr or "
+                        f"'count', got {a!r}")
+
+    def agg(self, **aggs) -> DataFrame:
+        if not aggs:
+            raise ValueError("agg() needs at least one name=(column, fn) spec")
+        specs = {name: self._spec(name, a) for name, a in aggs.items()}
+        node = ir.Aggregate(self.df.node, self.keys, specs)
+        rep = self.df._rep_nodes | ({node.id} if self.df._replicated else set())
+        return DataFrame(node, frozenset(rep))
+
+    aggregate = agg
+
+    def size(self, name: str = "size") -> DataFrame:
+        """Row count per group (pandas ``.size()``)."""
+        return self.agg(**{name: AggExpr("count", None)})
+
+    def _apply_all(self, fn: str) -> DataFrame:
+        cols = [c for c in self.df.node.schema if c not in self.keys]
+        if not cols:
+            return self.size(name="count")
+        return self.agg(**{c: AggExpr(fn, ColRef(self.df.node.id, c))
+                           for c in cols})
+
+    def sum(self) -> DataFrame:     return self._apply_all("sum")
+    def mean(self) -> DataFrame:    return self._apply_all("mean")
+    def min(self) -> DataFrame:     return self._apply_all("min")
+    def max(self) -> DataFrame:     return self._apply_all("max")
+    def prod(self) -> DataFrame:    return self._apply_all("prod")
+    def any(self) -> DataFrame:     return self._apply_all("any")
+    def all(self) -> DataFrame:     return self._apply_all("all")
+    def count(self) -> DataFrame:   return self._apply_all("count")
+    def nunique(self) -> DataFrame: return self._apply_all("nunique")
+
+
 # ---------------------------------------------------------------------------
-# constructors / verbs
+# constructors
 # ---------------------------------------------------------------------------
 
 
@@ -262,35 +520,23 @@ def _parse_on(on) -> tuple[tuple[str, ...], tuple[str, ...]]:
     return tuple(lo), tuple(ro)
 
 
+# ---------------------------------------------------------------------------
+# free-function shims (pre-v2 spellings; thin delegations to the fluent API)
+# ---------------------------------------------------------------------------
+
+
 def join(left: DataFrame, right: DataFrame, on, suffix: str = "_r",
          how: str = "inner") -> DataFrame:
-    """Equi-join; ``on`` is a name, a (left_name, right_name) pair, or a list
-    of names / pairs for composite (multi-column) keys — see :func:`_parse_on`.
-
-    how="left" keeps unmatched left rows (right columns zero-filled; a
-    ``_matched`` int column distinguishes real zeros — the static-shape
-    stand-in for SQL NULLs, documented in DESIGN.md)."""
-    lo, ro = _parse_on(on)
-    if how not in ("inner", "left"):
-        raise ValueError(how)
-    rep = left._rep_nodes | right._rep_nodes
-    node = ir.Join(left.node, right.node, lo, ro, suffix, how)
-    if left._replicated and right._replicated:
-        rep = rep | {node.id}
-    return DataFrame(node, rep)
+    """Shim for :meth:`DataFrame.merge` (the historical spelling)."""
+    return left.merge(right, on, how=how, suffix=suffix)
 
 
-def aggregate(df: DataFrame, by, **aggs: AggExpr) -> DataFrame:
-    """Group-by aggregation; ``by`` is a column name or a tuple/list of names
-    (composite key — groups are distinct key combinations).  Any number of
-    ``nunique`` aggregations may be mixed in (each counts distinct values of
-    its own expression per group)."""
-    for k, v in aggs.items():
-        if not isinstance(v, AggExpr):
-            raise TypeError(f"{k} must be an AggExpr (hf.sum/mean/...)")
-    node = ir.Aggregate(df.node, ir.as_keys(by), dict(aggs))
-    rep = df._rep_nodes | ({node.id} if df._replicated else set())
-    return DataFrame(node, frozenset(rep))
+def aggregate(df: DataFrame, by, **aggs) -> DataFrame:
+    """Shim for ``df.groupby(by).agg(...)``; ``by`` is a column name or a
+    tuple/list of names (composite key).  Accepts the same specs as
+    :meth:`GroupBy.agg` (AggExpr objects or pandas named-agg tuples); any
+    number of ``nunique`` aggregations may be mixed in."""
+    return df.groupby(by).agg(**aggs)
 
 
 def concat(*dfs: DataFrame) -> DataFrame:
@@ -320,17 +566,18 @@ def cumsum(df: DataFrame, e, out: str = "cumsum", *,
 
 def stencil(df: DataFrame, e, weights: Sequence[float], *, scale: float = 1.0,
             center: int | None = None, out: str = "stencil",
-            partition_by=None, order_by=None) -> DataFrame:
+            partition_by=None, order_by=None, exact: bool = False) -> DataFrame:
     """1-D stencil: out[i] = sum_j w[j]/scale * x[i+j-center].
 
     SMA == stencil(x, [1,1,1], scale=3); WMA == stencil(x, [1,2,1], scale=4).
     With ``partition_by``, taps never cross a group boundary (the zero-border
     convention applies per group) — TPCx-BB Q26-style grouped moving
-    averages."""
+    averages.  ``exact=True`` renormalizes border windows by the weight mass
+    of the taps that actually contributed (see :func:`rolling_mean`)."""
     w = tuple(float(x) / scale for x in weights)
     c = len(w) // 2 if center is None else center
     return DataFrame(ir.Window(df.node, "stencil", as_expr(e), out,
-                               weights=w, center=c,
+                               weights=w, center=c, exact=exact,
                                partition_by=_over_keys(partition_by),
                                order_by=_over_keys(order_by)),
                      df._rep_nodes)
@@ -377,12 +624,20 @@ def rolling_sum(df: DataFrame, e, window: int, out: str = "rolling_sum", *,
 
 
 def rolling_mean(df: DataFrame, e, window: int, out: str = "rolling_mean", *,
-                 partition_by=None, order_by=None) -> DataFrame:
-    """Trailing rolling mean = rolling_sum / window.  NOTE: the first
-    window-1 rows of the series (or of each group) divide a zero-padded
-    partial sum by the FULL window, per the stencil border convention."""
+                 partition_by=None, order_by=None,
+                 exact: bool = False) -> DataFrame:
+    """Trailing rolling mean over rows [i-window+1 .. i].
+
+    Default (``exact=False``, the zero-padded fast path): the first
+    window-1 rows of the series — or of each group when partitioned —
+    divide a zero-padded partial sum by the FULL window, per the stencil
+    border convention.  ``exact=True`` divides by the number of rows that
+    actually contributed instead (pandas ``rolling(window,
+    min_periods=1).mean()``); it costs a second pass over the window mask —
+    and, for the global form, a second halo exchange — which is why the
+    padded form stays the default."""
     return stencil(df, e, [1.0] * window, scale=float(window),
-                   center=window - 1, out=out,
+                   center=window - 1, out=out, exact=exact,
                    partition_by=partition_by, order_by=order_by)
 
 
@@ -419,7 +674,8 @@ class Over:
     order_by=...)`` then any window verb — the SQL ``OVER`` clause as an
     object.  Each method returns a new DataFrame with the window column
     appended; results come back in the grouped (hash-partitioned, locally
-    sorted) layout."""
+    sorted) layout — which :meth:`DataFrame.persist` captures, so repeated
+    windows over the same keys plan zero exchanges."""
 
     def __init__(self, df: DataFrame, partition_by, order_by=None):
         self.df = df
@@ -433,9 +689,10 @@ class Over:
         return cumsum(self.df, e, out, **self._kw())
 
     def stencil(self, e, weights, *, scale: float = 1.0,
-                center: int | None = None, out: str = "stencil") -> DataFrame:
+                center: int | None = None, out: str = "stencil",
+                exact: bool = False) -> DataFrame:
         return stencil(self.df, e, weights, scale=scale, center=center,
-                       out=out, **self._kw())
+                       out=out, exact=exact, **self._kw())
 
     def sma(self, e, window: int = 3, out: str = "sma") -> DataFrame:
         return sma(self.df, e, window, out, **self._kw())
@@ -452,8 +709,9 @@ class Over:
     def rolling_sum(self, e, window: int, out: str = "rolling_sum") -> DataFrame:
         return rolling_sum(self.df, e, window, out, **self._kw())
 
-    def rolling_mean(self, e, window: int, out: str = "rolling_mean") -> DataFrame:
-        return rolling_mean(self.df, e, window, out, **self._kw())
+    def rolling_mean(self, e, window: int, out: str = "rolling_mean", *,
+                     exact: bool = False) -> DataFrame:
+        return rolling_mean(self.df, e, window, out, exact=exact, **self._kw())
 
     def rank(self, out: str = "rank") -> DataFrame:
         return rank(self.df, self.partition_by, self.order_by, out)

@@ -61,7 +61,16 @@ def leq(a: str, b: str) -> bool:
 
 
 # Nodes whose OUTPUT length is data-dependent (=> at most 1D_VAR).
-_VAR_OUT = (ir.Filter, ir.Join, ir.Aggregate)
+# Limit rides along: its per-shard count depends on how rows were
+# distributed upstream, so it can't promise 1D_BLOCK either.
+_VAR_OUT = (ir.Filter, ir.Join, ir.Aggregate, ir.Limit)
+
+
+def scan_seed(n: ir.Scan) -> str:
+    """Lattice element a Scan provides: plain host tables are 1D_BLOCK; a
+    persisted scan re-enters at the element its producing plan satisfied
+    (typically 1D_VAR — per-shard counts vary)."""
+    return n.layout.dist if n.layout is not None else ONE_D
 
 
 def requires_block(n: ir.Node) -> bool:
@@ -116,7 +125,7 @@ def infer(root: ir.Node, *, force_rep: set[int] = frozenset(),
                              and dist[n.right.id] == REP
                              and dist[n.left.id] != REP)
             if isinstance(n, ir.Scan):
-                new = meet(new, ONE_D)
+                new = meet(new, scan_seed(n))
             elif is_bcast_join:
                 new = meet(ONE_D_VAR, dist[n.left.id])
             elif is_partitioned_window(n):

@@ -204,7 +204,8 @@ def as_expr(x: Any) -> Expr:
 # Aggregation specs (used by aggregate())
 # ---------------------------------------------------------------------------
 
-AGG_FNS = ("sum", "mean", "count", "min", "max", "var", "std", "first", "nunique")
+AGG_FNS = ("sum", "mean", "count", "min", "max", "prod", "any", "all",
+           "var", "std", "first", "nunique")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -215,7 +216,9 @@ class AggExpr:
     expr: Expr = None  # None for count()
 
     def __post_init__(self):
-        assert self.fn in AGG_FNS, self.fn
+        if self.fn not in AGG_FNS:
+            raise ValueError(
+                f"unknown aggregation fn {self.fn!r}; valid: {AGG_FNS}")
 
 
 def sum_(e):    return AggExpr("sum", as_expr(e))
@@ -223,6 +226,9 @@ def mean(e):    return AggExpr("mean", as_expr(e))
 def count():    return AggExpr("count", None)
 def min_(e):    return AggExpr("min", as_expr(e))
 def max_(e):    return AggExpr("max", as_expr(e))
+def prod(e):    return AggExpr("prod", as_expr(e))
+def any_(e):    return AggExpr("any", as_expr(e))
+def all_(e):    return AggExpr("all", as_expr(e))
 def var(e):     return AggExpr("var", as_expr(e))
 def std(e):     return AggExpr("std", as_expr(e))
 def first(e):   return AggExpr("first", as_expr(e))

@@ -61,13 +61,96 @@ class Node:
         return type(self).__name__
 
 
+@dataclass(frozen=True)
+class ScanLayout:
+    """Physical layout a MATERIALIZED scan carries (``df.persist()``).
+
+    A persisted frame's Scan is not a plain host table: its columns may be
+    device shards laid out by the plan that produced them, and this record
+    is the contract that lets downstream planning start from those
+    properties instead of "block, unordered":
+
+      * ``kind``/``partitioned_by``/``ascending`` — the Partitioning the
+        producing plan's root op provided (hash/range/rep/block);
+        ``globally_sorted`` marks a block layout whose shard boundaries
+        follow ``sorted_by`` (rebalanced sorted stream).
+      * ``sorted_by``/``order_ascending`` — each shard's valid-prefix
+        ordering.
+      * ``counts``/``capacity``/``nshards`` — the 1D_VAR carrier: columns
+        are ``(nshards * capacity,)`` device arrays with per-shard valid
+        prefixes.  ``counts is None`` means the columns are plain host
+        arrays (REP results re-enter that way) and only the ordering claims
+        apply.
+      * ``dist`` — the lattice element the table satisfies (seeds
+        distribution inference).
+
+    Hash/range claims are only valid at the shard count they were produced
+    under (routing is ``hash % P`` / data-dependent splitters), so every
+    consumer gates on :meth:`device_valid`.
+    """
+
+    kind: str = "block"                  # "hash" | "range" | "rep" | "block"
+    partitioned_by: tuple[str, ...] = ()
+    ascending: bool = True
+    globally_sorted: bool = False
+    sorted_by: tuple[str, ...] = ()
+    order_ascending: bool = True
+    counts: Any = None                   # (nshards,) np.int32, or None (host)
+    capacity: int = 0
+    nshards: int = 1
+    dist: str = "1D_VAR"
+
+    def device_valid(self, P: int) -> bool:
+        """Do the device shards (and the partitioning claims that depend on
+        shard routing) re-enter directly at shard count ``P``?"""
+        return self.counts is not None and self.nshards == P
+
+    def rows(self) -> int:
+        return int(np.sum(self.counts)) if self.counts is not None else -1
+
+    def restrict(self, live: set[str]) -> "ScanLayout":
+        """Layout after pruning to ``live`` columns: partitioning survives
+        iff every key survives; ordering keeps its longest surviving prefix
+        (same rules as the physical planner's property restriction)."""
+        kind, pkeys, gs = self.kind, self.partitioned_by, self.globally_sorted
+        if kind in ("hash", "range") and not all(k in live for k in pkeys):
+            kind, pkeys, gs = "block", (), False
+        prefix = []
+        for k in self.sorted_by:
+            if k not in live:
+                break
+            prefix.append(k)
+        if not prefix:
+            gs = False
+        return replace(self, kind=kind, partitioned_by=pkeys,
+                       globally_sorted=gs, sorted_by=tuple(prefix))
+
+    def gather_host(self, columns: dict[str, Any]) -> dict[str, np.ndarray]:
+        """Fallback re-entry at a DIFFERENT shard count: concatenate every
+        shard's valid prefix on the host (the round-trip ``device_valid``
+        re-entry avoids)."""
+        cnts = np.asarray(self.counts)
+        out = {}
+        for name, col in columns.items():
+            a = np.asarray(col).reshape(self.nshards, self.capacity)
+            out[name] = np.concatenate(
+                [a[r, : cnts[r]] for r in range(self.nshards)])
+        return out
+
+
 @dataclass(eq=False)
 class Scan(Node):
-    """Leaf: a source table (in-memory arrays or a named dataset)."""
+    """Leaf: a source table (in-memory arrays or a named dataset).
+
+    ``layout`` is set for persisted/cached frames (see :class:`ScanLayout`):
+    the columns are then device shards whose partitioning/ordering seed the
+    physical planner, letting whole downstream pipelines start elided.
+    """
 
     name: str
     columns: dict[str, Any]          # name -> array (host or device)
     _schema: dict[str, np.dtype] = None
+    layout: Optional[ScanLayout] = None
 
     def __post_init__(self):
         if self._schema is None:
@@ -83,6 +166,8 @@ class Scan(Node):
         return self
 
     def short(self):
+        if self.layout is not None and self.layout.kind != "block":
+            return f"Scan({self.name}|{self.layout.kind})"
         return f"Scan({self.name})"
 
 
@@ -227,6 +312,8 @@ class Aggregate(Node):
         for name, agg in self.aggs.items():
             if agg.fn in ("count", "nunique"):
                 out[name] = np.dtype(np.int32)
+            elif agg.fn in ("any", "all"):
+                out[name] = np.dtype(np.bool_)
             elif agg.fn in ("mean", "var", "std"):
                 out[name] = np.dtype(np.float32)
             else:
@@ -296,10 +383,26 @@ class Window(Node):
     center: int = 0
     partition_by: tuple[str, ...] = ()
     order_by: tuple[str, ...] = ()
+    # stencil-only: renormalize border windows by the realized weight mass
+    # (divide by the weights of the taps that actually contributed instead
+    # of the full window) — pandas' min_periods=1 exact rolling mean.
+    exact: bool = False
 
     def __post_init__(self):
         if self.kind not in WINDOW_KINDS:
             raise ValueError(f"unknown window kind {self.kind!r}")
+        if self.exact:
+            # exact borders renormalize by the realized weight MASS, which
+            # is only meaningful for nonnegative windows with positive
+            # total weight (rolling means, SMA/WMA); a difference stencil
+            # would divide by (near-)zero everywhere.
+            if self.kind != "stencil":
+                raise ValueError("exact= applies only to stencil windows")
+            if any(w < 0 for w in self.weights) or sum(self.weights) <= 0:
+                raise ValueError(
+                    "exact=True requires nonnegative weights with a "
+                    "positive sum (border renormalization divides by the "
+                    "realized weight mass)")
         self.partition_by = as_keys(self.partition_by) if self.partition_by else ()
         self.order_by = as_keys(self.order_by) if self.order_by else ()
         if self.kind in RANK_KINDS:
@@ -344,6 +447,42 @@ class Window(Node):
                 over += f"; {','.join(self.order_by)}"
             over += ")"
         return f"Window({self.kind}->{self.out}{over})"
+
+
+@dataclass(eq=False)
+class Limit(Node):
+    """First ``n`` rows in global (shard-concatenation) order — the backend
+    of ``df.head(n)`` / ``df.limit(n)``.
+
+    No data moves: each shard clamps its valid count to the slice of
+    ``[0, n)`` it owns (one exclusive scan of counts).  Partitioning and
+    ordering both survive — a subset of co-located key groups is still
+    co-located, and a prefix of sorted rows is still sorted.
+    """
+
+    child: Node
+    n: int
+
+    def __post_init__(self):
+        if int(self.n) < 0:
+            raise ValueError(f"limit must be >= 0, got {self.n}")
+        self.n = int(self.n)
+
+    @property
+    def children(self):
+        return (self.child,)
+
+    @property
+    def schema(self):
+        return self.child.schema
+
+    def with_children(self, children):
+        m = replace(self)
+        m.child = children[0]
+        return m
+
+    def short(self):
+        return f"Limit({self.n})"
 
 
 @dataclass(eq=False)

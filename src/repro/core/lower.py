@@ -87,6 +87,12 @@ class ExecConfig:
 # ---------------------------------------------------------------------------
 
 
+def _cnt_tag(scan_id: int) -> str:
+    """Reserved ext-group tag carrying a persisted scan's (P,) count vector
+    (kept out of the scans group so the shard_map signature stays stable)."""
+    return f"__cnt:{scan_id}"
+
+
 class Lowered:
     """A compiled physical plan: callable on (possibly fresh) source arrays."""
 
@@ -121,12 +127,23 @@ class Lowered:
         cfg, mesh, axes = self.cfg, self.mesh, self.cfg.axes
         scans, exts = self._gather_inputs()
         self.scans, self.exts = scans, exts
+        # persisted scans whose device shards re-enter directly (no host
+        # round-trip): their per-shard valid counts ride in as a sharded
+        # (P,) vector instead of being derived from a block row count.  The
+        # vector travels in the ext input group under a reserved tag, so the
+        # shard_map signature (scans, ext) stays stable.
+        self.dev_scans = {s.id for s in scans
+                          if s.layout is not None
+                          and s.layout.device_valid(self.P)
+                          and self.dists[s.id] != D.REP}
 
         in_specs = {"scans": {}, "ext": {}}
         for s in scans:
             rep = self.dists[s.id] == D.REP
             spec = P() if rep else P(axes)
             in_specs["scans"][str(s.id)] = {c: spec for c in s.columns}
+            if s.id in self.dev_scans:
+                in_specs["ext"][_cnt_tag(s.id)] = P(axes)
         for tag in exts:
             in_specs["ext"][tag] = P(axes)
 
@@ -151,12 +168,17 @@ class Lowered:
 
                 if isinstance(op, pp.Source):
                     cols = inputs["scans"][str(n.id)]
-                    rows = inputs["rows"][str(n.id)]       # static int
-                    if op.dist == D.REP:
-                        cnt = jnp.int32(rows)
+                    if _cnt_tag(n.id) in inputs["ext"]:
+                        # persisted device shards: this shard's valid count
+                        # arrives sharded off the (P,) layout vector.
+                        cnt = inputs["ext"][_cnt_tag(n.id)][0].astype(jnp.int32)
                     else:
-                        cnt = jnp.clip(rows - rank * op.cap, 0,
-                                       op.cap).astype(jnp.int32)
+                        rows = inputs["rows"][str(n.id)]   # static int
+                        if op.dist == D.REP:
+                            cnt = jnp.int32(rows)
+                        else:
+                            cnt = jnp.clip(rows - rank * op.cap, 0,
+                                           op.cap).astype(jnp.int32)
                     res = (dict(cols), cnt)
 
                 elif isinstance(op, pp.Compact):
@@ -199,7 +221,8 @@ class Lowered:
                                                       prefix_fn=sfn)
                         elif n.kind == "stencil":
                             col = phys.segment_stencil1d(x, pk, cnt,
-                                                         n.weights, n.center)
+                                                         n.weights, n.center,
+                                                         exact=n.exact)
                         else:
                             ok = tuple(cols[k] for k in n.order_by)
                             col = phys.segment_rank(pk, ok, cnt, n.kind)
@@ -209,7 +232,8 @@ class Lowered:
                                                prefix_fn=sfn)
                     else:
                         col = phys.stencil1d(x, cnt, n.weights, n.center, ax,
-                                             kernel_fn=kernels.get("stencil1d"))
+                                             kernel_fn=kernels.get("stencil1d"),
+                                             exact=n.exact)
                     out = dict(cols)
                     out[n.out] = col
                     res = (out, cnt)
@@ -297,6 +321,11 @@ class Lowered:
                     flags.append(ovf)
                     res = (out, cnt2)
 
+                elif isinstance(op, pp.LimitOp):
+                    cols, cnt = env[op.inputs[0]]
+                    out, cnt2 = phys.limit(cols, cnt, n.n, ax, cap_out=op.cap)
+                    res = (out, cnt2)
+
                 elif isinstance(op, pp.RebalanceOp):
                     cols, cnt = env[op.inputs[0]]
                     out, cnt2, ovf = phys.rebalance(
@@ -340,7 +369,28 @@ class Lowered:
         mesh, Pn = self.mesh, self.P
         inputs = {"scans": {}, "ext": {}, "rows": {}}
         for s in self.scans:
-            src = (scan_arrays or {}).get(str(s.id), s.columns)
+            overridden = scan_arrays is not None and str(s.id) in scan_arrays
+            src = scan_arrays[str(s.id)] if overridden else s.columns
+            lay = s.layout
+            if s.id in self.dev_scans:
+                if overridden:
+                    raise ValueError(
+                        "cannot override columns of a persisted scan "
+                        f"({s.name!r}): its buffers carry a device layout; "
+                        "rebuild the input with hf.table(...) instead")
+                # persisted device shards: feed the (P*cap,) arrays and the
+                # (P,) count vector straight through — no host round-trip,
+                # no padding pass.  rows is only the jit-cache key.
+                inputs["scans"][str(s.id)] = {c: v for c, v in src.items()}
+                inputs["ext"][_cnt_tag(s.id)] = jnp.asarray(
+                    np.asarray(lay.counts, dtype=np.int32))
+                inputs["rows"][str(s.id)] = lay.rows()
+                continue
+            if lay is not None and lay.counts is not None and not overridden:
+                # shard-count mismatch: gather the valid prefixes on the
+                # host and re-enter as a plain block table (layout claims
+                # were already dropped at planning time).
+                src = lay.gather_host(src)
             rows = len(next(iter(src.values())))
             cap = self.pplan.final_op(s).cap
             rep = self.dists[s.id] == D.REP
@@ -432,7 +482,7 @@ def lower(root: ir.Node, cfg: ExecConfig | None = None,
     mesh = cfg.get_mesh()
     Pn = int(np.prod([mesh.shape[a] for a in cfg.axes]))
     order = ir.topo_order(root)
-    source_rows = {n.id: len(next(iter(n.columns.values())))
+    source_rows = {n.id: pp.scan_rows(n)
                    for n in order if isinstance(n, ir.Scan)}
     pplan = pp.plan_physical(root, info.dists, cfg)
     pp.plan_capacities(pplan, Pn, cfg, source_rows)

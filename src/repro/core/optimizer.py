@@ -183,7 +183,7 @@ def _required_columns(root: ir.Node, keep: set[str] | None) -> dict[int, set[str
         elif isinstance(n, ir.Concat):
             for c in n.parts:
                 req.setdefault(c.id, set()).update(need)
-        elif isinstance(n, ir.Rebalance):
+        elif isinstance(n, (ir.Rebalance, ir.Limit)):
             req.setdefault(n.child.id, set()).update(need)
     return req
 
@@ -203,8 +203,14 @@ def prune_columns(root: ir.Node, keep: set[str] | None = None) -> tuple[ir.Node,
             live = {k: v for k, v in n.columns.items() if k in need}
             if len(live) < len(n.columns):
                 pruned += len(n.columns) - len(live)
+                # persisted layouts survive pruning restricted to the live
+                # columns (partitioning iff every key lives; ordering keeps
+                # its surviving prefix) — the device shards still re-enter.
+                lay = (n.layout.restrict(set(live))
+                       if n.layout is not None else None)
                 out = ir.Scan(n.name, live,
-                              {k: v for k, v in n._schema.items() if k in live})
+                              {k: v for k, v in n._schema.items() if k in live},
+                              layout=lay)
                 # keep the source's identity: distribution pins (force_rep
                 # from DataFrame.replicate()) are id-based, and only SOURCE
                 # pins are load-bearing — interior nodes re-derive REP via

@@ -17,7 +17,7 @@ All shapes are static; validity is tracked with counts and masks (DESIGN.md
 from __future__ import annotations
 
 import functools
-from typing import Sequence
+from typing import Any, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -447,7 +447,9 @@ def segment_aggregate(keys_sorted, count, values: dict[str, tuple[str, jax.Array
     direction — though ``nunique`` additionally requires ascending, see
     below).  A new run starts where ANY key column differs from the previous
     row.  values: name -> (fn, value_array) with fn in {sum, mean, count,
-    min, max, var, std, first, nunique}.  Any number of nunique columns is
+    min, max, prod, any, all, var, std, first, nunique} (``any``/``all``
+    reduce the truth of ``x != 0`` and return bool).  Any number of nunique
+    columns is
     supported: each one re-sorts (keys..., x) independently with one
     ``lax.sort`` and counts within-run value boundaries; the aux sort is
     ascending, so its group order matches the main segment order only for
@@ -483,17 +485,28 @@ def segment_aggregate(keys_sorted, count, values: dict[str, tuple[str, jax.Array
                                    seg_id, num_segments=cap_out + 1)[:cap_out]
 
     def smin(x):
+        if x.dtype == jnp.bool_:
+            x = x.astype(jnp.int32)      # bool has no iinfo sentinel
         big = _sentinel(x.dtype)
         return jax.ops.segment_min(jnp.where(valid, x, big), seg_id,
                                    num_segments=cap_out + 1)[:cap_out]
 
     def smax(x):
+        if x.dtype == jnp.bool_:
+            x = x.astype(jnp.int32)
         if jnp.issubdtype(x.dtype, jnp.floating):
             small = jnp.array(jnp.finfo(x.dtype).min, x.dtype)
         else:
             small = jnp.array(jnp.iinfo(x.dtype).min, x.dtype)
         return jax.ops.segment_max(jnp.where(valid, x, small), seg_id,
                                    num_segments=cap_out + 1)[:cap_out]
+
+    def sprod(x):
+        if x.dtype == jnp.bool_:
+            x = x.astype(jnp.int32)
+        one = jnp.ones((), x.dtype)
+        return jax.ops.segment_prod(jnp.where(valid, x, one), seg_id,
+                                    num_segments=cap_out + 1)[:cap_out]
 
     ones = valid.astype(jnp.int32)
     group_n = jax.ops.segment_sum(ones, seg_id, num_segments=cap_out + 1)[:cap_out]
@@ -518,6 +531,12 @@ def segment_aggregate(keys_sorted, count, values: dict[str, tuple[str, jax.Array
             out[name] = smin(x)
         elif fn == "max":
             out[name] = smax(x)
+        elif fn == "prod":
+            out[name] = sprod(x)
+        elif fn == "any":
+            out[name] = smax((x != 0).astype(jnp.int32)) > 0
+        elif fn == "all":
+            out[name] = smin((x != 0).astype(jnp.int32)) > 0
         elif fn in ("var", "std"):
             xf = x.astype(jnp.float32)
             m = ssum(xf) / jnp.maximum(group_n, 1)
@@ -569,40 +588,116 @@ def segment_aggregate(keys_sorted, count, values: dict[str, tuple[str, jax.Array
 #
 # Every decomposable agg fn splits into partial statistics a shard can
 # pre-reduce over its LOCAL key groups before the hash exchange, so the wire
-# carries at most the shard's DISTINCT key tuples instead of all raw rows:
-#
-#   sum   -> (s)        combine: sum of partial sums
-#   count -> (n)        combine: sum of partial counts
-#   min   -> (m)        combine: min of partial mins      (max symmetric)
-#   mean  -> (s, n)     combine: sum(s) / sum(n)
-#   var   -> (s, q, n)  combine: sum(q)/N - (sum(s)/N)^2  (std = sqrt)
+# carries at most the shard's DISTINCT key tuples instead of all raw rows.
+# The WHOLE algebra lives in one table (AGG_DECOMP): per fn, the partial
+# columns it decomposes into — suffix, map-side segment fn, reduce-side
+# combine fn, wire dtype rule, input transform — plus the finalizer that
+# folds the combined partials into the result.  partial_decompose /
+# final_aggregate / the planner's schema annotation all read this table, so
+# adding a decomposable fn is ONE entry (prod, any and all below are exactly
+# that).
 #
 # first (arrival-order-sensitive) and nunique (set-valued partial state)
 # are NOT decomposable — the planner keeps those on the raw-row path.
 # ---------------------------------------------------------------------------
 
-DECOMPOSABLE_AGGS = frozenset({"sum", "count", "mean", "min", "max",
-                               "var", "std"})
+
+class PartialSpec:
+    """One partial column of a decomposable aggregation.
+
+    ``suffix``     the wire column is named ``__p_<out>__<suffix>``
+    ``partial_fn`` segment fn reducing raw rows map-side
+    ``combine_fn`` segment fn merging per-shard partials reduce-side
+                   (count partials COMBINE by sum, hence the split)
+    ``dtype``      wire dtype as a function of the value column's dtype
+    ``prep``       input transform applied before the partial stage
+    """
+
+    __slots__ = ("suffix", "partial_fn", "combine_fn", "dtype", "prep")
+
+    def __init__(self, suffix, partial_fn, combine_fn=None, dtype=None,
+                 prep=None):
+        self.suffix = suffix
+        self.partial_fn = partial_fn
+        self.combine_fn = combine_fn or partial_fn
+        self.dtype = dtype or (lambda vd: np.dtype(np.int32)
+                               if np.dtype(vd) == np.bool_ else np.dtype(vd))
+        self.prep = prep or (lambda x: x)
+
+
+def _dt_i32(_vd):
+    return np.dtype(np.int32)
+
+
+def _dt_f32(_vd):
+    return np.dtype(np.float32)
+
+
+def _as_f32(x):
+    return x.astype(jnp.float32)
+
+
+def _as_flag(x):
+    return (x != 0).astype(jnp.int32)
+
+
+def _as_int_if_bool(x):
+    # min/max of a bool column compare as 0/1 int32 (bool has no sentinel;
+    # the raw-path smin/smax apply the same cast, so both paths agree).
+    return x.astype(jnp.int32) if x.dtype == jnp.bool_ else x
+
+
+def _mean_final(p):
+    return p["s"] / jnp.maximum(p["n"], 1)
+
+
+def _var_final(p):
+    n = jnp.maximum(p["n"], 1)
+    m = p["s"] / n
+    m2 = p["q"] / n
+    return jnp.maximum(m2 - m * m, 0.0)
+
+
+# fn -> (partial column specs, finalize(dict suffix -> combined array))
+AGG_DECOMP: dict[str, tuple[tuple[PartialSpec, ...], Any]] = {
+    "sum":   ((PartialSpec("s", "sum"),), lambda p: p["s"]),
+    "count": ((PartialSpec("n", "count", combine_fn="sum", dtype=_dt_i32),),
+              lambda p: p["n"]),
+    "min":   ((PartialSpec("m", "min", prep=_as_int_if_bool),),
+              lambda p: p["m"]),
+    "max":   ((PartialSpec("m", "max", prep=_as_int_if_bool),),
+              lambda p: p["m"]),
+    "prod":  ((PartialSpec("p", "prod"),), lambda p: p["p"]),
+    "any":   ((PartialSpec("b", "max", dtype=_dt_i32, prep=_as_flag),),
+              lambda p: p["b"] != 0),
+    "all":   ((PartialSpec("b", "min", dtype=_dt_i32, prep=_as_flag),),
+              lambda p: p["b"] != 0),
+    "mean":  ((PartialSpec("s", "sum", dtype=_dt_f32, prep=_as_f32),
+               PartialSpec("n", "count", combine_fn="sum", dtype=_dt_i32)),
+              _mean_final),
+    "var":   ((PartialSpec("s", "sum", dtype=_dt_f32, prep=_as_f32),
+               PartialSpec("q", "sum", dtype=_dt_f32,
+                           prep=lambda x: _as_f32(x) * _as_f32(x)),
+               PartialSpec("n", "count", combine_fn="sum", dtype=_dt_i32)),
+              _var_final),
+    "std":   ((PartialSpec("s", "sum", dtype=_dt_f32, prep=_as_f32),
+               PartialSpec("q", "sum", dtype=_dt_f32,
+                           prep=lambda x: _as_f32(x) * _as_f32(x)),
+               PartialSpec("n", "count", combine_fn="sum", dtype=_dt_i32)),
+              lambda p: jnp.sqrt(_var_final(p))),
+}
+
+DECOMPOSABLE_AGGS = frozenset(AGG_DECOMP)
 
 
 def partial_decompose(name: str, fn: str, x: jax.Array):
     """Partial-column specs for one decomposable agg output: a list of
     ``(partial_name, partial_fn, array)`` triples feeding segment_aggregate."""
-    if fn == "sum":
-        return [(f"__p_{name}__s", "sum", x)]
-    if fn == "count":
-        return [(f"__p_{name}__n", "count", x)]
-    if fn in ("min", "max"):
-        return [(f"__p_{name}__m", fn, x)]
-    if fn == "mean":
-        return [(f"__p_{name}__s", "sum", x.astype(jnp.float32)),
-                (f"__p_{name}__n", "count", x)]
-    if fn in ("var", "std"):
-        xf = x.astype(jnp.float32)
-        return [(f"__p_{name}__s", "sum", xf),
-                (f"__p_{name}__q", "sum", xf * xf),
-                (f"__p_{name}__n", "count", x)]
-    raise ValueError(f"{fn} is not decomposable")
+    if fn not in AGG_DECOMP:
+        raise ValueError(f"{fn} is not decomposable")
+    specs, _final = AGG_DECOMP[fn]
+    return [(f"__p_{name}__{s.suffix}", s.partial_fn, s.prep(x))
+            for s in specs]
 
 
 def partial_aggregate(keys_sorted, count, values: dict[str, tuple[str, jax.Array]],
@@ -631,35 +726,18 @@ def final_aggregate(keys_sorted, count, agg_fns: dict[str, str],
     """
     cvals: dict[str, tuple[str, jax.Array]] = {}
     for name, fn in agg_fns.items():
-        if fn in ("sum", "mean", "var", "std"):
-            cvals[f"__p_{name}__s"] = ("sum", cols[f"__p_{name}__s"])
-        if fn in ("count", "mean", "var", "std"):
-            cvals[f"__p_{name}__n"] = ("sum", cols[f"__p_{name}__n"])
-        if fn in ("var", "std"):
-            cvals[f"__p_{name}__q"] = ("sum", cols[f"__p_{name}__q"])
-        if fn in ("min", "max"):
-            cvals[f"__p_{name}__m"] = (fn, cols[f"__p_{name}__m"])
+        if fn not in AGG_DECOMP:
+            raise ValueError(f"{fn} is not decomposable")
+        for s in AGG_DECOMP[fn][0]:
+            pcol = f"__p_{name}__{s.suffix}"
+            cvals[pcol] = (s.combine_fn, cols[pcol])
     agg, n_seg, ovf = segment_aggregate(keys_sorted, count, cvals,
                                         cap_out=cap_out, segsum_fn=segsum_fn)
     out = {k: v for k, v in agg.items() if k.startswith("__key")}
     for name, fn in agg_fns.items():
-        if fn == "sum":
-            out[name] = agg[f"__p_{name}__s"]
-        elif fn == "count":
-            out[name] = agg[f"__p_{name}__n"]
-        elif fn in ("min", "max"):
-            out[name] = agg[f"__p_{name}__m"]
-        elif fn == "mean":
-            n_ = jnp.maximum(agg[f"__p_{name}__n"], 1)
-            out[name] = agg[f"__p_{name}__s"] / n_
-        elif fn in ("var", "std"):
-            n_ = jnp.maximum(agg[f"__p_{name}__n"], 1)
-            m = agg[f"__p_{name}__s"] / n_
-            m2 = agg[f"__p_{name}__q"] / n_
-            v = jnp.maximum(m2 - m * m, 0.0)
-            out[name] = jnp.sqrt(v) if fn == "std" else v
-        else:
-            raise ValueError(f"{fn} is not decomposable")
+        specs, final = AGG_DECOMP[fn]
+        out[name] = final({s.suffix: agg[f"__p_{name}__{s.suffix}"]
+                           for s in specs})
     return out, n_seg, ovf
 
 
@@ -704,11 +782,19 @@ def segment_cumsum(x: jax.Array, part_keys: Sequence[jax.Array], count,
 
 
 def segment_stencil1d(x: jax.Array, part_keys: Sequence[jax.Array], count,
-                      weights: Sequence[float], center: int):
+                      weights: Sequence[float], center: int,
+                      exact: bool = False):
     """Boundary-masked 1-D stencil: taps that would cross a group edge are
     zeroed (the zero-border convention applied per group).  No halo exchange
     — groups are shard-local, so neighbors outside the group are simply
-    masked by segment-id mismatch."""
+    masked by segment-id mismatch.
+
+    ``exact=True`` renormalizes each output by the realized weight mass:
+    rows near a group edge divide by the weights of the taps that actually
+    contributed instead of the full window (for uniform weights this is
+    pandas' ``min_periods=1`` exact rolling mean; interior rows are
+    untouched since their mass is the full weight sum).
+    """
     w = np.asarray(weights, dtype=np.float32)
     k_left, k_right = center, len(w) - 1 - center
     cap = x.shape[0]
@@ -722,9 +808,16 @@ def segment_stencil1d(x: jax.Array, part_keys: Sequence[jax.Array], count,
     ext_s = jnp.concatenate([jnp.full((k_left,), -2, jnp.int32), sid,
                              jnp.full((k_right,), -2, jnp.int32)])
     out = jnp.zeros((cap,), jnp.float32)
+    mass = jnp.zeros((cap,), jnp.float32)
     for j, wj in enumerate(w):
         same = ext_s[j:j + cap] == sid
         out = out + np.float32(wj) * jnp.where(same, ext_x[j:j + cap], 0.0)
+        if exact:
+            mass = mass + np.float32(wj) * same.astype(jnp.float32)
+    if exact:
+        total = np.float32(w.sum())
+        out = jnp.where(mass != 0, out * total / jnp.where(mass != 0, mass, 1.0),
+                        0.0)
     return jnp.where(valid, out, 0.0)
 
 
@@ -842,34 +935,72 @@ def halo_exchange(x: jax.Array, count, k_left: int, k_right: int, axes: Axes):
 
 
 def stencil1d(x: jax.Array, count, weights: Sequence[float], center: int,
-              axes: Axes, kernel_fn=None):
+              axes: Axes, kernel_fn=None, exact: bool = False):
     """out[i] = sum_j w[j] * x[i + j - center] over the distributed valid
     prefix, halos from neighbors (paper's SMA/WMA; MPI_Isend/Irecv analogue).
 
     ``kernel_fn(ext, weights, center) -> out`` lets the Pallas kernel
     (kernels/stencil1d) replace the jnp sliding-window fallback.
+
+    ``exact=True`` renormalizes rows near the GLOBAL borders by the realized
+    weight mass (see :func:`segment_stencil1d`): the mass is the same
+    stencil applied to a ones-vector through the same halo machinery, so a
+    tap into a populated neighbor shard counts while a tap past the global
+    ends does not.
     """
     w = np.asarray(weights, dtype=np.float32)
     k_left, k_right = center, len(w) - 1 - center
     cap = x.shape[0]
-    xf = x.astype(jnp.float32)
-    left, right = halo_exchange(xf, count, k_left, k_right, axes)
-    # ext[k_left + i] = x[i] (valid rows), right halo lands AT the dynamic
-    # position k_left + count so windows never straddle padding.
-    ext = jnp.zeros((cap + k_left + k_right,), jnp.float32)
-    xz = jnp.where(valid_mask(count, cap), xf, 0.0)
-    ext = lax.dynamic_update_slice(ext, xz, (k_left,))
-    if k_right:
-        ext = lax.dynamic_update_slice(ext, right, (k_left + count,))
-    if k_left:
-        ext = lax.dynamic_update_slice(ext, left, (0,))
-    if kernel_fn is not None:
-        out = kernel_fn(ext, w, center)
-    else:
-        out = jnp.zeros((cap,), jnp.float32)
+    valid = valid_mask(count, cap)
+
+    def apply(vals):
+        vz = jnp.where(valid, vals.astype(jnp.float32), 0.0)
+        left, right = halo_exchange(vz, count, k_left, k_right, axes)
+        # ext[k_left + i] = v[i] (valid rows), right halo lands AT the
+        # dynamic position k_left + count so windows never straddle padding.
+        ext = jnp.zeros((cap + k_left + k_right,), jnp.float32)
+        ext = lax.dynamic_update_slice(ext, vz, (k_left,))
+        if k_right:
+            ext = lax.dynamic_update_slice(ext, right, (k_left + count,))
+        if k_left:
+            ext = lax.dynamic_update_slice(ext, left, (0,))
+        if kernel_fn is not None:
+            return kernel_fn(ext, w, center)
+        acc = jnp.zeros((cap,), jnp.float32)
         for j, wj in enumerate(w):
-            out = out + np.float32(wj) * lax.dynamic_slice(ext, (j,), (cap,))
-    return jnp.where(valid_mask(count, cap), out, 0.0)
+            acc = acc + np.float32(wj) * lax.dynamic_slice(ext, (j,), (cap,))
+        return acc
+
+    out = apply(x)
+    if exact:
+        mass = apply(jnp.ones((cap,), jnp.float32))
+        total = np.float32(w.sum())
+        out = jnp.where(mass != 0, out * total / jnp.where(mass != 0, mass, 1.0),
+                        0.0)
+    return jnp.where(valid, out, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# limit (first n rows in global shard-concatenation order; df.head backend)
+# ---------------------------------------------------------------------------
+
+def limit(cols: dict[str, jax.Array], count, n: int, axes: Axes,
+          cap_out: int):
+    """Keep the first ``n`` valid rows of the global concatenation.
+
+    No rows move: each shard clamps its valid count to its slice of
+    ``[0, n)`` via an exclusive scan of counts (REP inputs skip even that —
+    every shard independently keeps its first ``n``).  Buffers shrink to
+    ``cap_out`` (valid rows always fit: the clamped count is <= n <=
+    cap_out).
+    """
+    if axes:
+        base = exscan_scalar(count.astype(jnp.int32), axes)
+    else:
+        base = jnp.int32(0)
+    cnt = jnp.clip(jnp.int32(n) - base, 0, count).astype(jnp.int32)
+    out = {k: v[:cap_out] for k, v in cols.items()}
+    return out, cnt
 
 
 # ---------------------------------------------------------------------------

@@ -45,7 +45,8 @@ import numpy as np
 from . import distribution as D
 from . import ir
 from .expr import ColRef
-from .physical import DECOMPOSABLE_AGGS, PACK_WORD_BYTES, col_words
+from .physical import (AGG_DECOMP, DECOMPOSABLE_AGGS, PACK_WORD_BYTES,
+                       col_words)
 
 
 # ---------------------------------------------------------------------------
@@ -271,6 +272,17 @@ class SampleSort(POp):
 
 
 @dataclass(eq=False)
+class LimitOp(POp):
+    """First n rows globally: per-shard count clamp off an exclusive scan of
+    counts — no data movement, partitioning AND ordering pass through (a
+    subset of co-located groups stays co-located; a sorted prefix stays
+    sorted)."""
+
+    def short(self):
+        return f"Limit({self.node.n})"
+
+
+@dataclass(eq=False)
 class RebalanceOp(POp):
     pass
 
@@ -370,8 +382,10 @@ class PhysicalPlan:
         return sum(self.op_row_bytes(op) for op in self._exchange_ops())
 
     def source_rows(self) -> dict[int, int]:
-        """Scan id -> row count, read off the Source ops' bound arrays."""
-        return {op.node.id: len(next(iter(op.node.columns.values())))
+        """Scan id -> VALID row count, read off the Source ops' bound arrays
+        (persisted scans: the layout's summed counts, not the padded
+        buffer length)."""
+        return {op.node.id: scan_rows(op.node)
                 for op in self.ops if isinstance(op, Source)}
 
     def shuffle_census(self, P: int = 8) -> dict:
@@ -488,6 +502,17 @@ def plan_physical(root: ir.Node, dists: dict[int, str], cfg) -> PhysicalPlan:
     elide = getattr(cfg, "elide_exchanges", True)
     partial_agg = getattr(cfg, "partial_agg", True)
 
+    # Live shard count, resolved lazily: persisted-scan hash/range claims are
+    # only valid at the shard count they were produced under (routing is
+    # hash % P / data-dependent splitters), so property seeding gates on it.
+    _P_live: list = []
+
+    def live_shards() -> int:
+        if not _P_live:
+            mesh = cfg.get_mesh()
+            _P_live.append(int(np.prod([mesh.shape[a] for a in cfg.axes])))
+        return _P_live[0]
+
     def emit(cls, node, inputs, part, order, **kw) -> POp:
         d = dists[node.id]
         return plan.add(cls(node=node, inputs=tuple(i.op_id for i in inputs),
@@ -505,9 +530,40 @@ def plan_physical(root: ir.Node, dists: dict[int, str], cfg) -> PhysicalPlan:
         if isinstance(n, ir.Scan):
             # lattice -> property seed: REP tables are whole on every shard
             # (satisfying every co-location requirement for free); 1D
-            # elements place rows positionally — no key co-location.
+            # elements place rows positionally — no key co-location.  A
+            # PERSISTED scan (df.persist()) instead seeds the partitioning
+            # and ordering its producing plan materialized, so downstream
+            # groupby/merge/over/sort on the persisted keys start elided —
+            # the repeated-query payoff.  Hash/range claims need the same
+            # shard count they were produced under; ordering-only claims
+            # (and REP re-entry) don't depend on routing.
             part = REPL if dists[n.id] == D.REP else BLOCK
-            op = emit(Source, n, (), part, UNORDERED)
+            order = UNORDERED
+            lay = n.layout
+            if lay is not None and elide:
+                dev = lay.device_valid(live_shards())
+                if part.kind != "rep" and dev:
+                    if lay.kind == "hash" and lay.partitioned_by:
+                        part = Partitioning("hash", lay.partitioned_by)
+                    elif lay.kind == "range" and lay.partitioned_by:
+                        part = Partitioning("range", lay.partitioned_by,
+                                            lay.ascending)
+                    elif (lay.kind == "block" and lay.globally_sorted
+                          and lay.sorted_by):
+                        part = Partitioning("block", (), lay.order_ascending,
+                                            globally_sorted=True)
+                # Ordering claims hold only where the re-entry path preserves
+                # per-shard order: the direct device path (dev, non-REP), or
+                # a host-persisted table (counts is None — its rows ARE the
+                # ordered valid prefix, whether replicated or block-split).
+                # A device layout forced to REP (or at a foreign shard
+                # count) re-enters via gather_host, whose shard-order concat
+                # is NOT sorted — no claim there.
+                host_ordered = lay.counts is None
+                if lay.sorted_by and (host_ordered
+                                      or (dev and part.kind != "rep")):
+                    order = Ordering(lay.sorted_by, lay.order_ascending)
+            op = emit(Source, n, (), part, order)
 
         elif isinstance(n, ir.Filter):
             c = plan.final_op(n.child)
@@ -547,6 +603,10 @@ def plan_physical(root: ir.Node, dists: dict[int, str], cfg) -> PhysicalPlan:
                 order = Ordering(order.keys[: order.keys.index(n.out)],
                                  order.ascending)
             op = emit(WindowOp, n, (src,), part, order)
+
+        elif isinstance(n, ir.Limit):
+            c = plan.final_op(n.child)
+            op = emit(LimitOp, n, (c,), c.part, c.order)
 
         elif isinstance(n, ir.Rebalance):
             c = plan.final_op(n.child)
@@ -736,23 +796,14 @@ def annotate_schemas(plan: PhysicalPlan) -> None:
                 sch["__v_" + name] = dt
             op.schema = sch
         elif isinstance(op, PartialAgg):
+            # wire schema straight off the decomposition table — the same
+            # single source of truth partial_decompose/final_aggregate use.
             base = plan.ops[op.inputs[0]].schema
             sch = {k: base.get(k, f32) for k in n.key}
             for name, agg in n.aggs.items():
                 vd = np.dtype(base.get("__v_" + name, f32))
-                if agg.fn == "sum":
-                    sch[f"__p_{name}__s"] = i32 if vd == np.bool_ else vd
-                elif agg.fn == "count":
-                    sch[f"__p_{name}__n"] = i32
-                elif agg.fn in ("min", "max"):
-                    sch[f"__p_{name}__m"] = vd
-                elif agg.fn == "mean":
-                    sch[f"__p_{name}__s"] = f32
-                    sch[f"__p_{name}__n"] = i32
-                elif agg.fn in ("var", "std"):
-                    sch[f"__p_{name}__s"] = f32
-                    sch[f"__p_{name}__q"] = f32
-                    sch[f"__p_{name}__n"] = i32
+                for spec in AGG_DECOMP[agg.fn][0]:
+                    sch[f"__p_{name}__{spec.suffix}"] = spec.dtype(vd)
             op.schema = sch
         else:
             op.schema = {k: np.dtype(dt) for k, dt in n.schema.items()}
@@ -776,6 +827,14 @@ def _hash_alignment(part: Partitioning,
 
 def _ceil_div(a: int, b: int) -> int:
     return -(-a // b)
+
+
+def scan_rows(n: ir.Scan) -> int:
+    """Valid rows of a Scan: persisted device layouts count their valid
+    prefixes (the columns are padded ``(nshards * capacity,)`` buffers)."""
+    if n.layout is not None and n.layout.counts is not None:
+        return n.layout.rows()
+    return len(next(iter(n.columns.values())))
 
 
 def compute_capacities(plan: PhysicalPlan, P: int, cfg,
@@ -813,8 +872,18 @@ def compute_capacities(plan: PhysicalPlan, P: int, cfg,
         ins = [caps[i] for i in op.inputs]
         cap, bucket = 0, 0
         if isinstance(op, Source):
-            rows = source_rows[op.node.id]
-            cap = rows if op.dist == D.REP else max(1, _ceil_div(rows, P))
+            lay = op.node.layout
+            # device shards only re-enter at their own capacity when the
+            # runtime takes the device path (lower.dev_scans): matching
+            # shard count AND a non-REP distribution — a force-replicated
+            # persisted frame gathers to the host and re-pads per REP rules.
+            if lay is not None and lay.device_valid(P) and op.dist != D.REP:
+                cap = int(lay.capacity)
+            else:
+                rows = source_rows[op.node.id]
+                cap = rows if op.dist == D.REP else max(1, _ceil_div(rows, P))
+        elif isinstance(op, LimitOp):
+            cap = max(1, min(ins[0][0], op.node.n))
         elif isinstance(op, (HashExchange, SampleSort)):
             bucket, cap = shuffle_plan(ins[0][0])
         elif isinstance(op, MergeJoin):

@@ -1,0 +1,561 @@
+"""Fluent API v2 — pandas-parity oracle suite + persist/cache census gates.
+
+Two layers:
+
+* PARITY: every fluent verb chain is cross-checked against real pandas
+  (importorskip) on randomized frames — in-process at 1 shard and through
+  ``run_sharded`` subprocesses at 2 and 8 shards, so the collective paths
+  (hash exchange, sample sort, exscan) are exercised, not just the P=1
+  shortcuts.  Rows are compared as SETS keyed on the group/join keys:
+  distributed outputs come back in shard order, not pandas order.
+
+* CENSUS: ``persist()`` materializes a frame WITH its layout, and the plan
+  census pins the paper-level guarantee — ``persist -> groupby(same key)``
+  and ``persist -> merge(on=persisted keys)`` plan 0 hash exchanges and 0
+  inserted sorts, ``persist(sorted) -> sort`` plans a full no-op, and the
+  ``elide_exchanges=False`` baseline lever restores the exchanges.
+"""
+import numpy as np
+import pytest
+
+from repro import hiframes as hf
+from repro.core import ir
+from repro.core import physical_plan as pp
+from repro.core.expr import AggExpr
+from test_physical_plan import run_sharded
+
+pd = pytest.importorskip("pandas")
+
+
+def _frame(n=600, seed=7):
+    rng = np.random.default_rng(seed)
+    return {"k1": rng.integers(0, 8, n).astype(np.int32),
+            "k2": rng.integers(0, 5, n).astype(np.int32),
+            "t": rng.permutation(n).astype(np.int32),
+            "x": rng.normal(size=n).astype(np.float32),
+            "y": rng.normal(size=n).astype(np.float32),
+            "b": rng.integers(0, 2, n) > 0}
+
+
+def _dim(m=40, seed=8):
+    rng = np.random.default_rng(seed)
+    return {"ck": rng.permutation(m).astype(np.int32)[:m] % 8,
+            "w": rng.normal(size=m).astype(np.float32)}
+
+
+def _sorted_rows(d: dict, keys):
+    idx = np.lexsort(tuple(d[k] for k in reversed(list(keys))))
+    return {k: np.asarray(v)[idx] for k, v in d.items()}
+
+
+def assert_frame_close(got: dict, ref: "pd.DataFrame", keys, rtol=1e-4,
+                       atol=1e-5):
+    """Order-insensitive comparison: sort both sides by ``keys``."""
+    ref_d = {c: ref[c].to_numpy() for c in ref.columns}
+    g, r = _sorted_rows(got, keys), _sorted_rows(ref_d, keys)
+    assert set(g) >= set(r), (sorted(g), sorted(r))
+    for c in r:
+        assert len(g[c]) == len(r[c]), f"{c}: {len(g[c])} vs {len(r[c])} rows"
+        if np.issubdtype(np.asarray(r[c]).dtype, np.floating):
+            np.testing.assert_allclose(g[c], r[c].astype(np.float64),
+                                       rtol=rtol, atol=atol, err_msg=c)
+        else:
+            assert np.array_equal(g[c].astype(np.int64),
+                                  r[c].astype(np.int64)), c
+
+
+# ---------------------------------------------------------------------------
+# expression surface: __getattr__, __setitem__, assign, drop, rename
+# ---------------------------------------------------------------------------
+
+
+def test_getattr_column_access_matches_getitem():
+    df = hf.table(_frame())
+    assert df.x.key() == df["x"].key()
+    with pytest.raises(AttributeError, match="nope"):
+        df.nope
+    # methods win over columns; subscript still reaches a shadowed name
+    t = dict(_frame())
+    t["sort"] = t["x"]
+    d2 = hf.table(t)
+    assert callable(d2.sort)
+    assert d2["sort"].key()[2] == "sort"
+
+
+def test_setitem_assign_drop_parity():
+    t = _frame()
+    df = hf.table(t)
+    df["z"] = df.x * 2.0 + df.y
+    out = (df.assign(w=lambda d: d.z - d.x, c=1.5)
+             .drop(["b", "t"])
+             .collect().to_numpy())
+    pdf = pd.DataFrame({k: v for k, v in t.items()})
+    pdf = pdf.assign(z=pdf.x * 2.0 + pdf.y)
+    pdf = pdf.assign(w=pdf.z - pdf.x, c=1.5).drop(columns=["b", "t"])
+    assert set(out) == set(pdf.columns)
+    assert_frame_close(out, pdf, keys=("k1", "k2", "x"))
+
+
+def test_setitem_keeps_prebuilt_expressions_valid():
+    df = hf.table(_frame())
+    pred = df.x > 0.0          # built BEFORE the mutation
+    df["x2"] = df.x * df.x
+    out = df[pred].collect().to_numpy()
+    src = _frame()
+    assert len(out["x"]) == int((src["x"] > 0).sum())
+    np.testing.assert_allclose(out["x2"], out["x"] * out["x"], rtol=1e-6)
+
+
+def test_rename_columns_kwarg():
+    df = hf.table(_frame()).rename(columns={"k1": "g"})
+    assert "g" in df.columns and "k1" not in df.columns
+
+
+# ---------------------------------------------------------------------------
+# merge / groupby / agg
+# ---------------------------------------------------------------------------
+
+
+def test_merge_parity_single_key():
+    t, d = _frame(), _dim()
+    got = hf.table(t).merge(hf.table(d, "d"), on=("k1", "ck")).collect().to_numpy()
+    ref = pd.DataFrame(t).merge(pd.DataFrame(d), left_on="k1", right_on="ck",
+                                how="inner").drop(columns=["ck"])
+    assert_frame_close(got, ref, keys=("k1", "t", "w"))
+
+
+def test_merge_free_function_is_a_shim():
+    t, d = _frame(), _dim()
+    l, r = hf.table(t), hf.table(d, "d")
+    via_fn = hf.join(l, r, on=("k1", "ck"), how="left")
+    via_method = l.merge(r, on=("k1", "ck"), how="left")
+    assert isinstance(via_fn.node, ir.Join) and isinstance(via_method.node, ir.Join)
+    assert via_fn.node.left_on == via_method.node.left_on
+    assert list(via_fn.node.schema) == list(via_method.node.schema)
+
+
+def test_groupby_agg_named_tuples_parity():
+    t = _frame()
+    df = hf.table(t)
+    got = (df.groupby(("k1", "k2"))
+             .agg(total=("x", "sum"), lo=("y", "min"), hi=("y", "max"),
+                  m=("x", "mean"), n="count")
+             .collect().to_numpy())
+    ref = (pd.DataFrame(t).groupby(["k1", "k2"], as_index=False)
+             .agg(total=("x", "sum"), lo=("y", "min"), hi=("y", "max"),
+                  m=("x", "mean"), n=("x", "size")))
+    assert_frame_close(got, ref, keys=("k1", "k2"))
+
+
+def test_groupby_agg_expression_column_and_aggexpr():
+    t = _frame()
+    df = hf.table(t)
+    got = (df.groupby("k1")
+             .agg(hits=(df.x > 0.0, "sum"), s=hf.sum_(df.x))
+             .collect().to_numpy())
+    pdf = pd.DataFrame(t)
+    ref = (pdf.assign(pos=(pdf.x > 0).astype(np.int32))
+              .groupby("k1", as_index=False)
+              .agg(hits=("pos", "sum"), s=("x", "sum")))
+    assert_frame_close(got, ref, keys=("k1",))
+
+
+def test_groupby_prod_any_all_parity():
+    """The decomposable-table satellite: prod/any/all as one-line entries,
+    reachable through hf.prod/any_/all_ AND the named-agg spec, on BOTH the
+    raw and the map-side-partial aggregation paths."""
+    rng = np.random.default_rng(9)
+    n = 300
+    t = {"k": rng.integers(0, 6, n).astype(np.int32),
+         "x": rng.uniform(0.5, 1.5, n).astype(np.float32),
+         "b": rng.integers(0, 2, n) > 0}
+    df = hf.table(t)
+    ref = (pd.DataFrame(t).groupby("k", as_index=False)
+             .agg(p=("x", "prod"), ay=("b", "any"), al=("b", "all")))
+    for cfg in (hf.ExecConfig(), hf.ExecConfig(partial_agg=False)):
+        got = (df.groupby("k")
+                 .agg(p=("x", "prod"), ay=hf.any_(df.b), al=hf.all_(df.b))
+                 .collect(cfg).to_numpy())
+        assert got["ay"].dtype == np.bool_ and got["al"].dtype == np.bool_
+        assert_frame_close(got, ref, keys=("k",), rtol=2e-3)
+    # all three are decomposable: the bare-scan aggregate takes the
+    # partial-agg path (PartialAgg planned, partial columns on the wire)
+    plan = df.groupby("k").agg(p=("x", "prod"), ay=hf.any_(df.b)) \
+             .physical_plan()
+    assert plan.counts()["partial_aggs"] == 1, plan.render()
+    ex = [op for op in plan.ops if isinstance(op, pp.HashExchange)][0]
+    assert any(c.startswith("__p_") for c in ex.schema), ex.schema
+
+
+def test_groupby_sugar_methods_parity():
+    t = _frame()
+    got = hf.table(t).drop(["b"]).groupby("k1").sum().collect().to_numpy()
+    ref = (pd.DataFrame(t).drop(columns=["b"])
+             .groupby("k1", as_index=False).sum())
+    assert_frame_close(got, ref, keys=("k1",), rtol=1e-3)
+    got_n = hf.table(t).groupby(("k1", "k2")).size().collect().to_numpy()
+    ref_n = (pd.DataFrame(t).groupby(["k1", "k2"], as_index=False)
+               .size().rename(columns={"size": "size"}))
+    assert_frame_close(got_n, ref_n, keys=("k1", "k2"))
+
+
+def test_groupby_validates_keys_and_specs():
+    df = hf.table(_frame())
+    with pytest.raises(KeyError):
+        df.groupby("missing")
+    with pytest.raises(KeyError):
+        df.groupby("k1").agg(s=("missing", "sum"))
+    with pytest.raises(TypeError):
+        df.groupby("k1").agg(s="sum")       # bare strings only spell count
+    with pytest.raises(ValueError):
+        df.groupby("k1").agg()
+
+
+# ---------------------------------------------------------------------------
+# head / limit
+# ---------------------------------------------------------------------------
+
+
+def test_head_matches_pandas_on_sorted_frame():
+    t = _frame()
+    got = hf.table(t).sort_values("t").head(23).collect().to_numpy()
+    ref = pd.DataFrame(t).sort_values("t").head(23)
+    assert len(got["t"]) == 23
+    for c in ref.columns:
+        v = ref[c].to_numpy()
+        if np.issubdtype(v.dtype, np.floating):
+            np.testing.assert_allclose(got[c], v, rtol=1e-6)
+        else:
+            assert np.array_equal(got[c].astype(np.int64), v.astype(np.int64))
+
+
+def test_head_plans_no_data_movement():
+    df = hf.table(_frame())
+    plan = df.head(10).physical_plan()
+    assert plan.shuffle_count() == 0, plan.render()
+    assert any(isinstance(op, pp.LimitOp) for op in plan.ops)
+    # head keeps provided properties: groupby after head on the same key
+    # still elides its exchange
+    a = df.groupby("k1").agg(s=("x", "sum")).persist()
+    c = a.head(3).groupby("k1").agg(s2=("s", "sum")).physical_plan().counts()
+    assert c["hash_exchanges"] == 0 and c["local_sorts"] == 0, c
+
+
+def test_limit_alias_and_edge_sizes():
+    t = _frame(n=50)
+    df = hf.table(t)
+    assert len(df.limit(7).collect().to_numpy()["x"]) == 7
+    assert len(df.head(0).collect().to_numpy()["x"]) == 0
+    assert len(df.head(10_000).collect().to_numpy()["x"]) == 50
+    with pytest.raises(ValueError):
+        df.head(-1)
+
+
+# ---------------------------------------------------------------------------
+# rolling_mean exact mode (min_periods-style borders)
+# ---------------------------------------------------------------------------
+
+
+def test_rolling_mean_exact_global_parity():
+    t = _frame(n=200)
+    df = hf.table(t)
+    w = 6
+    exact = hf.rolling_mean(df, df.x, w, out="m", exact=True).collect().to_numpy()
+    ref = pd.DataFrame(t).x.rolling(w, min_periods=1).mean().to_numpy()
+    np.testing.assert_allclose(exact["m"], ref, atol=1e-5)
+    # the default stays the zero-padded fast path: first w-1 rows differ
+    # (divide by the full window), the steady state agrees
+    padded = hf.rolling_mean(df, df.x, w, out="m").collect().to_numpy()
+    np.testing.assert_allclose(padded["m"][w - 1:], ref[w - 1:], atol=1e-5)
+    assert not np.allclose(padded["m"][: w - 1], ref[: w - 1])
+
+
+def test_rolling_mean_exact_partitioned_parity():
+    t = _frame(n=400)
+    df = hf.table(t)
+    w = 4
+    got = (df.over("k1", order_by="t")
+             .rolling_mean(df.x, w, out="m", exact=True)
+             .collect().to_numpy())
+    pdf = pd.DataFrame(t).sort_values(["k1", "t"])
+    pdf["m"] = (pdf.groupby("k1")["x"]
+                   .transform(lambda s: s.rolling(w, min_periods=1).mean()))
+    assert_frame_close(got, pdf, keys=("k1", "t"))
+
+
+# ---------------------------------------------------------------------------
+# persist / cache: the layout contract + census gates
+# ---------------------------------------------------------------------------
+
+
+def _census(df, cfg=None, **expect):
+    plan = df.physical_plan(cfg or hf.ExecConfig())
+    c = plan.counts()
+    for k, v in expect.items():
+        assert c[k] == v, f"{k}: planned {c[k]}, expected {v}\n{plan.render()}"
+    return plan
+
+
+def test_persist_carries_layout():
+    df = hf.table(_frame())
+    p = df.groupby(("k1", "k2")).agg(s=("x", "sum")).persist()
+    lay = p.node.layout
+    assert lay.kind == "hash" and lay.partitioned_by == ("k1", "k2")
+    assert lay.sorted_by[:2] == ("k1", "k2") and lay.counts is not None
+    assert lay.rows() == int(np.sum(lay.counts))
+    ps = df.sort_values("t").persist()
+    assert ps.node.layout.kind == "range"
+    assert ps.node.layout.sorted_by == ("t",)
+
+
+def test_persist_groupby_same_key_plans_zero_exchanges():
+    """THE acceptance gate: a persisted hash-partitioned frame feeds a
+    groupby on the persisted keys with 0 exchanges and 0 sorts — only the
+    SegmentAgg remains."""
+    df = hf.table(_frame())
+    p = df.groupby(("k1", "k2")).agg(s=("x", "sum"), n="count").persist()
+    again = p.groupby(("k1", "k2")).agg(s2=("s", "sum"), n2=("n", "sum"))
+    _census(again, hash_exchanges=0, local_sorts=0, sample_sorts=0,
+            rebalances=0, partial_aggs=0, segment_aggs=1)
+    # the baseline lever ignores the layout: the exchange comes back
+    base = again.physical_plan(hf.ExecConfig(elide_exchanges=False)).counts()
+    assert base["hash_exchanges"] == 1, base
+
+
+def test_persist_merge_on_persisted_keys_plans_zero_exchanges():
+    t = _frame()
+    df = hf.table(t)
+    a = df.groupby("k1").agg(s=("x", "sum")).persist()
+    b = df.groupby("k1").agg(m=("y", "mean")).persist()
+    m = a.merge(b, on="k1")
+    _census(m, hash_exchanges=0, local_sorts=0, sample_sorts=0, rebalances=0)
+    ref = (pd.DataFrame(t).groupby("k1", as_index=False)
+             .agg(s=("x", "sum"), m=("y", "mean")))
+    assert_frame_close(m.collect().to_numpy(), ref, keys=("k1",))
+
+
+def test_persist_sorted_then_sort_plans_full_noop():
+    df = hf.table(_frame())
+    ps = df.sort_values(("t", "k1")).persist()
+    again = ps.sort_values("t")            # prefix of the persisted ordering
+    plan = _census(again, sample_sorts=0, hash_exchanges=0, local_sorts=0)
+    # full no-op: the Sort planned NOTHING — root is the persisted Source
+    assert isinstance(plan.root_op, pp.Source), plan.render()
+    t = _frame()
+    out = again.collect().to_numpy()
+    assert np.array_equal(out["t"], np.sort(t["t"]))
+
+
+def test_persist_over_persisted_keys_plans_zero_extra():
+    df = hf.table(_frame())
+    p = df.groupby(("k1", "k2")).agg(s=("x", "sum")).persist()
+    w = p.over(("k1", "k2")).cumsum(p["s"], out="cs")
+    _census(w, hash_exchanges=0, local_sorts=0, sample_sorts=0)
+
+
+def test_persist_replicated_dimension_stays_broadcast():
+    t, d = _frame(), _dim()
+    pdim = hf.table(d, "dim").replicate().persist()
+    assert pdim.node.layout.kind == "rep"
+    j = hf.table(t).merge(pdim, on=("k1", "ck"))
+    _census(j, hash_exchanges=0, sample_sorts=0, rebalances=0)
+    ref = pd.DataFrame(t).merge(pd.DataFrame(d), left_on="k1",
+                                right_on="ck").drop(columns=["ck"])
+    assert_frame_close(j.collect().to_numpy(), ref, keys=("k1", "t", "w"))
+
+
+def test_cache_is_persist_alias():
+    df = hf.table(_frame())
+    c = df.groupby("k1").agg(s=("x", "sum")).cache()
+    assert c.node.layout.kind == "hash"
+    assert c.groupby("k1").agg(s2=("s", "sum")) \
+            .physical_plan().shuffle_count() == 0
+
+
+def test_persist_device_shards_reenter_without_host_roundtrip():
+    """The persisted columns feed the next execution BY IDENTITY — no
+    np.asarray round-trip, no re-pad."""
+    df = hf.table(_frame())
+    p = df.groupby("k1").agg(s=("x", "sum")).persist()
+    low = p.groupby("k1").agg(s2=("s", "sum")).lower()
+    _fn, inputs = low._prepare()
+    sid = str(p.node.id)
+    assert inputs["scans"][sid]["s"] is p.node.columns["s"]
+    assert f"__cnt:{p.node.id}" in inputs["ext"]
+
+
+def test_persist_prunes_layout_with_columns():
+    """Column pruning restricts the layout instead of dropping it: the
+    partitioning survives while its keys survive, and a pruned key demotes
+    the claim (no false elision)."""
+    df = hf.table(_frame())
+    p = df.groupby(("k1", "k2")).agg(s=("x", "sum"), m=("y", "mean")).persist()
+    # consumer uses only (k1, k2, s): m is pruned; hash(k1,k2) survives
+    again = p.groupby(("k1", "k2")).agg(s2=("s", "sum"))
+    assert again.physical_plan().counts()["hash_exchanges"] == 0
+    # consumer groups by k1 only and never reads k2: the hash(k1,k2) claim
+    # dies with the pruned key and the exchange must come back
+    solo = p.groupby("k1").agg(s2=("s", "sum"))
+    assert solo.physical_plan().counts()["hash_exchanges"] == 1
+    t = _frame()
+    ref = pd.DataFrame(t).groupby("k1", as_index=False).agg(s2=("x", "sum"))
+    assert_frame_close(solo.collect().to_numpy(), ref, keys=("k1",))
+
+
+def test_persist_then_replicate_reenters_correctly():
+    """Review regression: replicate() on a device-persisted frame forces
+    REP, so the runtime gathers to the host — capacity planning must follow
+    (not keep the device capacity), and the gather's shard-order concat is
+    NOT sorted, so the ordering claim must drop (sort/groupby still plan
+    their work instead of a false no-op)."""
+    t = _frame()
+    df = hf.table(t)
+    rep = df.groupby("k1").agg(s=("x", "sum")).persist().replicate()
+    out = rep.sort_values("k1").collect().to_numpy()
+    ref = (pd.DataFrame(t).groupby("k1", as_index=False)
+             .agg(s=("x", "sum")).sort_values("k1"))
+    assert np.array_equal(out["k1"], ref["k1"].to_numpy())
+    np.testing.assert_allclose(out["s"], ref["s"].to_numpy(), rtol=1e-4)
+    g = rep.groupby("k1").agg(s2=("s", "sum")).collect().to_numpy()
+    i = np.argsort(g["k1"])
+    np.testing.assert_allclose(g["s2"][i], ref["s"].to_numpy(), rtol=1e-4)
+
+
+def test_persist_refuses_overflowed_result():
+    """Review regression: a capacity overflow that survives the retries must
+    not be baked into a reusable frame (collect returns the flagged table;
+    persist raises)."""
+    t = _frame(n=200)
+    df = hf.table(t)
+    blowup = df.merge(hf.table(t, "t2"), on="k1")     # ~n^2/8 rows
+    cfg = hf.ExecConfig(safe_capacities=False, join_expansion=1.0,
+                        shuffle_slack=1.0, auto_retry=0)
+    assert blowup.collect(cfg).overflow                # flagged, not raised
+    with pytest.raises(RuntimeError, match="overflow"):
+        blowup.persist(cfg)
+
+
+def test_agg_count_spec_validates_column():
+    df = hf.table(_frame())
+    with pytest.raises(KeyError):
+        df.groupby("k1").agg(n=("nope", "count"))
+
+
+def test_agg_spec_validates_fn():
+    df = hf.table(_frame())
+    with pytest.raises(TypeError, match="median"):
+        df.groupby("k1").agg(m=("x", "median"))
+    with pytest.raises(ValueError, match="median"):
+        hf.aggregate(df, "k1", m=AggExpr("median", df.x))
+
+
+def test_groupby_min_max_of_bool_column():
+    """Review regression: min/max of a bool column compares as 0/1 int32 on
+    BOTH agg paths (bool has no sentinel) — and the whole-frame sugar sweeps
+    bool columns without crashing."""
+    t = _frame()
+    ref = (pd.DataFrame(t).drop(columns=["x", "y", "t"])
+             .groupby("k1", as_index=False)
+             .agg(lo=("b", "min"), hi=("b", "max")))
+    for cfg in (hf.ExecConfig(), hf.ExecConfig(partial_agg=False)):
+        got = (hf.table(t).groupby("k1").agg(lo=("b", "min"), hi=("b", "max"))
+               .collect(cfg).to_numpy())
+        i = np.argsort(got["k1"])
+        assert np.array_equal(got["lo"][i], ref["lo"].to_numpy().astype(np.int64))
+        assert np.array_equal(got["hi"][i], ref["hi"].to_numpy().astype(np.int64))
+    hf.table(t).groupby("k1").min().collect()       # sugar sweep, no crash
+
+
+def test_stencil_exact_rejects_non_positive_mass():
+    df = hf.table(_frame())
+    with pytest.raises(ValueError, match="weight"):
+        hf.stencil(df, df.x, [-1.0, 1.0], exact=True)
+    with pytest.raises(ValueError, match="weight"):
+        hf.stencil(df, df.x, [0.0, 0.0], exact=True)
+
+
+def test_persist_restrict_layout_unit():
+    lay = ir.ScanLayout(kind="hash", partitioned_by=("a", "b"),
+                        sorted_by=("a", "b", "c"), counts=np.array([3]),
+                        capacity=8, nshards=1)
+    r = lay.restrict({"a", "b", "c"})
+    assert r.kind == "hash" and r.sorted_by == ("a", "b", "c")
+    r2 = lay.restrict({"a", "c"})
+    assert r2.kind == "block" and r2.partitioned_by == ()
+    assert r2.sorted_by == ("a",)          # longest surviving prefix
+
+
+# ---------------------------------------------------------------------------
+# multi-shard parity (2 and 8 devices, subprocess)
+# ---------------------------------------------------------------------------
+
+_SHARDED_BODY = """
+    import pandas as pd   # the outer importorskip already proved it's there
+    rng = np.random.default_rng(17)
+    n = 900
+    t = {"k1": rng.integers(0, 11, n).astype(np.int32),
+         "k2": rng.integers(0, 4, n).astype(np.int32),
+         "t": rng.permutation(n).astype(np.int32),
+         "x": rng.normal(size=n).astype(np.float32),
+         "b": rng.integers(0, 2, n) > 0}
+    df = hf.table(t)
+    pdf = pd.DataFrame(t)
+
+    def close(got, ref, keys):
+        gi = np.lexsort(tuple(got[k] for k in reversed(keys)))
+        ref = ref.sort_values(list(keys))
+        for c in ref.columns:
+            v, g = ref[c].to_numpy(), np.asarray(got[c])[gi]
+            assert len(g) == len(v), (c, len(g), len(v))
+            if np.issubdtype(v.dtype, np.floating):
+                np.testing.assert_allclose(g, v.astype(np.float64),
+                                           rtol=1e-3, atol=1e-5, err_msg=c)
+            else:
+                assert np.array_equal(g.astype(np.int64), v.astype(np.int64)), c
+
+    # fluent chain: filter -> assign -> groupby.agg (prod/any ride along)
+    got = (df[df.x > -1.0].assign(z=df.x + 1.0)
+             .groupby(("k1", "k2"))
+             .agg(s=("z", "sum"), p=("z", "prod"), ay=("b", "any"), n="count")
+             .collect().to_numpy())
+    sel = pdf[pdf.x > -1.0].assign(z=pdf.x + 1.0)
+    ref = sel.groupby(["k1", "k2"], as_index=False).agg(
+        s=("z", "sum"), p=("z", "prod"), ay=("b", "any"), n=("z", "size"))
+    close(got, ref, ("k1", "k2"))
+
+    # persist -> groupby(same keys): 0 exchanges AND correct at this P
+    p = df.groupby(("k1", "k2")).agg(s=("x", "sum"), n="count").persist()
+    again = p.groupby(("k1", "k2")).agg(s2=("s", "sum"), n2=("n", "sum"))
+    c = again.physical_plan().counts()
+    assert c["hash_exchanges"] == 0 and c["local_sorts"] == 0, c
+    ref2 = pdf.groupby(["k1", "k2"], as_index=False).agg(
+        s2=("x", "sum"), n2=("x", "size"))
+    close(again.collect().to_numpy(), ref2, ("k1", "k2"))
+
+    # persist -> merge(on=persisted key): 0 exchanges, parity
+    a = df.groupby("k1").agg(s=("x", "sum")).persist()
+    b = df.groupby("k1").agg(m=("x", "mean")).persist()
+    m = a.merge(b, on="k1")
+    assert m.physical_plan().counts()["hash_exchanges"] == 0
+    ref3 = pdf.groupby("k1", as_index=False).agg(s=("x", "sum"),
+                                                 m=("x", "mean"))
+    close(m.collect().to_numpy(), ref3, ("k1",))
+
+    # persist(sorted) -> sort full no-op -> head: pandas head parity
+    ps = df.sort_values("t").persist()
+    assert ps.sort_values("t").physical_plan().counts()["sample_sorts"] == 0
+    h = ps.sort_values("t").head(31).collect().to_numpy()
+    refh = pdf.sort_values("t").head(31)
+    assert np.array_equal(h["t"], refh["t"].to_numpy())
+    np.testing.assert_allclose(h["x"], refh["x"].to_numpy(), rtol=1e-6)
+
+    # exact rolling mean across shard boundaries
+    e = hf.rolling_mean(ps, ps["x"], 5, out="m", exact=True)
+    refm = pdf.sort_values("t").x.rolling(5, min_periods=1).mean().to_numpy()
+    np.testing.assert_allclose(e.collect().to_numpy()["m"], refm, atol=1e-4)
+"""
+
+
+@pytest.mark.parametrize("devices", [2, 8])
+def test_api_v2_sharded_parity(devices):
+    run_sharded(_SHARDED_BODY, devices=devices)

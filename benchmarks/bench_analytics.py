@@ -57,7 +57,7 @@ def run(scale: float = 1.0):
 
     # kernel-backed variant
     plan_k = hf.wma(df, df["x"], [1, 2, 1], out="w").lower(
-        hf.ExecConfig(use_kernels=True))
+        hf.ExecConfig(use_pallas="interpret"))
     us_k = timeit(plan_k)
     report(f"fig8b_wma_hiframes_kernel_n{n}", us_k, "interpret-mode on CPU")
 

@@ -1,0 +1,77 @@
+"""Kernel-backend A/B: every hot-path primitive through the registry's
+``ref`` lax compositions (``use_pallas="off"``) vs the fused Pallas kernels
+(``use_pallas="interpret"`` on CPU; "compiled" on a real TPU).
+
+One row pair per paper workload family:
+
+  fig8a — relational: filter compaction + join/aggregate shuffles
+          (prefix_sum, bucket_scatter, segment_sums)
+  fig8b — analytics: partitioned cumsum/rank + exact rolling mean
+          (segment_scan, segment_rank, segment_stencil, stencil1d_exact)
+  fig11 — TPCx-BB Q26: the end-to-end join+aggregate query
+
+The plans are identical by construction (the census gate in
+tests/test_kernel_registry.py) — the A/B isolates kernel numerics time.
+Interpret mode on CPU measures overhead, not speedup; the pair pins the
+lever's cost model either way and becomes the fig8 speedup harness on TPU.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro import hiframes as hf
+from repro.data import synth
+
+from .common import report, timeit
+
+MODES = ("off", "interpret")
+
+
+def _ab(tag: str, frame):
+    for mode in MODES:
+        plan = frame.lower(hf.ExecConfig(use_pallas=mode))
+        us = timeit(plan)
+        report(f"{tag}_pallas_{mode}", us, f"use_pallas={mode}")
+
+
+def bench_fig8a(n):
+    t = synth.relational_tables(n, n_keys=1000, seed=0)
+    df = hf.table(t)
+    _ab(f"fig8a_filter_n{n}", df[df["x"] < 0.5])
+    _ab(f"fig8a_aggregate_n{n}",
+        hf.aggregate(df, "id", s=hf.sum_(df["x"]), m=hf.mean(df["y"])))
+    rng = np.random.default_rng(1)
+    n_right = max(100, n // 10)
+    left = {"id": rng.integers(0, n_right, n).astype(np.int32),
+            "x": rng.normal(size=n).astype(np.float32)}
+    right = {"cid": np.arange(n_right, dtype=np.int32),
+             "w": rng.normal(size=n_right).astype(np.float32)}
+    _ab(f"fig8a_join_n{n}",
+        hf.join(hf.table(left, "l"), hf.table(right, "r"), on=("id", "cid")))
+
+
+def bench_fig8b(n):
+    rng = np.random.default_rng(5)
+    n_grp = max(16, int(np.sqrt(n)))
+    df = hf.table({"g": rng.integers(0, n_grp, n).astype(np.int32),
+                   "t": rng.permutation(n).astype(np.int32),
+                   "x": rng.normal(size=n).astype(np.float32)})
+    w = df.over("g", order_by="t")
+    _ab(f"fig8b_part_cumsum_n{n}", w.cumsum(df["x"], out="cs"))
+    _ab(f"fig8b_part_rank_n{n}", w.rank(out="r"))
+    _ab(f"fig8b_rolling_exact_n{n}",
+        w.rolling_mean(df["x"], 8, out="m", exact=True))
+
+
+def bench_fig11(n_sales, n_items, n_cust):
+    from .bench_tpcx import q26
+    ss = synth.store_sales(n_sales, n_items, n_cust, seed=10)
+    it = synth.item(n_items, seed=11)
+    _ab(f"fig11_q26_n{n_sales}", q26(ss, it))
+
+
+def run(scale: float = 1.0):
+    bench_fig8a(int(1_000_000 * scale))
+    bench_fig8b(int(1_000_000 * scale))
+    bench_fig11(int(500_000 * scale), int(20_000 * scale) or 100,
+                int(50_000 * scale) or 100)

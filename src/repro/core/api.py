@@ -238,6 +238,41 @@ class DataFrame:
         """pandas-style alias of :meth:`sort`."""
         return self.sort(by, ascending)
 
+    def repartition(self, by) -> "DataFrame":
+        """Hash-partition rows across shards by key columns (Spark/Dask
+        ``repartition``) — a pure layout verb: same rows, new placement.
+
+        The planner inserts one hash exchange on ``by`` — elided entirely
+        when the input is already hash-partitioned on (a superset-compatible
+        form of) those keys.  Chained with :meth:`persist`, the materialized
+        Scan carries the hash layout, so later ``groupby``/``merge``/``over``
+        on the same keys plan zero exchanges."""
+        keys = ir.as_keys(by)
+        missing = set(keys) - set(self.node.schema)
+        if missing:
+            raise KeyError(f"repartition: {sorted(missing)} not in columns "
+                           f"{list(self.node.schema)}")
+        return self._wrap(ir.Repartition(self.node, by=keys))
+
+    def sort_within_partitions(self, by, ascending: bool = True) -> "DataFrame":
+        """Sort rows by ``by`` within each shard — no data movement (Spark's
+        ``sortWithinPartitions``).  Partitioning is untouched; the per-shard
+        order becomes part of the layout :meth:`persist` captures, so a
+        persisted frame feeds segment kernels with zero local sorts.
+
+        Only ascending order is supported (the shard-local sort primitive is
+        ascending-only, matching ``sort``'s local path)."""
+        if not ascending:
+            raise ValueError(
+                "sort_within_partitions: only ascending=True is supported")
+        keys = ir.as_keys(by)
+        missing = set(keys) - set(self.node.schema)
+        if missing:
+            raise KeyError(
+                f"sort_within_partitions: {sorted(missing)} not in columns "
+                f"{list(self.node.schema)}")
+        return self._wrap(ir.Repartition(self.node, sort_by=keys))
+
     def over(self, partition_by, order_by=None) -> "Over":
         """Partitioned window context (SQL ``OVER (PARTITION BY ... ORDER BY
         ...)``): ``df.over("g", order_by="t").cumsum(df.x)``.  See
@@ -254,7 +289,7 @@ class DataFrame:
         return set(self._rep_nodes)
 
     def _execute(self, cfg: ExecConfig, keep: Sequence[str] | None = None,
-                 kernels: dict | None = None) -> tuple[Lowered, DTable]:
+                 ) -> tuple[Lowered, DTable]:
         """Lower + run with capacity-overflow auto-retry (doubled expansion —
         the 1D_VAR static-capacity fault-tolerance hook, DESIGN.md §2).
         Shared by :meth:`collect` and :meth:`persist`."""
@@ -263,7 +298,7 @@ class DataFrame:
         retries = max(cfg.auto_retry, 0)
         for _attempt in range(retries + 1):
             lowered, _ = lower(self.node, cfg, set(keep) if keep else None,
-                               force_rep=self._force_rep(), kernels=kernels)
+                               force_rep=self._force_rep())
             t = lowered()
             if not t.overflow or _attempt == retries:
                 return lowered, t
@@ -275,13 +310,13 @@ class DataFrame:
                                              else None))
         return lowered, t
 
-    def collect(self, cfg: ExecConfig | None = None, keep: Sequence[str] | None = None,
-                kernels: dict | None = None) -> DTable:
+    def collect(self, cfg: ExecConfig | None = None,
+                keep: Sequence[str] | None = None) -> DTable:
         """Execute the plan and return the materialized DTable."""
-        return self._execute(cfg or ExecConfig(), keep, kernels)[1]
+        return self._execute(cfg or ExecConfig(), keep)[1]
 
-    def persist(self, cfg: ExecConfig | None = None, *, name: str = "persist",
-                kernels: dict | None = None) -> "DataFrame":
+    def persist(self, cfg: ExecConfig | None = None, *,
+                name: str = "persist") -> "DataFrame":
         """Execute ONCE and return a new DataFrame over the materialized
         result, carrying the layout the plan produced.
 
@@ -302,7 +337,7 @@ class DataFrame:
         broadcasting.
         """
         cfg = cfg or ExecConfig()
-        lowered, t = self._execute(cfg, kernels=kernels)
+        lowered, t = self._execute(cfg)
         if t.overflow:
             # collect() returns the flagged table for the caller to inspect;
             # baking truncated shards into a reusable frame would silently
@@ -335,10 +370,10 @@ class DataFrame:
         return self.persist(cfg, name=name)
 
     def lower(self, cfg: ExecConfig | None = None, keep: Sequence[str] | None = None,
-              collect_block: bool = False, kernels: dict | None = None) -> Lowered:
+              collect_block: bool = False) -> Lowered:
         lowered, _ = lower(self.node, cfg, set(keep) if keep else None,
                            collect_block=collect_block,
-                           force_rep=self._force_rep(), kernels=kernels)
+                           force_rep=self._force_rep())
         return lowered
 
     def to_numpy(self, cfg: ExecConfig | None = None) -> dict[str, np.ndarray]:
@@ -410,13 +445,32 @@ class GroupBy:
     them within each shard — the layout a following :meth:`DataFrame.persist`
     captures."""
 
-    def __init__(self, df: DataFrame, by):
+    def __init__(self, df: DataFrame, by, select: tuple[str, ...] | None = None):
         self.df = df
         self.keys = ir.as_keys(by)
+        self._select = select
         missing = set(self.keys) - set(df.node.schema)
         if missing:
             raise KeyError(f"groupby: {sorted(missing)} not in columns "
                            f"{list(df.node.schema)}")
+
+    def __getitem__(self, cols) -> "GroupBy":
+        """Column selection on the proxy — ``df.groupby("k")["x"].sum()``
+        (pandas SeriesGroupBy/DataFrameGroupBy spelling).  Accepts a name or
+        a list/tuple of names; the whole-frame sugar methods (:meth:`sum`,
+        :meth:`mean`, ...) then aggregate only the selected columns."""
+        sel = (cols,) if isinstance(cols, str) else tuple(cols)
+        if not sel:
+            raise ValueError("groupby[...]: empty column selection")
+        bad = [c for c in sel if not isinstance(c, str)]
+        if bad:
+            raise TypeError(f"groupby[...]: column names must be str, "
+                            f"got {bad!r}")
+        missing = set(sel) - set(self.df.node.schema)
+        if missing:
+            raise KeyError(f"groupby[...]: {sorted(missing)} not in columns "
+                           f"{list(self.df.node.schema)}")
+        return GroupBy(self.df, self.keys, select=sel)
 
     def _spec(self, name: str, a) -> AggExpr:
         if isinstance(a, AggExpr):
@@ -459,7 +513,10 @@ class GroupBy:
         return self.agg(**{name: AggExpr("count", None)})
 
     def _apply_all(self, fn: str) -> DataFrame:
-        cols = [c for c in self.df.node.schema if c not in self.keys]
+        if self._select is not None:
+            cols = [c for c in self._select if c not in self.keys]
+        else:
+            cols = [c for c in self.df.node.schema if c not in self.keys]
         if not cols:
             return self.size(name="count")
         return self.agg(**{c: AggExpr(fn, ColRef(self.df.node.id, c))

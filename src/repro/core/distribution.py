@@ -149,6 +149,13 @@ def infer(root: ir.Node, *, force_rep: set[int] = frozenset(),
                 new = ONE_D if dist[n.child.id] != REP else REP
             elif isinstance(n, ir.Sort):
                 new = ONE_D_VAR if dist[n.child.id] != REP else REP
+            elif isinstance(n, ir.Repartition):
+                if n.by:
+                    # hash exchange: per-shard counts become data-dependent
+                    new = meet(ONE_D_VAR, dist[n.child.id])
+                else:
+                    # sort_within_partitions: no row movement, pass-through
+                    new = meet(new, dist[n.child.id])
             else:  # Project / Window-like pass-through
                 for c in n.children:
                     new = meet(new, dist[c.id])

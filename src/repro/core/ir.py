@@ -511,6 +511,51 @@ class Sort(Node):
 
 
 @dataclass(eq=False)
+class Repartition(Node):
+    """Layout-only verb: hash-partition by ``by`` and/or sort each shard by
+    ``sort_by`` — same rows, new placement/order (``df.repartition()`` /
+    ``df.sort_within_partitions()``).
+
+    Purely a property request to the physical planner: it inserts a hash
+    exchange (for ``by``) and/or a shard-local sort (for ``sort_by``), each
+    elided when the input already provides the property.  Chained with
+    ``persist()`` the produced layout is captured in the Scan, which is the
+    point — pre-staging a hot table so later queries plan zero exchanges.
+    """
+
+    child: Node
+    by: tuple[str, ...] = ()
+    sort_by: tuple[str, ...] = ()
+
+    def __post_init__(self):
+        self.by = as_keys(self.by) if self.by else ()
+        self.sort_by = as_keys(self.sort_by) if self.sort_by else ()
+        if not self.by and not self.sort_by:
+            raise ValueError("Repartition requires by= and/or sort_by= keys")
+
+    @property
+    def children(self):
+        return (self.child,)
+
+    @property
+    def schema(self):
+        return self.child.schema
+
+    def with_children(self, children):
+        n = replace(self)
+        n.child = children[0]
+        return n
+
+    def short(self):
+        parts = []
+        if self.by:
+            parts.append(f"by={','.join(self.by)}")
+        if self.sort_by:
+            parts.append(f"sort={','.join(self.sort_by)}")
+        return f"Repartition({'; '.join(parts)})"
+
+
+@dataclass(eq=False)
 class Rebalance(Node):
     """Inserted by the distribution pass: 1D_VAR -> 1D_BLOCK."""
 

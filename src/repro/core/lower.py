@@ -16,6 +16,7 @@ means smaller buffers, not just fewer collectives.
 from __future__ import annotations
 
 import functools
+import os
 from dataclasses import dataclass
 from typing import Any
 
@@ -27,6 +28,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 from . import distribution as D
 from . import ir, physical as phys
 from . import physical_plan as pp
+from ..kernels import registry as kreg
 from .compat import shard_map as _compat_shard_map
 from .expr import ExternalArray, evaluate
 from .table import DTable, pad_to
@@ -51,7 +53,15 @@ class ExecConfig:
     # physical choices (§Perf levers)
     exscan_method: str = "allgather"  # or "ladder"
     broadcast_join: bool = True       # beyond-paper: REP side joins without shuffle
-    use_kernels: bool = False         # route hot loops through Pallas kernels
+    # use_pallas: the ONE kernel-backend lever.  "off" runs every hot-path
+    # primitive as its lax composition (ref backend); "interpret" runs the
+    # Pallas kernels under the interpreter (CPU CI, numerics debugging);
+    # "compiled" compiles them for the accelerator (TPU).  Empty string
+    # defers to $HIFRAMES_USE_PALLAS, defaulting to "off".  Backends are a
+    # numerics swap only — the physical plan is identical in all modes.
+    use_pallas: str = ""
+    # deprecated alias for use_pallas="interpret" (the pre-registry bool).
+    use_kernels: bool = False
     optimize_plan: bool = True
     # property-driven exchange/sort elision (core/physical_plan.py); False
     # restores the exchange-per-operator baseline — the A/B lever for
@@ -75,6 +85,16 @@ class ExecConfig:
     # collect): replan with doubled expansion, at most this many times.
     auto_retry: int = 3
 
+    def __post_init__(self):
+        if not self.use_pallas:
+            self.use_pallas = os.environ.get("HIFRAMES_USE_PALLAS", "off")
+        if self.use_kernels and self.use_pallas == "off":
+            self.use_pallas = "interpret"
+        if self.use_pallas not in kreg.MODES:
+            raise ValueError(
+                f"use_pallas must be one of {kreg.MODES}, "
+                f"got {self.use_pallas!r}")
+
     def get_mesh(self) -> Mesh:
         if self.mesh is not None:
             return self.mesh
@@ -97,12 +117,12 @@ class Lowered:
     """A compiled physical plan: callable on (possibly fresh) source arrays."""
 
     def __init__(self, root: ir.Node, cfg: ExecConfig, dists: dict[int, str],
-                 pplan: pp.PhysicalPlan, kernels: dict | None = None):
+                 pplan: pp.PhysicalPlan):
         self.root = root
         self.cfg = cfg
         self.dists = dists
         self.pplan = pplan
-        self.kernels = kernels or {}
+        self.kernels = kreg.resolve(cfg.use_pallas)
         self.mesh = cfg.get_mesh()
         self.P = int(np.prod([self.mesh.shape[a] for a in cfg.axes]))
         self._build()
@@ -159,8 +179,6 @@ class Lowered:
             env: dict[int, tuple[dict, Any]] = {}
             flags = []
             ext = {f"ext:{t}": v for t, v in inputs["ext"].items()}
-            pfn = kernels.get("hash_partition")
-            sfn = kernels.get("prefix_sum")
 
             for op in pplan.ops:
                 n = op.node
@@ -189,7 +207,7 @@ class Lowered:
                     keep = pred & phys.valid_mask(
                         cnt, next(iter(cols.values())).shape[0])
                     out, cnt2, ovf = phys.compact(cols, keep, op.cap,
-                                                  prefix_fn=sfn)
+                                                  kernels=kernels)
                     flags.append(ovf)
                     res = (out, cnt2)
 
@@ -218,22 +236,23 @@ class Lowered:
                         pk = tuple(cols[k] for k in n.partition_by)
                         if n.kind == "cumsum":
                             col = phys.segment_cumsum(x, pk, cnt,
-                                                      prefix_fn=sfn)
+                                                      kernels=kernels)
                         elif n.kind == "stencil":
                             col = phys.segment_stencil1d(x, pk, cnt,
                                                          n.weights, n.center,
-                                                         exact=n.exact)
+                                                         exact=n.exact,
+                                                         kernels=kernels)
                         else:
                             ok = tuple(cols[k] for k in n.order_by)
-                            col = phys.segment_rank(pk, ok, cnt, n.kind)
+                            col = phys.segment_rank(pk, ok, cnt, n.kind,
+                                                    kernels=kernels)
                     elif n.kind == "cumsum":
                         col = phys.dist_cumsum(x, cnt, ax,
                                                method=cfg.exscan_method,
-                                               prefix_fn=sfn)
+                                               kernels=kernels)
                     else:
                         col = phys.stencil1d(x, cnt, n.weights, n.center, ax,
-                                             kernel_fn=kernels.get("stencil1d"),
-                                             exact=n.exact)
+                                             kernels=kernels, exact=n.exact)
                     out = dict(cols)
                     out[n.out] = col
                     res = (out, cnt)
@@ -243,8 +262,7 @@ class Lowered:
                     out, cnt2, ovf = phys.shuffle_by_key(
                         cols, cnt, op.keys, axes=axes,
                         bucket_cap=op.bucket, cap_out=op.cap,
-                        partition_fn=pfn, prefix_fn=sfn,
-                        packed=cfg.packed_exchange)
+                        kernels=kernels, packed=cfg.packed_exchange)
                     flags.append(ovf)
                     res = (out, cnt2)
 
@@ -286,8 +304,7 @@ class Lowered:
                               for name, agg in n.aggs.items()}
                     keys = tuple(cols[k] for k in n.key)
                     out, n_seg, ovf = phys.partial_aggregate(
-                        keys, cnt, values, cap_out=op.cap,
-                        segsum_fn=kernels.get("segment_sums"))
+                        keys, cnt, values, cap_out=op.cap, kernels=kernels)
                     flags.append(ovf)
                     res = (_restore_key_names(out, n.key), n_seg)
 
@@ -298,14 +315,13 @@ class Lowered:
                         out, n_seg, ovf = phys.final_aggregate(
                             keys, cnt,
                             {name: agg.fn for name, agg in n.aggs.items()},
-                            cols, cap_out=op.cap,
-                            segsum_fn=kernels.get("segment_sums"))
+                            cols, cap_out=op.cap, kernels=kernels)
                     else:
                         values = {name: (agg.fn, cols["__v_" + name])
                                   for name, agg in n.aggs.items()}
                         out, n_seg, ovf = phys.segment_aggregate(
                             keys, cnt, values, cap_out=op.cap,
-                            segsum_fn=kernels.get("segment_sums"),
+                            kernels=kernels,
                             presorted=(op.nunique_ride,)
                             if op.nunique_ride else ())
                     flags.append(ovf)
@@ -316,7 +332,7 @@ class Lowered:
                     out, cnt2, ovf = phys.sample_sort(
                         cols, cnt, n.by, axes=ax, bucket_cap=op.bucket,
                         cap_out=op.cap, ascending=n.ascending,
-                        pre_sorted=op.pre_sorted,
+                        pre_sorted=op.pre_sorted, kernels=kernels,
                         packed=cfg.packed_exchange)
                     flags.append(ovf)
                     res = (out, cnt2)
@@ -330,14 +346,14 @@ class Lowered:
                     cols, cnt = env[op.inputs[0]]
                     out, cnt2, ovf = phys.rebalance(
                         cols, cnt, axes=axes, bucket_cap=op.bucket,
-                        cap_out=op.cap, partition_fn=pfn, prefix_fn=sfn,
+                        cap_out=op.cap, kernels=kernels,
                         packed=cfg.packed_exchange)
                     flags.append(ovf)
                     res = (out, cnt2)
 
                 elif isinstance(op, pp.ConcatOp):
                     parts = [env[i] for i in op.inputs]
-                    out, cnt, ovf = phys.concat(parts, op.cap, prefix_fn=sfn)
+                    out, cnt, ovf = phys.concat(parts, op.cap, kernels=kernels)
                     flags.append(ovf)
                     res = (out, cnt)
 
@@ -466,10 +482,14 @@ def _walk_expr(e):
 
 def lower(root: ir.Node, cfg: ExecConfig | None = None,
           keep: set[str] | None = None, collect_block: bool = False,
-          force_rep: set[int] = frozenset(), kernels: dict | None = None
-          ) -> tuple[Lowered, dict]:
+          force_rep: set[int] = frozenset()) -> tuple[Lowered, dict]:
     """optimize -> infer distributions -> insert rebalance -> plan physical
-    ops (exchange/sort elision) -> plan capacities -> build executor."""
+    ops (exchange/sort elision) -> plan capacities -> build executor.
+
+    Kernel backends (``cfg.use_pallas``) play no part here: the physical
+    plan is backend-oblivious; ``Lowered`` resolves the registry when it
+    builds the per-shard program.
+    """
     from . import optimizer as opt
 
     cfg = cfg or ExecConfig()
@@ -486,7 +506,4 @@ def lower(root: ir.Node, cfg: ExecConfig | None = None,
                    for n in order if isinstance(n, ir.Scan)}
     pplan = pp.plan_physical(root, info.dists, cfg)
     pp.plan_capacities(pplan, Pn, cfg, source_rows)
-    if kernels is None and cfg.use_kernels:
-        from .. import kernels as K
-        kernels = K.kernel_table()
-    return Lowered(root, cfg, info.dists, pplan, kernels=kernels), stats
+    return Lowered(root, cfg, info.dists, pplan), stats

@@ -180,6 +180,11 @@ def _required_columns(root: ir.Node, keep: set[str] | None) -> dict[int, set[str
             req.setdefault(n.child.id, set()).update(child_need)
         elif isinstance(n, ir.Sort):
             req.setdefault(n.child.id, set()).update(set(need) | set(n.by))
+        elif isinstance(n, ir.Repartition):
+            # the exchange/sort read the layout keys even when a downstream
+            # consumer drops them
+            req.setdefault(n.child.id, set()).update(
+                set(need) | set(n.by) | set(n.sort_by))
         elif isinstance(n, ir.Concat):
             for c in n.parts:
                 req.setdefault(c.id, set()).update(need)

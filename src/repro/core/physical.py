@@ -24,7 +24,20 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
+from ..kernels import registry as _registry
+
 Axes = tuple[str, ...]
+
+
+def _K(kernels) -> "_registry.KernelSet":
+    """Resolve the kernel set for a per-shard operator.
+
+    ``Lowered`` threads the :class:`~repro.kernels.registry.KernelSet` picked
+    by ``ExecConfig.use_pallas`` into every call below; ``None`` (direct
+    callers, tests) falls back to the ref backends — the pure lax
+    compositions that are bit-for-bit the pre-registry numerics.
+    """
+    return kernels if kernels is not None else _registry.REF
 
 
 # ---------------------------------------------------------------------------
@@ -87,25 +100,25 @@ def hash_keys(cols: dict[str, jax.Array], key_names: Sequence[str]) -> jax.Array
 # ---------------------------------------------------------------------------
 
 def compact(cols: dict[str, jax.Array], keep: jax.Array, cap_out: int,
-            prefix_fn=None):
+            kernels=None):
     """Move rows where ``keep`` into the prefix of fresh (cap_out, ...) buffers.
 
     Returns (cols_out, count_out, overflow).  Rows beyond cap_out are dropped
     and flagged — the driver's retry hook (fault tolerance for capacity
-    planning, DESIGN.md §2).  ``prefix_fn`` routes the slot-assignment scan
-    through the stream_compact Pallas kernel; ``keep`` may be boolean or an
-    integer 0/1 vector — both take the same kernel fast path.  Columns may
-    carry trailing dims (the packed-word matrix of :func:`pack_columns`
-    compacts row-wise like any scalar column).  A zero-length shard (empty
-    ``keep``) short-circuits before any scan runs — the prefix kernel never
-    sees a zero-size input.
+    planning, DESIGN.md §2).  The slot-assignment scan resolves through the
+    registry's ``prefix_sum`` primitive (stream_compact Pallas kernel when
+    ``use_pallas`` is on); ``keep`` may be boolean or an integer 0/1 vector —
+    both take the same path.  Columns may carry trailing dims (the
+    packed-word matrix of :func:`pack_columns` compacts row-wise like any
+    scalar column).  A zero-length shard (empty ``keep``) short-circuits
+    before any scan runs — the prefix kernel never sees a zero-size input.
     """
     if keep.shape[0] == 0:
         out = {name: jnp.zeros((cap_out,) + v.shape[1:], v.dtype)
                for name, v in cols.items()}
         return out, jnp.int32(0), jnp.array(False)
     keep = keep.astype(jnp.int32)
-    incl = prefix_fn(keep) if prefix_fn is not None else jnp.cumsum(keep)
+    incl = _K(kernels).prefix_sum(keep)
     dest = incl - 1
     total = incl[-1]
     dest = jnp.where(keep > 0, dest, cap_out)          # parked -> dropped
@@ -192,7 +205,7 @@ def unpack_columns(words: jax.Array, layout) -> dict[str, jax.Array]:
 
 def exchange(cols: dict[str, jax.Array], count, dest: jax.Array, *,
              axes: Axes, bucket_cap: int, cap_out: int,
-             partition_fn=None, prefix_fn=None, packed: bool = True):
+             kernels=None, packed: bool = True):
     """Route row i of this shard to shard ``dest[i]``.
 
     Static-shape plan: rows are stably grouped by destination into a
@@ -201,6 +214,13 @@ def exchange(cols: dict[str, jax.Array], count, dest: jax.Array, *,
     (P,) vector through their own all_to_all.  Stability: row order within a
     (src, dst) pair is preserved and receives are concatenated in src order,
     so global row order is preserved for order-sensitive users (rebalance).
+
+    Slot assignment resolves through the registry's ``bucket_scatter``
+    primitive — ``(slot, send_counts)`` with each row's stable within-bucket
+    slot at its ORIGINAL position, so rows scatter straight into the bucket
+    buffer with no reorder pass.  The ref backend derives slots from a
+    stable argsort; the Pallas backend (hash_partition) computes them in one
+    streaming count+scatter pass with a carried per-bucket histogram.
 
     ``packed=True`` (default) ships ALL columns as one word-packed
     (P, bucket_cap, W) uint32 payload (:func:`pack_columns`), so an exchange
@@ -215,22 +235,10 @@ def exchange(cols: dict[str, jax.Array], count, dest: jax.Array, *,
 
     if P == 1:
         # single shard: no collective; just clamp into the output capacity.
-        return compact(cols, valid, cap_out, prefix_fn=prefix_fn)
+        return compact(cols, valid, cap_out, kernels=kernels)
 
-    if partition_fn is not None:
-        # hash_partition Pallas kernel: one streaming pass, no argsort, and
-        # rows scatter from their ORIGINAL positions (stability for free).
-        slot, send_counts = partition_fn(dest, P)
-        sdest, reorder = dest, None
-    else:
-        order = jnp.argsort(dest, stable=True)
-        sdest = dest[order]
-        send_counts = jnp.bincount(dest, length=P + 1)[:P].astype(jnp.int32)
-        offs = jnp.concatenate([jnp.zeros((1,), jnp.int32),
-                                jnp.cumsum(send_counts)[:-1]])
-        slot = jnp.arange(sdest.shape[0], dtype=jnp.int32) - offs[jnp.clip(sdest, 0, P - 1)]
-        reorder = order
-    in_range = sdest < P
+    slot, send_counts = _K(kernels).bucket_scatter(dest, P)
+    in_range = dest < P
     overflow_send = jnp.any(in_range & (slot >= bucket_cap))
     scatter_slot = jnp.where(in_range & (slot < bucket_cap), slot, bucket_cap)
 
@@ -245,33 +253,30 @@ def exchange(cols: dict[str, jax.Array], count, dest: jax.Array, *,
         # scatter into (P, bucket_cap+1, W) -> one all_to_all -> compact the
         # word matrix row-wise -> unpack.
         words, layout = pack_columns(cols)
-        if reorder is not None:
-            words = words[reorder]
         buf = jnp.zeros((P, bucket_cap + 1, words.shape[1]), jnp.uint32)
-        buf = buf.at[sdest, scatter_slot].set(words, mode="drop")
+        buf = buf.at[dest, scatter_slot].set(words, mode="drop")
         recv = lax.all_to_all(buf[:, :bucket_cap, :], axes, 0, 0)
         flat = {"__packed__": recv.reshape(P * bucket_cap, -1)}
         out, count_out, overflow_recv = compact(flat, keep, cap_out,
-                                                prefix_fn=prefix_fn)
+                                                kernels=kernels)
         out = unpack_columns(out["__packed__"], layout)
         return out, count_out, overflow_send | overflow_recv
 
     recv = {}
     for name, v in cols.items():
         buf = jnp.zeros((P, bucket_cap + 1), v.dtype)
-        src = v if reorder is None else v[reorder]
-        buf = buf.at[sdest, scatter_slot].set(src, mode="drop")
+        buf = buf.at[dest, scatter_slot].set(v, mode="drop")
         buf = buf[:, :bucket_cap]
         recv[name] = lax.all_to_all(buf, axes, 0, 0)
 
     flat = {k: v.reshape(-1) for k, v in recv.items()}
-    out, count_out, overflow_recv = compact(flat, keep, cap_out, prefix_fn=prefix_fn)
+    out, count_out, overflow_recv = compact(flat, keep, cap_out, kernels=kernels)
     return out, count_out, overflow_send | overflow_recv
 
 
 def shuffle_by_key(cols: dict[str, jax.Array], count, key_names, *,
                    axes: Axes, bucket_cap: int, cap_out: int,
-                   partition_fn=None, prefix_fn=None, packed: bool = True):
+                   kernels=None, packed: bool = True):
     """Hash-partition rows so equal (possibly composite) keys co-locate.
 
     ``key_names`` is a column name or a sequence of names; multiple names
@@ -282,8 +287,7 @@ def shuffle_by_key(cols: dict[str, jax.Array], count, key_names, *,
     P = nshards(axes) if axes else 1
     dest = (hash_keys(cols, key_names) % np.uint32(P)).astype(jnp.int32)
     return exchange(cols, count, dest, axes=axes, bucket_cap=bucket_cap,
-                    cap_out=cap_out, partition_fn=partition_fn,
-                    prefix_fn=prefix_fn, packed=packed)
+                    cap_out=cap_out, kernels=kernels, packed=packed)
 
 
 # ---------------------------------------------------------------------------
@@ -438,7 +442,7 @@ def merge_join(lcols, lcount, rcols, rcount, lkeys, rkeys, *,
 # ---------------------------------------------------------------------------
 
 def segment_aggregate(keys_sorted, count, values: dict[str, tuple[str, jax.Array]],
-                      *, cap_out: int, segsum_fn=None,
+                      *, cap_out: int, kernels=None,
                       presorted: Sequence[str] = ()):
     """Aggregate ``values`` over runs of equal (grouped) composite keys.
 
@@ -478,9 +482,13 @@ def segment_aggregate(keys_sorted, count, values: dict[str, tuple[str, jax.Array
     def ssum(x):
         if x.dtype == jnp.bool_:
             x = x.astype(jnp.int32)      # sum(:x < 1.0) counts True rows
-        if segsum_fn is not None and jnp.issubdtype(x.dtype, jnp.floating):
-            # segment_reduce Pallas kernel (scan-difference at boundaries)
-            return segsum_fn(x, seg_id, valid, cap_out)
+        if jnp.issubdtype(x.dtype, jnp.floating):
+            # registry segment_sums: ref is the dtype-preserving
+            # jax.ops.segment_sum composition; the Pallas backend is the
+            # segment_reduce scan-difference kernel (f32 accumulation).
+            return _K(kernels).segment_sums(x, seg_id, valid, cap_out)
+        # integer sums stay on segment_sum directly for exactness (the
+        # Pallas kernel accumulates in f32).
         return jax.ops.segment_sum(jnp.where(valid, x, jnp.zeros((), x.dtype)),
                                    seg_id, num_segments=cap_out + 1)[:cap_out]
 
@@ -701,7 +709,7 @@ def partial_decompose(name: str, fn: str, x: jax.Array):
 
 
 def partial_aggregate(keys_sorted, count, values: dict[str, tuple[str, jax.Array]],
-                      *, cap_out: int, segsum_fn=None):
+                      *, cap_out: int, kernels=None):
     """Map-side stage: reduce each LOCAL key run to its partial statistics.
 
     Same grouped-input contract and ``(__key<i>__, ...)`` output convention
@@ -713,12 +721,12 @@ def partial_aggregate(keys_sorted, count, values: dict[str, tuple[str, jax.Array
         for pcol, pfn, arr in partial_decompose(name, fn, x):
             pvals[pcol] = (pfn, arr)
     return segment_aggregate(keys_sorted, count, pvals, cap_out=cap_out,
-                             segsum_fn=segsum_fn)
+                             kernels=kernels)
 
 
 def final_aggregate(keys_sorted, count, agg_fns: dict[str, str],
                     cols: dict[str, jax.Array], *, cap_out: int,
-                    segsum_fn=None):
+                    kernels=None):
     """Reduce-side stage: combine :func:`partial_aggregate` rows from every
     shard (grouped by key after the exchange + local sort) into final
     results.  ``agg_fns`` maps output name -> original agg fn; ``cols``
@@ -732,7 +740,7 @@ def final_aggregate(keys_sorted, count, agg_fns: dict[str, str],
             pcol = f"__p_{name}__{s.suffix}"
             cvals[pcol] = (s.combine_fn, cols[pcol])
     agg, n_seg, ovf = segment_aggregate(keys_sorted, count, cvals,
-                                        cap_out=cap_out, segsum_fn=segsum_fn)
+                                        cap_out=cap_out, kernels=kernels)
     out = {k: v for k, v in agg.items() if k.startswith("__key")}
     for name, fn in agg_fns.items():
         specs, final = AGG_DECOMP[fn]
@@ -766,28 +774,31 @@ def _segment_first_index(seg_start: jax.Array) -> jax.Array:
 
 
 def segment_cumsum(x: jax.Array, part_keys: Sequence[jax.Array], count,
-                   prefix_fn=None):
-    """Grouped cumulative sum: a plain inclusive scan minus the running total
-    at each row's segment start (segment-reset exscan).  No collectives —
-    groups are shard-local under hash(partition_by)."""
+                   kernels=None):
+    """Grouped cumulative sum via the registry's ``segment_scan`` primitive.
+    The ref backend is a plain inclusive scan minus the running total at each
+    row's segment start (segment-reset exscan); the Pallas backend fuses the
+    boundary mask and the scan into one pass.  No collectives — groups are
+    shard-local under hash(partition_by)."""
     cap = x.shape[0]
     valid = valid_mask(count, cap)
     xz = jnp.where(valid, x, jnp.zeros((), x.dtype))
+    if xz.dtype == jnp.bool_:
+        xz = xz.astype(jnp.int32)        # cumsum of bool promotes anyway
     seg_start = run_starts(part_keys, valid)
-    incl = prefix_fn(xz) if prefix_fn is not None else jnp.cumsum(xz)
-    first = _segment_first_index(seg_start)
-    base = jnp.where(first > 0, incl[jnp.maximum(first - 1, 0)],
-                     jnp.zeros((), incl.dtype))
-    return jnp.where(valid, incl - base, jnp.zeros((), incl.dtype))
+    out = _K(kernels).segment_scan(xz, seg_start.astype(jnp.int32))
+    return jnp.where(valid, out, jnp.zeros((), out.dtype))
 
 
 def segment_stencil1d(x: jax.Array, part_keys: Sequence[jax.Array], count,
                       weights: Sequence[float], center: int,
-                      exact: bool = False):
+                      exact: bool = False, kernels=None):
     """Boundary-masked 1-D stencil: taps that would cross a group edge are
     zeroed (the zero-border convention applied per group).  No halo exchange
     — groups are shard-local, so neighbors outside the group are simply
-    masked by segment-id mismatch.
+    masked by segment-id mismatch.  The tap loop (and the ``exact`` mass
+    renormalize, fused) resolves through the registry's ``segment_stencil``
+    primitive.
 
     ``exact=True`` renormalizes each output by the realized weight mass:
     rows near a group edge divide by the weights of the taps that actually
@@ -795,7 +806,7 @@ def segment_stencil1d(x: jax.Array, part_keys: Sequence[jax.Array], count,
     pandas' ``min_periods=1`` exact rolling mean; interior rows are
     untouched since their mass is the full weight sum).
     """
-    w = np.asarray(weights, dtype=np.float32)
+    w = [float(v) for v in weights]
     k_left, k_right = center, len(w) - 1 - center
     cap = x.shape[0]
     valid = valid_mask(count, cap)
@@ -807,47 +818,35 @@ def segment_stencil1d(x: jax.Array, part_keys: Sequence[jax.Array], count,
                              jnp.zeros((k_right,), jnp.float32)])
     ext_s = jnp.concatenate([jnp.full((k_left,), -2, jnp.int32), sid,
                              jnp.full((k_right,), -2, jnp.int32)])
-    out = jnp.zeros((cap,), jnp.float32)
-    mass = jnp.zeros((cap,), jnp.float32)
-    for j, wj in enumerate(w):
-        same = ext_s[j:j + cap] == sid
-        out = out + np.float32(wj) * jnp.where(same, ext_x[j:j + cap], 0.0)
-        if exact:
-            mass = mass + np.float32(wj) * same.astype(jnp.float32)
-    if exact:
-        total = np.float32(w.sum())
-        out = jnp.where(mass != 0, out * total / jnp.where(mass != 0, mass, 1.0),
-                        0.0)
+    out = _K(kernels).segment_stencil(ext_x, ext_s, w, center, exact)
     return jnp.where(valid, out, 0.0)
 
 
 def segment_rank(part_keys: Sequence[jax.Array],
-                 order_keys: Sequence[jax.Array], count, kind: str):
+                 order_keys: Sequence[jax.Array], count, kind: str,
+                 kernels=None):
     """SQL ranking within groups of rows sorted by (part_keys, order_keys).
 
     row_number: 1-based position in the group (ties broken by the stable
     sort).  rank: 1 + position of the first row with the same order-key
     tuple (ties share, gaps after).  dense_rank: 1 + number of distinct
-    order-key tuples before this row's (ties share, no gaps).  Reuses the
-    run-boundary machinery of lex_ranks/segment_aggregate: a (part, order)
-    run start is where ANY key column differs from the previous row.
+    order-key tuples before this row's (ties share, no gaps).  The two
+    boundary masks (group starts, (group, order) run starts — every group
+    start is also a run start) feed the registry's ``segment_rank``
+    primitive; the ref backend composes cummax-located head indices, the
+    Pallas backend runs fused segmented scans of the masks.
     """
+    if kind not in ("row_number", "rank", "dense_rank"):
+        raise ValueError(kind)
     cap = part_keys[0].shape[0]
     valid = valid_mask(count, cap)
-    idx = jnp.arange(cap, dtype=jnp.int32)
     seg_start = run_starts(part_keys, valid)
-    seg_first = _segment_first_index(seg_start)
     if kind == "row_number":
-        r = idx - seg_first + 1
+        order_start = seg_start
     else:
         order_start = run_starts(tuple(part_keys) + tuple(order_keys), valid)
-        if kind == "rank":
-            r = _segment_first_index(order_start) - seg_first + 1
-        elif kind == "dense_rank":
-            runs = jnp.cumsum(order_start.astype(jnp.int32))
-            r = runs - runs[seg_first] + 1
-        else:
-            raise ValueError(kind)
+    r = _K(kernels).segment_rank(seg_start.astype(jnp.int32),
+                                 order_start.astype(jnp.int32), kind)
     return jnp.where(valid, r, 0).astype(jnp.int32)
 
 
@@ -878,11 +877,11 @@ def exscan_scalar(v, axes: Axes, method: str = "allgather"):
 
 
 def dist_cumsum(x: jax.Array, count, axes: Axes, method: str = "allgather",
-                prefix_fn=None):
+                kernels=None):
     """Distributed cumulative sum over the valid prefix of each shard."""
     valid = valid_mask(count, x.shape[0])
     xz = jnp.where(valid, x, jnp.zeros((), x.dtype))
-    local = prefix_fn(xz) if prefix_fn is not None else jnp.cumsum(xz)
+    local = _K(kernels).prefix_sum(xz) if x.shape[0] else xz
     total = local[-1] if x.shape[0] else jnp.zeros((), x.dtype)
     base = exscan_scalar(total, axes, method=method)
     return local + base
@@ -935,25 +934,28 @@ def halo_exchange(x: jax.Array, count, k_left: int, k_right: int, axes: Axes):
 
 
 def stencil1d(x: jax.Array, count, weights: Sequence[float], center: int,
-              axes: Axes, kernel_fn=None, exact: bool = False):
+              axes: Axes, kernels=None, exact: bool = False):
     """out[i] = sum_j w[j] * x[i + j - center] over the distributed valid
     prefix, halos from neighbors (paper's SMA/WMA; MPI_Isend/Irecv analogue).
 
-    ``kernel_fn(ext, weights, center) -> out`` lets the Pallas kernel
-    (kernels/stencil1d) replace the jnp sliding-window fallback.
+    The windowed weighted sum resolves through the registry's ``stencil1d``
+    primitive (kernels/stencil1d Pallas kernel vs the jnp sliding-window
+    ref).
 
     ``exact=True`` renormalizes rows near the GLOBAL borders by the realized
     weight mass (see :func:`segment_stencil1d`): the mass is the same
     stencil applied to a ones-vector through the same halo machinery, so a
     tap into a populated neighbor shard counts while a tap past the global
-    ends does not.
+    ends does not.  Both stencils and the renormalize fuse into ONE
+    ``stencil1d_exact`` kernel pass (the halo exchange for the mass vector
+    still happens — masses near shard edges depend on neighbor validity).
     """
-    w = np.asarray(weights, dtype=np.float32)
+    w = [float(v) for v in weights]
     k_left, k_right = center, len(w) - 1 - center
     cap = x.shape[0]
     valid = valid_mask(count, cap)
 
-    def apply(vals):
+    def build_ext(vals):
         vz = jnp.where(valid, vals.astype(jnp.float32), 0.0)
         left, right = halo_exchange(vz, count, k_left, k_right, axes)
         # ext[k_left + i] = v[i] (valid rows), right halo lands AT the
@@ -964,19 +966,14 @@ def stencil1d(x: jax.Array, count, weights: Sequence[float], center: int,
             ext = lax.dynamic_update_slice(ext, right, (k_left + count,))
         if k_left:
             ext = lax.dynamic_update_slice(ext, left, (0,))
-        if kernel_fn is not None:
-            return kernel_fn(ext, w, center)
-        acc = jnp.zeros((cap,), jnp.float32)
-        for j, wj in enumerate(w):
-            acc = acc + np.float32(wj) * lax.dynamic_slice(ext, (j,), (cap,))
-        return acc
+        return ext
 
-    out = apply(x)
+    kset = _K(kernels)
     if exact:
-        mass = apply(jnp.ones((cap,), jnp.float32))
-        total = np.float32(w.sum())
-        out = jnp.where(mass != 0, out * total / jnp.where(mass != 0, mass, 1.0),
-                        0.0)
+        out = kset.stencil1d_exact(build_ext(x),
+                                   build_ext(jnp.ones((cap,), jnp.float32)), w)
+    else:
+        out = kset.stencil1d(build_ext(x), w)
     return jnp.where(valid, out, 0.0)
 
 
@@ -1008,13 +1005,13 @@ def limit(cols: dict[str, jax.Array], count, n: int, axes: Axes,
 # ---------------------------------------------------------------------------
 
 def rebalance(cols: dict[str, jax.Array], count, *, axes: Axes,
-              bucket_cap: int, cap_out: int, partition_fn=None, prefix_fn=None,
+              bucket_cap: int, cap_out: int, kernels=None,
               packed: bool = True):
     """Even out row counts across shards, preserving global row order."""
     P = nshards(axes) if axes else 1
     cap = next(iter(cols.values())).shape[0]
     if P == 1:
-        return compact(cols, valid_mask(count, cap), cap_out, prefix_fn=prefix_fn)
+        return compact(cols, valid_mask(count, cap), cap_out, kernels=kernels)
     counts = lax.all_gather(count, axes)                 # (P,)
     total = jnp.sum(counts)
     base = exscan_scalar(count, axes)
@@ -1024,15 +1021,14 @@ def rebalance(cols: dict[str, jax.Array], count, *, axes: Axes,
                      g // jnp.maximum(block, 1), P).astype(jnp.int32)
     out, cnt, ovf = exchange(cols, count, dest, axes=axes,
                              bucket_cap=bucket_cap, cap_out=cap_out,
-                             partition_fn=partition_fn, prefix_fn=prefix_fn,
-                             packed=packed)
+                             kernels=kernels, packed=packed)
     return out, cnt, ovf
 
 
 def sample_sort(cols: dict[str, jax.Array], count, key_names, *,
                 axes: Axes, bucket_cap: int, cap_out: int, n_samples: int = 64,
                 ascending: bool = True, pre_sorted: bool = False,
-                packed: bool = True):
+                kernels=None, packed: bool = True):
     """Global sort: local sort -> splitter selection -> route -> local sort.
 
     ``key_names`` may name several columns (lexicographic order, all
@@ -1099,7 +1095,7 @@ def sample_sort(cols: dict[str, jax.Array], count, key_names, *,
         dest = jnp.zeros((cap,), jnp.int32)
     out, cnt, ovf = exchange(scols, count, dest, axes=axes,
                              bucket_cap=bucket_cap, cap_out=cap_out,
-                             packed=packed)
+                             kernels=kernels, packed=packed)
     out, _ = local_sort(out, cnt, key_names)
     if not ascending:
         # reverse valid prefix
@@ -1117,10 +1113,10 @@ def sample_sort(cols: dict[str, jax.Array], count, key_names, *,
 # ---------------------------------------------------------------------------
 
 def concat(parts: Sequence[tuple[dict[str, jax.Array], jax.Array]], cap_out: int,
-           prefix_fn=None):
+           kernels=None):
     """Vertical concat of per-shard tables (counts add; padding squeezed)."""
     names = list(parts[0][0])
     stacked = {n: jnp.concatenate([p[0][n] for p in parts]) for n in names}
     keep = jnp.concatenate([valid_mask(c, p[next(iter(p))].shape[0])
                             for p, c in parts])
-    return compact(stacked, keep, cap_out, prefix_fn=prefix_fn)
+    return compact(stacked, keep, cap_out, kernels=kernels)

@@ -681,6 +681,23 @@ def plan_physical(root: ir.Node, dists: dict[int, str], cfg) -> PhysicalPlan:
                           Partitioning("range", n.by, n.ascending),
                           Ordering(n.by, n.ascending), pre_sorted=pre)
 
+        elif isinstance(n, ir.Repartition):
+            # Pure layout request: the node itself computes nothing, it just
+            # demands properties — hash(by) co-location and/or sort_by
+            # per-shard ordering — and the usual insertion rules pay only
+            # for what the input doesn't already provide.  Fully provided
+            # layout => complete no-op (reuse the child op), so a redundant
+            # repartition costs nothing.
+            c = plan.final_op(n.child)
+            src = c
+            if n.by and dists[n.id] != D.REP and \
+                    not (elide and colocates(src.part, n.by)):
+                src = hash_exchange(n, src, n.by)
+            if n.sort_by and not (elide and grouped(src.order, n.sort_by)
+                                  and src.order.ascending):
+                src = local_sort(n, src, n.sort_by)
+            op = src
+
         elif isinstance(n, ir.Join):
             l, r = plan.final_op(n.left), plan.final_op(n.right)
             broadcast = dists[n.right.id] == D.REP and cfg.broadcast_join

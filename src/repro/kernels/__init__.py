@@ -5,10 +5,16 @@ Each subpackage ships three files:
   ops.py    — jit'd wrapper (interpret=True on CPU, compiled on TPU)
   ref.py    — pure-jnp oracle used by the shape/dtype sweep tests
 
-``kernel_table()`` returns the hook dict consumed by core.lower.Lowered:
-  stencil1d      — SMA/WMA windowed weighted sum       (paper Fig. 8b)
-  stream_compact — filter compaction prefix-scan       (paper Fig. 8a)
+``registry.py`` binds every subpackage's (ref, pallas) pair into one typed
+table keyed by primitive name; ``core.lower`` resolves it from the
+``ExecConfig.use_pallas`` lever ("off" | "interpret" | "compiled").  See
+docs/kernels.md for the registry contract.
+
+  stream_compact — filter compaction prefix-scan        (paper Fig. 8a)
+  segment_scan   — fused segmented scan (windows/aggs)  (paper Fig. 8b)
+  segment_rank   — fused in-segment ranking             (paper §4.4)
   segment_reduce — sorted-run aggregation scan          (paper Fig. 8a)
+  stencil1d      — SMA/WMA windowed weighted sum        (paper Fig. 8b)
   hash_partition — shuffle bucket rank/histogram        (paper §4.5)
 """
 import jax
@@ -20,19 +26,3 @@ def on_tpu() -> bool:
 
 def interpret_default() -> bool:
     return not on_tpu()
-
-
-def kernel_table(interpret: bool | None = None) -> dict:
-    from .hash_partition import ops as hp
-    from .segment_reduce import ops as sr
-    from .stencil1d import ops as st
-    from .stream_compact import ops as sc
-
-    it = interpret_default() if interpret is None else interpret
-    return {
-        "stencil1d": lambda ext, w, center: st.stencil1d(ext, w, interpret=it),
-        "prefix_sum": lambda x: sc.prefix_sum(x, interpret=it),
-        "segment_sums": lambda v, seg_id, valid, nseg: sr.segment_sums(
-            v, seg_id, valid, nseg, interpret=it),
-        "hash_partition": lambda dest, P: hp.bucket_ranks(dest, P, interpret=it),
-    }

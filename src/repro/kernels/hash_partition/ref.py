@@ -1,4 +1,4 @@
-"""Pure-jnp oracle for hash_partition bucket ranks."""
+"""Pure-jnp oracles for hash_partition bucket ranks."""
 import jax.numpy as jnp
 
 
@@ -9,4 +9,23 @@ def bucket_ranks_ref(dest, P: int):
     excl = jnp.cumsum(onehot, axis=0) - onehot
     ranks = jnp.sum(excl * onehot, axis=1)
     counts = jnp.sum(onehot, axis=0)
+    return ranks, counts
+
+
+def bucket_ranks_argsort(dest, P: int):
+    """Stable within-bucket ranks via stable argsort — O(n log n) but
+    O(n)-memory (no (n, P) one-hot).  This is the registry's `ref` backend
+    for the exchange bucket scatter: a row's stable rank equals its slot in
+    the sorted order minus its bucket's offset, scattered back to original
+    row positions.  Rows with dest == P (invalid) get garbage ranks; callers
+    mask them with ``dest < P``."""
+    n = dest.shape[0]
+    order = jnp.argsort(dest, stable=True)
+    sdest = dest[order]
+    counts = jnp.bincount(dest, length=P + 1)[:P].astype(jnp.int32)
+    offs = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                            jnp.cumsum(counts)[:-1].astype(jnp.int32)])
+    slot_sorted = (jnp.arange(n, dtype=jnp.int32)
+                   - offs[jnp.clip(sdest, 0, max(P - 1, 0))])
+    ranks = jnp.zeros((n,), jnp.int32).at[order].set(slot_sorted)
     return ranks, counts

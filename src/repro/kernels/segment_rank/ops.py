@@ -1,0 +1,11 @@
+"""jit'd wrapper for the fused segment_rank kernel."""
+import functools
+
+import jax
+
+from .segment_rank import segment_rank_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("kind", "interpret"))
+def segment_rank(seg_b, ord_b, kind: str, interpret: bool = True):
+    return segment_rank_pallas(seg_b, ord_b, kind, interpret=interpret)

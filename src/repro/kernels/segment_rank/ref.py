@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for segment_rank: absolute-index compositions.
+
+These are the lax sweeps that lived inline in ``physical.segment_rank``
+before the registry: ranks from cummax-located segment/run heads.
+"""
+import jax.numpy as jnp
+from jax import lax
+
+
+def segment_rank_ref(seg_b, ord_b, kind: str):
+    """1-based in-segment ranks; kind in {row_number, rank, dense_rank}."""
+    n = seg_b.shape[0]
+    idx = jnp.arange(n, dtype=jnp.int32)
+    seg_first = lax.cummax(jnp.where(seg_b != 0, idx, 0))
+    if kind == "row_number":
+        return idx - seg_first + 1
+    if kind == "dense_rank":
+        runs = jnp.cumsum((ord_b != 0).astype(jnp.int32))
+        return runs - runs[seg_first] + 1
+    if kind == "rank":
+        ord_first = lax.cummax(jnp.where(ord_b != 0, idx, 0))
+        return ord_first - seg_first + 1
+    raise ValueError(f"unknown rank kind: {kind!r}")

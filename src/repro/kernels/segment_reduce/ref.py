@@ -8,3 +8,12 @@ def segment_sums_ref(values, seg_id, valid, num_segments: int):
     v = jnp.where(valid, values.astype(jnp.float32), 0.0)
     sid = jnp.where(valid, seg_id, num_segments)
     return jax.ops.segment_sum(v, sid, num_segments=num_segments + 1)[:num_segments]
+
+
+def segment_sums_exact(values, seg_id, valid, num_segments: int):
+    """Dtype-preserving variant — the registry's `ref` backend.  Matches the
+    pre-registry inline composition in ``physical.segment_aggregate`` bit for
+    bit (no f32 cast, invalid rows zeroed in the value domain)."""
+    v = jnp.where(valid, values, jnp.zeros((), values.dtype))
+    return jax.ops.segment_sum(v, seg_id,
+                               num_segments=num_segments + 1)[:num_segments]

@@ -1,0 +1,11 @@
+"""jit'd wrapper for the fused segment_scan kernel."""
+import functools
+
+import jax
+
+from .segment_scan import segment_scan_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def segment_scan(x, boundary, interpret: bool = True):
+    return segment_scan_pallas(x, boundary, interpret=interpret)

@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for segment_scan: cumsum minus the pre-segment base."""
+import jax.numpy as jnp
+from jax import lax
+
+
+def segment_scan_ref(x, boundary):
+    """Segmented inclusive sum-scan; boundary != 0 starts a new segment."""
+    n = x.shape[0]
+    incl = jnp.cumsum(x)
+    idx = jnp.arange(n, dtype=jnp.int32)
+    first = lax.cummax(jnp.where(boundary != 0, idx, 0))
+    base = jnp.where(first > 0, incl[jnp.maximum(first - 1, 0)],
+                     jnp.zeros((), incl.dtype))
+    return (incl - base).astype(x.dtype)

@@ -1,9 +1,10 @@
-"""jit'd wrapper for the stencil1d Pallas kernel."""
+"""jit'd wrappers for the stencil1d Pallas kernels."""
 import functools
 
 import jax
 
-from .stencil1d import stencil1d_pallas
+from .stencil1d import (segment_stencil_pallas, stencil1d_exact_pallas,
+                        stencil1d_pallas)
 
 
 @functools.partial(jax.jit, static_argnames=("w", "interpret"))
@@ -13,3 +14,27 @@ def _stencil(ext, w: tuple[float, ...], interpret: bool):
 
 def stencil1d(ext, weights, interpret: bool = True):
     return _stencil(ext, tuple(float(x) for x in weights), interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("w", "interpret"))
+def _stencil_exact(ext, ext_m, w: tuple[float, ...], interpret: bool):
+    return stencil1d_exact_pallas(ext, ext_m, w, interpret=interpret)
+
+
+def stencil1d_exact(ext, ext_m, weights, interpret: bool = True):
+    return _stencil_exact(ext, ext_m, tuple(float(x) for x in weights),
+                          interpret)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("w", "center", "exact", "interpret"))
+def _segment_stencil(ext, ext_s, w: tuple[float, ...], center: int,
+                     exact: bool, interpret: bool):
+    return segment_stencil_pallas(ext, ext_s, w, center, exact=exact,
+                                  interpret=interpret)
+
+
+def segment_stencil(ext, ext_s, weights, center, exact=False,
+                    interpret: bool = True):
+    return _segment_stencil(ext, ext_s, tuple(float(x) for x in weights),
+                            int(center), bool(exact), interpret)

@@ -1,4 +1,4 @@
-"""Pure-jnp oracle for the stencil1d kernel."""
+"""Pure-jnp oracles for the stencil1d kernels."""
 import jax.numpy as jnp
 import numpy as np
 from jax import lax
@@ -13,3 +13,36 @@ def stencil1d_ref(ext, weights):
     for j, wj in enumerate(weights):
         out = out + np.float32(wj) * lax.dynamic_slice(ext, (j,), (n,))
     return out
+
+
+def _renorm(acc, mass, weights):
+    total = np.float32(sum(float(w) for w in weights))
+    safe = jnp.where(mass != 0.0, mass, np.float32(1.0))
+    return jnp.where(mass != 0.0, acc * total / safe, np.float32(0.0))
+
+
+def stencil1d_exact_ref(ext, ext_m, weights):
+    """Two plain stencil passes (values + mask mass) and a renormalize."""
+    return _renorm(stencil1d_ref(ext, weights),
+                   stencil1d_ref(ext_m, weights), weights)
+
+
+def segment_stencil_ref(ext, ext_s, weights, center, exact=False):
+    """Tap loop with segment-id equality masking (the pre-registry lax
+    composition from ``physical.segment_stencil1d``)."""
+    K = len(weights)
+    n = ext.shape[0] - (K - 1)
+    ext = ext.astype(jnp.float32)
+    sid = lax.dynamic_slice(ext_s, (center,), (n,))
+    acc = jnp.zeros((n,), jnp.float32)
+    mass = jnp.zeros((n,), jnp.float32)
+    for j, wj in enumerate(weights):
+        same = lax.dynamic_slice(ext_s, (j,), (n,)) == sid
+        acc = acc + np.float32(wj) * jnp.where(same,
+                                               lax.dynamic_slice(ext, (j,), (n,)),
+                                               np.float32(0.0))
+        if exact:
+            mass = mass + np.float32(wj) * same.astype(jnp.float32)
+    if exact:
+        acc = _renorm(acc, mass, weights)
+    return acc

@@ -32,19 +32,26 @@ def _kernel(x_ref, tail_ref, o_ref, *, weights: tuple[float, ...]):
     o_ref[...] = acc
 
 
+def _blocked_ext(ext, nb, K, dtype, fill=0):
+    """Split an extended array into (nb*BLOCK,) blocks + (nb, K-1) tails."""
+    ext_p = jnp.pad(ext.astype(dtype), (0, nb * BLOCK + K - 1 - ext.shape[0]),
+                    constant_values=fill)
+    x = ext_p[: nb * BLOCK]
+    if K > 1:
+        idx = (jnp.arange(nb)[:, None] + 1) * BLOCK + jnp.arange(K - 1)[None, :]
+        tails = ext_p[idx]                       # (nb, K-1) — tiny halo table
+    else:
+        tails = jnp.zeros((nb, 1), dtype)
+    return x, tails
+
+
 def stencil1d_pallas(ext: jax.Array, weights: tuple[float, ...],
                      interpret: bool = True) -> jax.Array:
     """out[i] = sum_j w[j] * ext[i+j], for i in [0, len(ext) - K + 1)."""
     K = len(weights)
     n = ext.shape[0] - (K - 1)
     nb = max(1, -(-n // BLOCK))
-    ext_p = jnp.pad(ext.astype(jnp.float32), (0, nb * BLOCK + K - 1 - ext.shape[0]))
-    x = ext_p[: nb * BLOCK]
-    if K > 1:
-        idx = (jnp.arange(nb)[:, None] + 1) * BLOCK + jnp.arange(K - 1)[None, :]
-        tails = ext_p[idx]                       # (nb, K-1) — tiny halo table
-    else:
-        tails = jnp.zeros((nb, 1), jnp.float32)
+    x, tails = _blocked_ext(ext, nb, K, jnp.float32)
     out = pl.pallas_call(
         functools.partial(_kernel, weights=tuple(weights)),
         grid=(nb,),
@@ -56,4 +63,104 @@ def stencil1d_pallas(ext: jax.Array, weights: tuple[float, ...],
         out_shape=jax.ShapeDtypeStruct((nb * BLOCK,), jnp.float32),
         interpret=interpret,
     )(x, tails)
+    return out[:n]
+
+
+def _kernel_exact(x_ref, xt_ref, m_ref, mt_ref, o_ref, *,
+                  weights: tuple[float, ...]):
+    K = len(weights)
+    x, m = x_ref[...], m_ref[...]
+    if K > 1:
+        x = jnp.concatenate([x, xt_ref[0, :]])
+        m = jnp.concatenate([m, mt_ref[0, :]])
+    acc = np.float32(weights[0]) * x[0:BLOCK]
+    mass = np.float32(weights[0]) * m[0:BLOCK]
+    for j in range(1, K):
+        acc = acc + np.float32(weights[j]) * x[j:j + BLOCK]
+        mass = mass + np.float32(weights[j]) * m[j:j + BLOCK]
+    total = np.float32(sum(weights))
+    safe = jnp.where(mass != 0.0, mass, np.float32(1.0))
+    o_ref[...] = jnp.where(mass != 0.0, acc * total / safe, np.float32(0.0))
+
+
+def stencil1d_exact_pallas(ext: jax.Array, ext_m: jax.Array,
+                           weights: tuple[float, ...],
+                           interpret: bool = True) -> jax.Array:
+    """Fused stencil + edge renormalize: the weighted sum over in-bounds taps
+    (``ext_m`` carries the validity mask through the same halo machinery) is
+    rescaled by total_weight / covered_mass in the SAME kernel pass — the
+    second full stencil sweep that ``exact=True`` rolling windows used to pay
+    disappears."""
+    K = len(weights)
+    n = ext.shape[0] - (K - 1)
+    nb = max(1, -(-n // BLOCK))
+    x, xt = _blocked_ext(ext, nb, K, jnp.float32)
+    m, mt = _blocked_ext(ext_m, nb, K, jnp.float32)
+    out = pl.pallas_call(
+        functools.partial(_kernel_exact, weights=tuple(weights)),
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((1, max(K - 1, 1)), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((1, max(K - 1, 1)), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((nb * BLOCK,), jnp.float32),
+        interpret=interpret,
+    )(x, xt, m, mt)
+    return out[:n]
+
+
+def _kernel_segment(x_ref, xt_ref, s_ref, st_ref, o_ref, *,
+                    weights: tuple[float, ...], center: int, exact: bool):
+    K = len(weights)
+    ex, es = x_ref[...], s_ref[...]
+    if K > 1:
+        ex = jnp.concatenate([ex, xt_ref[0, :]])
+        es = jnp.concatenate([es, st_ref[0, :]])
+    sid = es[center:center + BLOCK]
+    acc = jnp.zeros((BLOCK,), jnp.float32)
+    mass = jnp.zeros((BLOCK,), jnp.float32)
+    for j in range(K):
+        same = es[j:j + BLOCK] == sid
+        acc = acc + np.float32(weights[j]) * jnp.where(same, ex[j:j + BLOCK],
+                                                       np.float32(0.0))
+        if exact:
+            mass = mass + np.float32(weights[j]) * same.astype(jnp.float32)
+    if exact:
+        total = np.float32(sum(weights))
+        safe = jnp.where(mass != 0.0, mass, np.float32(1.0))
+        acc = jnp.where(mass != 0.0, acc * total / safe, np.float32(0.0))
+    o_ref[...] = acc
+
+
+def segment_stencil_pallas(ext: jax.Array, ext_s: jax.Array,
+                           weights: tuple[float, ...], center: int,
+                           exact: bool = False,
+                           interpret: bool = True) -> jax.Array:
+    """Partition-masked stencil: tap j contributes only where the extended
+    segment-id array matches the centre row's id (``ext_s`` uses sentinel ids
+    for halo/invalid rows, so cross-partition taps never match).  With
+    ``exact`` the in-segment mass renormalize is fused in, same as
+    ``stencil1d_exact``."""
+    K = len(weights)
+    n = ext.shape[0] - (K - 1)
+    nb = max(1, -(-n // BLOCK))
+    x, xt = _blocked_ext(ext, nb, K, jnp.float32)
+    s, st = _blocked_ext(ext_s, nb, K, jnp.int32, fill=-2)
+    out = pl.pallas_call(
+        functools.partial(_kernel_segment, weights=tuple(weights),
+                          center=center, exact=exact),
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((1, max(K - 1, 1)), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((1, max(K - 1, 1)), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((nb * BLOCK,), jnp.float32),
+        interpret=interpret,
+    )(x, xt, s, st)
     return out[:n]

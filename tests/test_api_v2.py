@@ -559,3 +559,129 @@ _SHARDED_BODY = """
 @pytest.mark.parametrize("devices", [2, 8])
 def test_api_v2_sharded_parity(devices):
     run_sharded(_SHARDED_BODY, devices=devices)
+
+
+# -- repartition / sort_within_partitions (layout verbs) ----------------------
+
+
+def test_repartition_plans_one_exchange_and_persists_layout():
+    df = hf.table(_frame())
+    rp = df.repartition("k1")
+    _census(rp, hash_exchanges=1, local_sorts=0, sample_sorts=0)
+    p = rp.persist()
+    lay = p.node.layout
+    assert lay.kind == "hash" and lay.partitioned_by == ("k1",)
+    # the payoff: downstream groupby on the pre-staged key plans 0 exchanges
+    _census(p.groupby("k1").agg(s=("x", "sum")),
+            hash_exchanges=0, partial_aggs=0, segment_aggs=1)
+
+
+def test_repartition_elided_when_already_partitioned():
+    df = hf.table(_frame())
+    _census(df.repartition(("k1", "k2")).repartition(("k1", "k2")),
+            hash_exchanges=1)
+    # a groupby output is hash(key)-partitioned: repartitioning on the same
+    # key is a full no-op
+    g = df.groupby("k1").agg(s=("x", "sum"))
+    _census(g.repartition("k1"), hash_exchanges=1)   # only the groupby's own
+
+
+def test_sort_within_partitions_layout_and_parity():
+    t = _frame()
+    df = hf.table(t)
+    sp = df.sort_within_partitions(("k1", "t"))
+    _census(sp, hash_exchanges=0, local_sorts=1, sample_sorts=0)
+    out = sp.collect().to_numpy()
+    # single shard in-process: fully sorted by (k1, t); rows preserved
+    assert len(out["t"]) == len(t["t"])
+    order = np.lexsort((t["t"], t["k1"]))
+    np.testing.assert_array_equal(out["k1"], t["k1"][order])
+    np.testing.assert_array_equal(out["t"], t["t"][order])
+    np.testing.assert_allclose(out["x"], t["x"][order], rtol=1e-6)
+
+
+def test_repartition_sort_chain_feeds_window_elided():
+    df = hf.table(_frame())
+    staged = df.repartition("k1").sort_within_partitions(("k1", "t")).persist()
+    lay = staged.node.layout
+    assert lay.kind == "hash" and lay.sorted_by == ("k1", "t")
+    w = staged.over("k1", order_by="t").cumsum(staged["x"], out="cs")
+    _census(w, hash_exchanges=0, local_sorts=0)
+
+
+def test_repartition_validates_columns_and_direction():
+    df = hf.table(_frame())
+    with pytest.raises(KeyError, match="repartition"):
+        df.repartition("nope")
+    with pytest.raises(KeyError, match="sort_within_partitions"):
+        df.sort_within_partitions("nope")
+    with pytest.raises(ValueError, match="ascending"):
+        df.sort_within_partitions("k1", ascending=False)
+    with pytest.raises(ValueError, match="Repartition"):
+        ir.Repartition(df.node)
+
+
+_REPARTITION_SHARDED_BODY = """
+    import numpy as np
+    rng = np.random.default_rng(21)
+    n = 1200
+    t = {"k": rng.integers(0, 11, n).astype(np.int32),
+         "t": rng.permutation(n).astype(np.int32),
+         "x": rng.normal(size=n).astype(np.float32)}
+    df = hf.table(t)
+    staged = df.repartition("k").sort_within_partitions(("k", "t")).persist()
+    plan = staged.groupby("k").agg(s=("x", "sum"), c="count").physical_plan()
+    c = plan.counts()
+    assert c["hash_exchanges"] == 0 and c["local_sorts"] == 0, c
+    out = staged.groupby("k").agg(s=("x", "sum"), c="count").collect().to_numpy()
+    out = {k: v[np.argsort(out["k"])] for k, v in out.items()}
+    want_s = np.array([t["x"][t["k"] == k].sum() for k in np.unique(t["k"])])
+    np.testing.assert_allclose(out["s"], want_s, atol=1e-3)
+    # every row survived the restage
+    raw = staged.collect().to_numpy()
+    assert sorted(raw["t"].tolist()) == sorted(t["t"].tolist())
+"""
+
+
+@pytest.mark.parametrize("devices", [2, 8])
+def test_repartition_sharded(devices):
+    run_sharded(_REPARTITION_SHARDED_BODY, devices=devices)
+
+
+# -- GroupBy column selection -------------------------------------------------
+
+
+def test_groupby_getitem_single_column():
+    t = _frame()
+    df = hf.table(t)
+    out = df.groupby("k1")["x"].sum().collect().to_numpy()
+    assert set(out) == {"k1", "x"}
+    pdf = pd.DataFrame(t)
+    ref = pdf.groupby("k1")["x"].sum()
+    out_s = out["x"][np.argsort(out["k1"])]
+    np.testing.assert_allclose(out_s, ref.to_numpy(), atol=1e-3)
+
+
+def test_groupby_getitem_list_mean():
+    t = _frame()
+    df = hf.table(t)
+    out = df.groupby("k1")[["x", "y"]].mean().collect().to_numpy()
+    assert set(out) == {"k1", "x", "y"}
+    pdf = pd.DataFrame(t)
+    ref = pdf.groupby("k1")[["x", "y"]].mean().sort_index()
+    o = np.argsort(out["k1"])
+    np.testing.assert_allclose(out["x"][o], ref["x"].to_numpy(), atol=1e-4)
+    np.testing.assert_allclose(out["y"][o], ref["y"].to_numpy(), atol=1e-4)
+
+
+def test_groupby_getitem_validates():
+    df = hf.table(_frame())
+    with pytest.raises(KeyError, match="groupby"):
+        df.groupby("k1")["nope"]
+    with pytest.raises(ValueError, match="empty"):
+        df.groupby("k1")[[]]
+    with pytest.raises(TypeError):
+        df.groupby("k1")[[3]]
+    # agg() is unaffected by selection; explicit specs still name any column
+    out = df.groupby("k1")["x"].agg(ym=("y", "mean")).collect().to_numpy()
+    assert set(out) == {"k1", "ym"}

@@ -89,33 +89,43 @@ def test_col_words():
 # -- compact regressions (satellite) ------------------------------------------
 
 
+class _SpyKernels:
+    """Registry stand-in: anything with a ``prefix_sum`` attribute satisfies
+    compact's kernel-set contract (attribute access only)."""
+
+    def __init__(self, fn):
+        self.prefix_sum = fn
+
+
 def test_compact_empty_shard():
     """A zero-length shard short-circuits: no prefix scan runs, output is a
     zero-filled buffer with count 0 and no overflow."""
     def boom(_):
-        raise AssertionError("prefix_fn must not run on empty input")
+        raise AssertionError("prefix_sum must not run on empty input")
 
     cols = {"x": jnp.zeros((0,), jnp.float32),
             "w": jnp.zeros((0, 3), jnp.uint32)}      # packed-word matrix too
     out, cnt, ovf = phys.compact(cols, jnp.zeros((0,), jnp.bool_), 4,
-                                 prefix_fn=boom)
+                                 kernels=_SpyKernels(boom))
     assert out["x"].shape == (4,) and out["w"].shape == (4, 3)
     assert int(cnt) == 0 and not bool(ovf)
 
 
-def test_compact_integer_keep_matches_bool_and_uses_prefix_fn():
-    """Integer 0/1 keep takes the same (kernel) fast path as boolean keep."""
+def test_compact_integer_keep_matches_bool_and_uses_kernel():
+    """Integer 0/1 keep takes the same (registry prefix_sum) fast path as
+    boolean keep."""
     calls = []
 
     def spy_prefix(x):
         calls.append(x.dtype)
         return jnp.cumsum(x)
 
+    spy = _SpyKernels(spy_prefix)
     x = jnp.asarray(np.arange(8, dtype=np.float32))
     keep_b = jnp.asarray(np.array([1, 0, 1, 1, 0, 0, 1, 0], bool))
     keep_i = keep_b.astype(jnp.int32)
-    out_b, cnt_b, _ = phys.compact({"x": x}, keep_b, 8, prefix_fn=spy_prefix)
-    out_i, cnt_i, _ = phys.compact({"x": x}, keep_i, 8, prefix_fn=spy_prefix)
+    out_b, cnt_b, _ = phys.compact({"x": x}, keep_b, 8, kernels=spy)
+    out_i, cnt_i, _ = phys.compact({"x": x}, keep_i, 8, kernels=spy)
     assert len(calls) == 2 and all(d == jnp.int32 for d in calls)
     np.testing.assert_array_equal(np.asarray(out_b["x"]), np.asarray(out_i["x"]))
     assert int(cnt_b) == int(cnt_i) == 4

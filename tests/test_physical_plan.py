@@ -418,4 +418,9 @@ def test_elided_plan_matches_unelided_results():
     off = a.collect(hf.ExecConfig(elide_exchanges=False)).to_numpy()
     oo, of = (np.lexsort((on["k2"], on["k1"])), np.lexsort((off["k2"], off["k1"])))
     for k in on:
-        np.testing.assert_allclose(on[k][oo], off[k][of], rtol=1e-5)
+        # atol absorbs f32 summation-order round-off: the elided and
+        # unelided plans feed group sums rows in different orders, and the
+        # Pallas segment_sums backend (use_pallas != "off") accumulates
+        # directly instead of via scan differences.
+        np.testing.assert_allclose(on[k][oo], off[k][of], rtol=1e-5,
+                                   atol=1e-4)

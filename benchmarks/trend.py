@@ -1,0 +1,85 @@
+"""Bench trend gate: diff the two newest BENCH_*.json snapshots.
+
+``python -m benchmarks.trend [old.json new.json]`` — with no arguments the
+two newest ``BENCH_*.json`` files in the repo root are compared (newest =
+highest number in the name).  For every row name present in BOTH snapshots
+the us_per_call ratio is printed; any shared row slower by more than
+``--threshold`` (default 25%) fails the run with exit code 1 — the CI
+bench-smoke regression gate.  Rows only one side has (new benches, retired
+benches) are listed but never fail; if the snapshots share no rows at all
+the gate passes vacuously with a warning.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _latest_two(root: str) -> tuple[str, str]:
+    snaps = sorted(glob.glob(os.path.join(root, "BENCH_*.json")))
+    if len(snaps) < 2:
+        sys.exit(f"trend: need two BENCH_*.json snapshots under {root}, "
+                 f"found {len(snaps)}")
+    return snaps[-2], snaps[-1]
+
+
+def _rows(path: str) -> dict[str, float]:
+    with open(path) as f:
+        doc = json.load(f)
+    return {r["name"]: float(r["us_per_call"]) for r in doc["rows"]}
+
+
+def compare(old_path: str, new_path: str, threshold: float = 0.25,
+            out=sys.stdout) -> list[str]:
+    """Return the names of shared rows regressing past ``threshold``."""
+    old, new = _rows(old_path), _rows(new_path)
+    shared = sorted(set(old) & set(new))
+    print(f"trend: {os.path.basename(old_path)} -> "
+          f"{os.path.basename(new_path)}  ({len(shared)} shared rows, "
+          f"gate at +{threshold:.0%})", file=out)
+    regressed = []
+    for name in shared:
+        ratio = new[name] / old[name] if old[name] > 0 else float("inf")
+        flag = ""
+        if ratio > 1.0 + threshold:
+            regressed.append(name)
+            flag = "  <-- REGRESSION"
+        print(f"  {name}: {old[name]:.1f} -> {new[name]:.1f} us "
+              f"({ratio - 1.0:+.1%} vs old){flag}", file=out)
+    for name in sorted(set(new) - set(old)):
+        print(f"  {name}: (new row, {new[name]:.1f} us)", file=out)
+    for name in sorted(set(old) - set(new)):
+        print(f"  {name}: (retired row)", file=out)
+    if not shared:
+        print("trend: WARNING — no shared rows; gate passes vacuously",
+              file=out)
+    return regressed
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("snapshots", nargs="*",
+                    help="old.json new.json (default: two newest "
+                         "BENCH_*.json in the repo root)")
+    ap.add_argument("--threshold", type=float, default=0.25,
+                    help="fail when new/old - 1 exceeds this (default 0.25)")
+    args = ap.parse_args()
+    if len(args.snapshots) == 2:
+        old_path, new_path = args.snapshots
+    elif not args.snapshots:
+        old_path, new_path = _latest_two(REPO_ROOT)
+    else:
+        ap.error("pass exactly two snapshot paths, or none")
+    regressed = compare(old_path, new_path, args.threshold)
+    if regressed:
+        sys.exit(f"trend: {len(regressed)} row(s) regressed past "
+                 f"+{args.threshold:.0%}: {regressed}")
+
+
+if __name__ == "__main__":
+    main()

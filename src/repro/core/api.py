@@ -301,10 +301,18 @@ class DataFrame:
                                force_rep=self._force_rep())
             t = lowered()
             if not t.overflow or _attempt == retries:
+                if cfg.adaptive_stats and not t.overflow:
+                    # feed realized per-shard counts back into the
+                    # per-fingerprint stats store: a repeated run of this
+                    # exact plan sizes PartialAgg from the true group count
+                    # and lowers the salting threshold if skew materialized.
+                    from . import stats as _st
+                    _st.record_realized(lowered.root, np.asarray(t.counts))
                 return lowered, t
             cfg = _dc.replace(cfg,
                               join_expansion=max(cfg.join_expansion, 1.0) * 2,
                               shuffle_slack=cfg.shuffle_slack * 2,
+                              stats_cap_slack=cfg.stats_cap_slack * 2,
                               agg_group_cap=(max(1, cfg.agg_group_cap) * 2
                                              if cfg.agg_group_cap is not None
                                              else None))
@@ -398,13 +406,19 @@ class DataFrame:
         columns or append a root rebalance, which introspection omits)."""
         from . import optimizer as opt
         from . import physical_plan as pp
+        from . import stats as st
         root = self.node
         if cfg.optimize_plan:
             root, _ = opt.optimize(root)
         info = D.infer(root, force_rep=self._force_rep(),
                        broadcast_join=cfg.broadcast_join)
         root = D.insert_rebalance(root, info)
-        return root, info, pp.plan_physical(root, info.dists, cfg)
+        # Introspection always carries a stats context so explain() can
+        # annotate estimated rows/bytes per exchange; it only changes
+        # DECISIONS (salting, cheap side, auto caps) under
+        # cfg.adaptive_stats — plans stay byte-identical with adaptive off.
+        sctx = st.analyze(root, cfg)
+        return root, info, pp.plan_physical(root, info.dists, cfg, stats=sctx)
 
     def physical_plan(self, cfg: ExecConfig | None = None):
         """The property-driven physical plan (core/physical_plan.py) this
@@ -418,9 +432,26 @@ class DataFrame:
         """Logical plan with distribution annotations, followed by the
         physical plan: one line per operator with its provided partitioning
         and ordering, exchange/sort insertions made explicit, and a leading
-        shuffle/sort census."""
+        shuffle/sort census.  Exchanges carry estimated rows/bytes from the
+        sampled statistics pass, and a trailing line compares the root's
+        estimate against REALIZED counts when a previous adaptive run of
+        this exact plan fingerprint recorded them."""
+        from . import stats as st
         root, info, pplan = self._plan(cfg or ExecConfig())
-        return ir.plan_str(root, info.dists) + "\n\n" + pplan.render()
+        txt = ir.plan_str(root, info.dists) + "\n\n" + pplan.render()
+        est = pplan.root_op.rows_est
+        tail = []
+        if est is not None:
+            tail.append(f"estimated output rows ~{int(est)}")
+        rl = st.realized_for(root)
+        if rl is not None:
+            tail.append(
+                f"realized (previous run): {rl['rows']} rows over "
+                f"{rl['nshards']} shards, per-shard max/mean "
+                f"{rl['max']}/{rl['mean']:.1f}")
+        if tail:
+            txt += "\nstats: " + "; ".join(tail)
+        return txt
 
     def __repr__(self):
         return f"DataFrame({list(self.node.schema)})\n{ir.plan_str(self.node)}"
@@ -521,6 +552,58 @@ class GroupBy:
             return self.size(name="count")
         return self.agg(**{c: AggExpr(fn, ColRef(self.df.node.id, c))
                            for c in cols})
+
+    def transform(self, fn: str | None = None, **aggs) -> DataFrame:
+        """Broadcast per-group aggregates back onto the rows (pandas
+        ``groupby().transform``): aggregate, then join the result back on
+        the group keys — every original row and column survives, with the
+        group statistic alongside.
+
+        Two spellings: ``transform("mean")`` applies the fn to every
+        (selected) non-key column as ``<col>_<fn>``;
+        ``transform(z=("x", "sum"))`` names outputs like :meth:`agg`.
+
+        The broadcast join shares the groupby's keys, so under
+        ``adaptive_stats`` a hot group rides the salted-join path and the
+        tiny aggregated side replicates instead of pinning one shard.
+        """
+        if fn is not None:
+            if aggs:
+                raise TypeError(
+                    "transform: pass a single fn OR name=(column, fn) "
+                    "specs, not both")
+            f = _AGG_ALIASES.get(fn, fn)
+            if f not in AGG_FNS:
+                raise TypeError(f"transform: unknown fn {fn!r}; valid: "
+                                f"{AGG_FNS} (+ aliases {tuple(_AGG_ALIASES)})")
+            if self._select is not None:
+                cols = [c for c in self._select if c not in self.keys]
+            else:
+                cols = [c for c in self.df.node.schema if c not in self.keys]
+            if not cols:
+                raise ValueError("transform: no value columns to aggregate")
+            aggs = {f"{c}_{f}": (c, f) for c in cols}
+        if not aggs:
+            raise ValueError(
+                "transform() needs a fn or at least one name=(column, fn)")
+        clash = sorted(set(aggs) & set(self.df.node.schema))
+        if clash:
+            raise ValueError(f"transform: output names {clash} collide "
+                             f"with existing columns")
+        return self.df.merge(self.agg(**aggs), on=list(self.keys))
+
+    def head(self, n: int = 5) -> DataFrame:
+        """First ``n`` rows per group, pandas ``groupby().head``: fused as
+        ``row_number() <= n`` riding the grouped-sort layout the segment
+        machinery already establishes — ONE hash exchange total (elided
+        entirely on a frame persisted on the keys), and the filter itself
+        is collective-free.  Row selection matches pandas exactly: the
+        block exchange and stable local sort preserve each group's original
+        arrival order."""
+        if n < 0:
+            raise ValueError(f"head: n must be >= 0, got {n}")
+        w = row_number(self.df, list(self.keys), None, out="__rn__")
+        return w[w["__rn__"] <= n].drop("__rn__")
 
     def sum(self) -> DataFrame:     return self._apply_all("sum")
     def mean(self) -> DataFrame:    return self._apply_all("mean")

@@ -406,9 +406,15 @@ class Window(Node):
         self.partition_by = as_keys(self.partition_by) if self.partition_by else ()
         self.order_by = as_keys(self.order_by) if self.order_by else ()
         if self.kind in RANK_KINDS:
-            if not self.partition_by or not self.order_by:
+            # row_number without order_by is well-defined: 1-based position
+            # in post-exchange arrival order (segment_rank ignores order
+            # keys for it) — the per-group top-k fusion relies on this.
+            # rank/dense_rank compare order-key values, so they require one.
+            need_order = self.kind != "row_number"
+            if not self.partition_by or (need_order and not self.order_by):
                 raise ValueError(
-                    f"{self.kind} requires partition_by and order_by keys")
+                    f"{self.kind} requires partition_by"
+                    f"{' and order_by keys' if need_order else ''}")
         elif self.order_by and not self.partition_by:
             # A global ORDER BY (no PARTITION BY) would need a global
             # re-sort before the scan/stencil; silently computing in

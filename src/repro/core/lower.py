@@ -84,6 +84,26 @@ class ExecConfig:
     # capacity-overflow auto-retry (runtime/ft.py semantics, built into
     # collect): replan with doubled expansion, at most this many times.
     auto_retry: int = 3
+    # -- adaptive statistics (core/stats.py; docs/adaptive_planning.md) -----
+    # adaptive_stats: build a sampled StatsContext per plan and let it make
+    # planner DECISIONS: salted skew joins, cheaper-side re-exchange for
+    # mixed-alignment joins, and PartialAgg auto-capacity from the
+    # distinct-count estimate (plus realized feedback from previous runs of
+    # the same plan fingerprint).  Off by default: plans are byte-identical
+    # to the stats-blind planner.  explain() annotates estimates either way.
+    adaptive_stats: bool = False
+    # salt_threshold: sampled key frequency above which a join key counts as
+    # a heavy hitter and gets salted across salt_factor sub-partitions.
+    # Halved automatically when realized feedback shows shard skew.
+    salt_threshold: float = 0.1
+    salt_factor: int = 8
+    # stats_sample: rows sampled per base table (even-position, like
+    # sample_sort's splitter sampling).
+    stats_sample: int = 256
+    # stats_cap_slack: headroom multiplier on SAMPLED estimates when they
+    # size buffers (realized feedback is exact and gets none).  Doubled by
+    # the overflow-retry loop alongside shuffle_slack.
+    stats_cap_slack: float = 2.0
 
     def __post_init__(self):
         if not self.use_pallas:
@@ -274,12 +294,31 @@ class Lowered:
                 elif isinstance(op, pp.MergeJoin):
                     lcols, lcnt = env[op.inputs[0]]
                     rcols, rcnt = env[op.inputs[1]]
+                    lon, ron = n.left_on, n.right_on
+                    if op.salted:
+                        # join on keys+salt: each (probe, build) key match
+                        # agrees on exactly one salt (see pp.SaltOp).
+                        lon = lon + (phys.SALT_COL,)
+                        ron = ron + (phys.SALT_COL,)
                     smap = {c: n.right_out_name(c) for c in rcols
-                            if c not in n.right_on}
+                            if c not in ron}
                     out, cnt2, ovf = phys.merge_join(
-                        lcols, lcnt, rcols, rcnt, n.left_on, n.right_on,
+                        lcols, lcnt, rcols, rcnt, lon, ron,
                         cap_out=op.cap, r_suffix_map=smap, how=n.how)
                     flags.append(ovf)
+                    out.pop(phys.SALT_COL, None)    # strip probe-side salt
+                    res = (out, cnt2)
+
+                elif isinstance(op, pp.SaltOp):
+                    cols, cnt = env[op.inputs[0]]
+                    if op.build:
+                        out, cnt2, ovf = phys.salt_build(
+                            cols, cnt, op.keys, op.hot, op.R,
+                            cap_out=op.cap, kernels=kernels)
+                        flags.append(ovf)
+                    else:
+                        out, cnt2 = phys.salt_probe(cols, cnt, op.keys,
+                                                    op.hot, op.R)
                     res = (out, cnt2)
 
                 elif isinstance(op, pp.AggPrep):
@@ -504,6 +543,10 @@ def lower(root: ir.Node, cfg: ExecConfig | None = None,
     order = ir.topo_order(root)
     source_rows = {n.id: pp.scan_rows(n)
                    for n in order if isinstance(n, ir.Scan)}
-    pplan = pp.plan_physical(root, info.dists, cfg)
+    sctx = None
+    if cfg.adaptive_stats:
+        from . import stats as st
+        sctx = st.analyze(root, cfg)
+    pplan = pp.plan_physical(root, info.dists, cfg, stats=sctx)
     pp.plan_capacities(pplan, Pn, cfg, source_rows)
     return Lowered(root, cfg, info.dists, pplan), stats

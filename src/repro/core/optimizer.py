@@ -38,6 +38,51 @@ def _consumers(root: ir.Node) -> dict[int, int]:
     return counts
 
 
+def column_provenance(root: ir.Node) -> dict[int, dict[str, tuple[int, str]]]:
+    """For every node, map each output column to the SCAN column it is a pure
+    pass-through of: node id -> {col name: (scan id, scan col)}.
+
+    Only value-preserving paths count (renames, filters, joins carrying a
+    side's columns, aggregate keys); computed columns and aggregate outputs
+    have no entry.  This is the liveness-style analysis the sampled
+    statistics pass (core/stats.py) uses to answer "which base-table sample
+    describes this node's key columns" without materializing anything.
+    """
+    prov: dict[int, dict[str, tuple[int, str]]] = {}
+    for n in ir.topo_order(root):
+        if isinstance(n, ir.Scan):
+            prov[n.id] = {c: (n.id, c) for c in n.columns}
+        elif isinstance(n, ir.Project):
+            child = prov.get(n.child.id, {})
+            prov[n.id] = {out: child[e.name]
+                          for out, e in n.cols.items()
+                          if isinstance(e, ColRef) and e.name in child}
+        elif isinstance(n, ir.Join):
+            left = prov.get(n.left.id, {})
+            right = prov.get(n.right.id, {})
+            m = dict(left)                      # keys unified into left names
+            for c, src in right.items():
+                if c in n.right_on:
+                    continue
+                m.setdefault(n.right_out_name(c), src)
+            prov[n.id] = m
+        elif isinstance(n, ir.Aggregate):
+            child = prov.get(n.child.id, {})
+            prov[n.id] = {k: child[k] for k in n.key if k in child}
+        elif isinstance(n, ir.Window):
+            child = prov.get(n.child.id, {})
+            prov[n.id] = {c: s for c, s in child.items() if c != n.out}
+        elif isinstance(n, ir.Concat):
+            prov[n.id] = {}                     # rows from multiple scans
+        elif n.children:
+            # Filter / Sort / Limit / Repartition / Rebalance: row-subset or
+            # row-reorder ops — every column passes through by value.
+            prov[n.id] = dict(prov.get(n.children[0].id, {}))
+        else:
+            prov[n.id] = {}
+    return prov
+
+
 # ---------------------------------------------------------------------------
 # predicate pushdown
 # ---------------------------------------------------------------------------

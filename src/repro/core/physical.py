@@ -131,6 +131,60 @@ def compact(cols: dict[str, jax.Array], keep: jax.Array, cap_out: int,
 
 
 # ---------------------------------------------------------------------------
+# skew salting (adaptive_stats; docs/adaptive_planning.md)
+# ---------------------------------------------------------------------------
+
+# The salt column a salted join's two SaltOps inject and the join strips.
+SALT_COL = "__salt__"
+
+
+def hot_mask(cols: dict[str, jax.Array], key_names: Sequence[str],
+             hot: Sequence[tuple]) -> jax.Array:
+    """Boolean row mask: key tuple ∈ ``hot`` (a STATIC plan constant — the
+    same literal set on both join sides, so membership agrees exactly)."""
+    cap = cols[key_names[0]].shape[0]
+    m = jnp.zeros((cap,), dtype=bool)
+    for vals in hot:
+        eq = jnp.ones((cap,), dtype=bool)
+        for kn, v in zip(key_names, vals):
+            c = cols[kn]
+            eq = eq & (c == jnp.asarray(v, c.dtype))
+        m = m | eq
+    return m
+
+
+def salt_probe(cols: dict[str, jax.Array], count, key_names: Sequence[str],
+               hot: Sequence[tuple], R: int):
+    """Probe-side salting: hot rows get salt ``position % R`` (spreading a
+    hot key's rows over R sub-partitions of the keys+salt exchange), every
+    other row salt 0.  Row set and order unchanged; returns (cols, count)."""
+    cap = cols[key_names[0]].shape[0]
+    is_hot = hot_mask(cols, key_names, hot)
+    salt = jnp.where(is_hot, jnp.arange(cap, dtype=jnp.int32) % R,
+                     jnp.int32(0))
+    out = dict(cols)
+    out[SALT_COL] = salt
+    return out, count
+
+
+def salt_build(cols: dict[str, jax.Array], count, key_names: Sequence[str],
+               hot: Sequence[tuple], R: int, cap_out: int, kernels=None):
+    """Build-side salting: hot rows are replicated to every salt 0..R-1 so
+    each probe sub-partition finds its match; non-hot rows keep one salt-0
+    copy.  Every (probe row, build row) pair with equal keys then agrees on
+    exactly ONE salt value — the salted join's row set is exactly the
+    unsalted one.  Returns (cols, count, overflow) via :func:`compact`."""
+    cap = cols[key_names[0]].shape[0]
+    is_hot = hot_mask(cols, key_names, hot)
+    valid = valid_mask(count, cap)
+    rep = {name: jnp.concatenate([v] * R)       # replica r at rows [r*cap, ...)
+           for name, v in cols.items()}
+    rep[SALT_COL] = jnp.repeat(jnp.arange(R, dtype=jnp.int32), cap)
+    keep = jnp.tile(valid, R) & ((rep[SALT_COL] == 0) | jnp.tile(is_hot, R))
+    return compact(rep, keep, cap_out, kernels=kernels)
+
+
+# ---------------------------------------------------------------------------
 # column packing — the byte-transport layer of the packed exchange
 # ---------------------------------------------------------------------------
 

@@ -46,7 +46,7 @@ from . import distribution as D
 from . import ir
 from .expr import ColRef
 from .physical import (AGG_DECOMP, DECOMPOSABLE_AGGS, PACK_WORD_BYTES,
-                       col_words)
+                       SALT_COL, col_words)
 
 
 # ---------------------------------------------------------------------------
@@ -163,6 +163,12 @@ class POp:
     # output schema estimate (name -> np.dtype), filled by annotate_schemas;
     # drives the collective/byte census of the packed exchange.
     schema: dict = field(default_factory=dict)
+    # display-only annotations from the sampled statistics pass (core/stats):
+    # estimated OUTPUT rows, and a free-text planner note (e.g. which side a
+    # cheap-side decision picked).  Never consulted by capacity planning or
+    # the census — plans stay byte-identical whether they are set or not.
+    rows_est: Optional[float] = None
+    note: str = ""
 
     def short(self) -> str:
         return type(self).__name__
@@ -217,16 +223,46 @@ class LocalSort(POp):
 
 
 @dataclass(eq=False)
+class SaltOp(POp):
+    """Skew-salting prologue (adaptive_stats only; docs/adaptive_planning.md).
+
+    Injects a ``__salt__`` column so the ``hot`` heavy-hitter key tuples
+    spread over ``R`` sub-partitions of the downstream keys+salt exchange.
+    ``build=False`` (probe side): hot rows get salt ``position % R``, others
+    salt 0.  ``build=True``: hot rows are replicated to every salt 0..R-1,
+    others keep a single salt-0 copy — each (probe row, build row) key match
+    then agrees on exactly one salt, so the join result is exactly the
+    unsalted one.  The ``hot`` set is a static plan constant shared by both
+    sides; a wrong estimate costs balance, never correctness.
+    """
+
+    keys: tuple[str, ...] = ()
+    hot: tuple[tuple, ...] = ()     # heavy-hitter key VALUE tuples
+    R: int = 2
+    build: bool = False
+    hot_frac: float = 0.0           # est. input fraction that is hot (+margin)
+
+    def short(self):
+        side = "build" if self.build else "probe"
+        return f"Salt[{side}](R={self.R}, hot={len(self.hot)})"
+
+
+@dataclass(eq=False)
 class MergeJoin(POp):
     """Rank-based merge join of co-partitioned (NOT necessarily sorted)
     inputs; one fused union sort internally (physical.merge_join)."""
 
     broadcast: bool = False
+    # salted: both inputs carry a __salt__ column (SaltOp) — join on
+    # keys+salt, strip the salt from the output.
+    salted: bool = False
 
     def short(self):
         n = self.node
         pairs = ",".join(f"{l}=={r}" for l, r in zip(n.left_on, n.right_on))
-        return f"MergeJoin({pairs}{', broadcast' if self.broadcast else ''})"
+        tag = ", broadcast" if self.broadcast else ""
+        tag += ", salted" if self.salted else ""
+        return f"MergeJoin({pairs}{tag})"
 
 
 @dataclass(eq=False)
@@ -241,8 +277,17 @@ class PartialAgg(POp):
     partial statistics BEFORE the hash exchange, so the wire carries at most
     this shard's distinct key tuples (physical.partial_aggregate)."""
 
+    # adaptive_stats: distinct-group estimate that sizes this op's capacity
+    # (and thereby the post-partial exchange bucket) when the user declared
+    # no agg_group_cap.  ndv_src records where it came from ("sample" or
+    # "realized" — the per-fingerprint feedback store).
+    ndv_est: Optional[int] = None
+    ndv_src: str = ""
+
     def short(self):
-        return f"PartialAgg(by={','.join(self.node.key)})"
+        tag = (f", ndv~{self.ndv_est} ({self.ndv_src})"
+               if self.ndv_est is not None else "")
+        return f"PartialAgg(by={','.join(self.node.key)}{tag})"
 
 
 @dataclass(eq=False)
@@ -331,10 +376,12 @@ class PhysicalPlan:
         """Data-movement / sort census used by tests, explain and benches."""
         c = {"hash_exchanges": 0, "local_sorts": 0, "sample_sorts": 0,
              "rebalances": 0, "merge_joins": 0, "segment_aggs": 0,
-             "partial_aggs": 0}
+             "partial_aggs": 0, "salt_ops": 0}
         for op in self.ops:
             if isinstance(op, HashExchange):
                 c["hash_exchanges"] += 1
+            elif isinstance(op, SaltOp):
+                c["salt_ops"] += 1
             elif isinstance(op, LocalSort):
                 c["local_sorts"] += 1
             elif isinstance(op, SampleSort):
@@ -433,10 +480,14 @@ class PhysicalPlan:
             if isinstance(op, (HashExchange, SampleSort, RebalanceOp)):
                 wire = (f" wire={self.op_collectives(op)}coll/"
                         f"{self.op_row_bytes(op)}B-row")
+                if op.rows_est is not None:
+                    est_b = int(op.rows_est) * self.op_row_bytes(op)
+                    wire += f" est~{int(op.rows_est)}r/~{est_b}B"
+            note = f"  [{op.note}]" if op.note else ""
             lines.append(
                 f"  #{op.op_id} {op.short()}  <- [{src}]  "
                 f"part={op.part.short()} order={op.order.short()}"
-                f"  [{op.dist}]{cap}{bkt}{wire}")
+                f"  [{op.dist}]{cap}{bkt}{wire}{note}")
         return "\n".join(lines)
 
 
@@ -485,7 +536,8 @@ def _restrict_props(part: Partitioning, order: Ordering,
 # ---------------------------------------------------------------------------
 
 
-def plan_physical(root: ir.Node, dists: dict[int, str], cfg) -> PhysicalPlan:
+def plan_physical(root: ir.Node, dists: dict[int, str], cfg,
+                  stats=None) -> PhysicalPlan:
     """Walk the distribution-annotated logical plan; insert exchanges and
     sorts only where a required property is not provided.
 
@@ -497,10 +549,18 @@ def plan_physical(root: ir.Node, dists: dict[int, str], cfg) -> PhysicalPlan:
     exchange survives and whose agg fns are all decomposable splits into
     PartialAgg -> HashExchange -> LocalSort -> SegmentAgg(combine), so each
     shard ships at most its distinct local key groups.
+
+    ``stats`` is an optional :class:`core.stats.StatsContext`.  When passed
+    it always ANNOTATES (per-op ``rows_est`` estimates for explain), but it
+    only changes planner DECISIONS — salted joins, cheaper-side
+    re-exchange, PartialAgg ndv sizing — under ``cfg.adaptive_stats``, so a
+    plan built with adaptive off is structurally byte-identical with or
+    without a stats context (docs/adaptive_planning.md).
     """
     plan = PhysicalPlan(packed=getattr(cfg, "packed_exchange", True), cfg=cfg)
     elide = getattr(cfg, "elide_exchanges", True)
     partial_agg = getattr(cfg, "partial_agg", True)
+    adaptive = stats is not None and getattr(cfg, "adaptive_stats", False)
 
     # Live shard count, resolved lazily: persisted-scan hash/range claims are
     # only valid at the shard count they were produced under (routing is
@@ -515,16 +575,31 @@ def plan_physical(root: ir.Node, dists: dict[int, str], cfg) -> PhysicalPlan:
 
     def emit(cls, node, inputs, part, order, **kw) -> POp:
         d = dists[node.id]
-        return plan.add(cls(node=node, inputs=tuple(i.op_id for i in inputs),
-                            part=part, order=order, dist=d, **kw))
+        op = plan.add(cls(node=node, inputs=tuple(i.op_id for i in inputs),
+                          part=part, order=order, dist=d, **kw))
+        if stats is not None:
+            op.rows_est = stats.rows_est.get(node.id)
+        return op
 
     def hash_exchange(node, src: POp, keys: tuple[str, ...]) -> POp:
-        return emit(HashExchange, node, (src,), Partitioning("hash", keys),
-                    UNORDERED, keys=keys)
+        op = emit(HashExchange, node, (src,), Partitioning("hash", keys),
+                  UNORDERED, keys=keys)
+        op.rows_est = src.rows_est      # an exchange moves its INPUT's rows
+        return op
 
     def local_sort(node, src: POp, keys: tuple[str, ...]) -> POp:
-        return emit(LocalSort, node, (src,), src.part, Ordering(keys, True),
-                    keys=keys)
+        op = emit(LocalSort, node, (src,), src.part, Ordering(keys, True),
+                  keys=keys)
+        op.rows_est = src.rows_est
+        return op
+
+    def _est_shuffle_bytes(node: ir.Node) -> Optional[float]:
+        """Estimated wire bytes of re-exchanging ``node``'s output: rows
+        estimate x packed row width (mirrors shuffle_row_bytes)."""
+        rows = stats.rows_est.get(node.id) if stats is not None else None
+        if rows is None:
+            return None
+        return rows * _row_words(node.schema) * PACK_WORD_BYTES
 
     for n in ir.topo_order(root):
         if isinstance(n, ir.Scan):
@@ -702,27 +777,92 @@ def plan_physical(root: ir.Node, dists: dict[int, str], cfg) -> PhysicalPlan:
             l, r = plan.final_op(n.left), plan.final_op(n.right)
             broadcast = dists[n.right.id] == D.REP and cfg.broadcast_join
             rep_join = dists[n.id] == D.REP and not broadcast
+            salted = False
             if not broadcast and not rep_join:
                 il = _hash_alignment(l.part, n.left_on) if elide else None
                 ir_ = _hash_alignment(r.part, n.right_on) if elide else None
-                if il is not None and il == ir_:
+                # --- adaptive: salted skew join (docs/adaptive_planning.md).
+                # Heavy-hitter probe keys spread over R keys+salt
+                # sub-partitions; the build side replicates its hot rows
+                # R-ways so every (probe, build) match agrees on exactly one
+                # salt.  Free when both sides pay an exchange anyway; when
+                # only the build side is pre-aligned we salt iff its
+                # estimated re-exchange bytes are below the probe side's.
+                # Never when the PROBE side is aligned — salting would
+                # forfeit that elision.
+                hot: tuple = ()
+                R = int(getattr(cfg, "salt_factor", 8))
+                if adaptive and R > 1:
+                    thr = float(getattr(cfg, "salt_threshold", 0.1))
+                    if stats.skewed_before(n):
+                        thr /= 2.0      # realized skew: salt more eagerly
+                    hot = stats.hot_keys(n.left, n.left_on, thr)
+                if hot:
+                    lb = _est_shuffle_bytes(n.left)
+                    rb = _est_shuffle_bytes(n.right)
+                    salted = (il is None and ir_ is None) or (
+                        il is None and ir_ is not None
+                        and lb is not None and rb is not None and rb <= lb)
+                if salted:
+                    hf = stats.hot_fraction(n.right, n.right_on, hot)
+                    vals = tuple(k for k, _f in hot)
+                    sp = emit(SaltOp, n, (l,), l.part, l.order,
+                              keys=n.left_on, hot=vals, R=R, build=False)
+                    sp.rows_est = l.rows_est
+                    l = hash_exchange(n, sp, n.left_on + (SALT_COL,))
+                    sb = emit(SaltOp, n, (r,), r.part, r.order,
+                              keys=n.right_on, hot=vals, R=R, build=True,
+                              hot_frac=1.0 if hf is None else hf)
+                    sb.rows_est = r.rows_est
+                    r = hash_exchange(n, sb, n.right_on + (SALT_COL,))
+                    # salt is stripped post-join, so a full-key group may
+                    # straddle shards: the output provides NO co-location.
+                    part = BLOCK
+                elif il is not None and il == ir_:
                     idx = il
+                    part = Partitioning("hash",
+                                        tuple(n.left_on[i] for i in idx))
+                elif il is not None and ir_ is not None and adaptive:
+                    # both sides aligned on DIFFERENT key subsequences: one
+                    # must re-hash.  The static rule keeps the left; stats
+                    # pick whichever side ships fewer estimated bytes.
+                    lb = _est_shuffle_bytes(n.left)
+                    rb = _est_shuffle_bytes(n.right)
+                    if lb is not None and rb is not None and lb < rb:
+                        idx = ir_
+                        l = hash_exchange(n, l,
+                                          tuple(n.left_on[i] for i in idx))
+                        l.note = (f"cheap side: re-hash left "
+                                  f"~{int(lb)}B < ~{int(rb)}B")
+                    else:
+                        idx = il
+                        r = hash_exchange(n, r,
+                                          tuple(n.right_on[i] for i in idx))
+                        if lb is not None and rb is not None:
+                            r.note = (f"cheap side: re-hash right "
+                                      f"~{int(rb)}B <= ~{int(lb)}B")
+                    part = Partitioning("hash",
+                                        tuple(n.left_on[i] for i in idx))
                 elif il is not None:
                     idx = il
                     r = hash_exchange(n, r, tuple(n.right_on[i] for i in idx))
+                    part = Partitioning("hash",
+                                        tuple(n.left_on[i] for i in idx))
                 elif ir_ is not None:
                     idx = ir_
                     l = hash_exchange(n, l, tuple(n.left_on[i] for i in idx))
+                    part = Partitioning("hash",
+                                        tuple(n.left_on[i] for i in idx))
                 else:
-                    idx = tuple(range(len(n.left_on)))
                     l = hash_exchange(n, l, n.left_on)
                     r = hash_exchange(n, r, n.right_on)
-                part = Partitioning("hash", tuple(n.left_on[i] for i in idx))
+                    part = Partitioning("hash", n.left_on)
             else:
                 part = l.part
             # output rows follow left row order (each left row repeated per
             # match), so the left ordering survives verbatim.
-            op = emit(MergeJoin, n, (l, r), part, l.order, broadcast=broadcast)
+            op = emit(MergeJoin, n, (l, r), part, l.order,
+                      broadcast=broadcast, salted=salted)
 
         elif isinstance(n, ir.Aggregate):
             c = plan.final_op(n.child)
@@ -744,8 +884,22 @@ def plan_physical(root: ir.Node, dists: dict[int, str], cfg) -> PhysicalPlan:
                 if not (elide and grouped(src.order, n.key)
                         and src.order.ascending):
                     src = local_sort(n, src, n.key)
+                # adaptive: size the partial-agg buckets (and thereby the
+                # post-partial exchange) from a distinct-group estimate —
+                # realized feedback from a previous run of this exact plan
+                # wins over the sampled estimate.  Only consulted by
+                # compute_capacities when the user declared no agg_group_cap.
+                nd, nsrc = None, ""
+                if adaptive:
+                    rl = stats.realized(n)
+                    if rl is not None:
+                        nd, nsrc = int(rl["rows"]), "realized"
+                    else:
+                        d = stats.ndv_cap(n.child, n.key)
+                        if d is not None:
+                            nd, nsrc = int(d), "sample"
                 src = emit(PartialAgg, n, (src,), src.part,
-                           Ordering(n.key, True))
+                           Ordering(n.key, True), ndv_est=nd, ndv_src=nsrc)
                 src = hash_exchange(n, src, n.key)
                 src = local_sort(n, src, n.key)
                 op = emit(SegmentAgg, n, (src,), src.part,
@@ -800,6 +954,9 @@ def annotate_schemas(plan: PhysicalPlan) -> None:
         n = op.node
         if isinstance(op, (HashExchange, LocalSort)):
             op.schema = dict(plan.ops[op.inputs[0]].schema)
+        elif isinstance(op, SaltOp):
+            op.schema = dict(plan.ops[op.inputs[0]].schema)
+            op.schema[SALT_COL] = i32
         elif isinstance(op, AggPrep):
             base = plan.ops[op.inputs[0]].schema
             sch = {k: base.get(k, f32) for k in n.key}
@@ -911,10 +1068,30 @@ def compute_capacities(plan: PhysicalPlan, P: int, cfg,
         elif isinstance(op, RebalanceOp):
             bucket = ins[0][0]
             cap = ins[0][0]
+        elif isinstance(op, SaltOp):
+            cap = ins[0][0]
+            if op.build:
+                # hot build rows gain R-1 replicas.  Safe mode bounds by the
+                # all-hot worst case; otherwise size replicas off the
+                # estimated hot fraction (overflow-retry backstops a lie).
+                if safe:
+                    cap = max(1, op.R * cap)
+                else:
+                    extra = max(32, int(np.ceil(cap * op.hot_frac * slack)))
+                    cap = cap + (op.R - 1) * min(extra, cap)
         elif isinstance(op, PartialAgg):
             cap = ins[0][0]
             if group_cap is not None:
                 cap = max(1, min(cap, int(group_cap)))
+            elif op.ndv_est is not None:
+                # adaptive auto-cap: local distinct groups never exceed the
+                # GLOBAL group count, so realized feedback is an exact bound;
+                # a sampled estimate gets stats_cap_slack headroom (the
+                # overflow-retry loop widens it further if the sample lied).
+                slk = getattr(cfg, "stats_cap_slack", 2.0)
+                est = (int(op.ndv_est) if op.ndv_src == "realized"
+                       else int(np.ceil(op.ndv_est * slk)))
+                cap = max(1, min(cap, max(64, est)))
         else:   # Compact / Map / WindowOp / AggPrep / LocalSort / SegmentAgg
             cap = ins[0][0]
         caps[op.op_id] = (cap, bucket)

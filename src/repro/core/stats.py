@@ -1,0 +1,436 @@
+"""Sampled statistics pass + realized-stats feedback store.
+
+The property-driven planner (core/physical_plan.py) decides WHERE exchanges
+and sorts go; this module tells it how much data moves and how it is
+distributed, from two sources:
+
+  * **Sampled estimates** — per base-table key statistics from a small
+    evenly-spaced row sample (the same even-position idiom
+    ``physical.sample_sort`` uses for splitter sampling; persisted device
+    scans pay one tiny gather of the sampled positions instead of a full
+    host round-trip).  Per key tuple we estimate the distinct count (GEE
+    estimator: ``sqrt(n/r)*f1 + (d - f1)``) and the heavy hitters (sample
+    frequency per distinct tuple).  Column provenance
+    (optimizer.column_provenance) maps interior-node key columns back to the
+    scan columns the sample describes, so a join or aggregate deep in the
+    plan still gets estimates as long as its keys are pass-through.
+
+  * **Realized feedback** — ``collect()``/``persist()`` record the ROOT
+    result's per-shard counts under a structural fingerprint of the
+    (optimized) plan.  A repeated query self-tunes: an aggregate whose
+    fingerprint has realized counts sizes its partial-aggregation buffers
+    from the exact group count instead of the sample estimate, and a join
+    whose previous run showed shard-occupancy skew lowers its salting
+    threshold on replan.  Fingerprints are structural (node kinds, key
+    names, expression shapes, scan names/schemas/row counts) — node ids are
+    process-local and never participate.
+
+The planner consumes a :class:`StatsContext` in three places (ExecConfig
+``adaptive_stats``): automatic ``agg_group_cap`` for PartialAgg, cheaper-side
+re-exchange for mixed-alignment joins, and salted skew joins
+(docs/adaptive_planning.md).  Every estimate is advisory — a missing or wrong
+estimate degrades to the static rules plus the overflow-retry fallback, never
+to a wrong answer.
+"""
+from __future__ import annotations
+
+import hashlib
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import numpy as np
+
+from . import ir
+from .expr import AggExpr, BinOp, ColRef, Const, Expr, ExternalArray, UnOp
+from .optimizer import column_provenance
+
+# Estimated frequency above which residual skew is worth salting away even
+# when it costs re-exchanging an otherwise-aligned build side.
+_OCCUPANCY_TRIGGER = 2.0        # realized max/mean shard ratio that flags skew
+_MAX_HOT = 16                   # cap on tracked heavy hitters per key tuple
+
+
+# ---------------------------------------------------------------------------
+# sampling (even-position, per shard — the sample_sort splitter idiom)
+# ---------------------------------------------------------------------------
+
+
+def _even_positions(n: int, k: int) -> np.ndarray:
+    """k evenly spaced positions in [0, n) (sample_sort's splitter spacing)."""
+    k = max(0, min(int(n), int(k)))
+    if k == 0:
+        return np.zeros(0, np.int64)
+    return (np.arange(k, dtype=np.int64) * n) // k
+
+
+def sample_scan(scan: ir.Scan, columns: tuple[str, ...],
+                sample: int) -> dict[str, np.ndarray]:
+    """Evenly-spaced row sample of ``columns`` from a scan.
+
+    Host tables index numpy directly.  Persisted device layouts sample each
+    shard's valid prefix proportionally and gather ONLY the sampled
+    positions (one tiny device->host transfer, not a shard round-trip).
+    """
+    lay = scan.layout
+    if lay is not None and lay.counts is not None:
+        cnts = np.asarray(lay.counts, dtype=np.int64)
+        total = int(cnts.sum())
+        if total == 0:
+            return {c: np.zeros(0) for c in columns}
+        pos = []
+        for r in range(int(lay.nshards)):
+            k = -(-sample * int(cnts[r]) // max(total, 1))   # proportional
+            pos.append(r * int(lay.capacity) + _even_positions(int(cnts[r]), k))
+        idx = np.concatenate(pos) if pos else np.zeros(0, np.int64)
+        out = {}
+        for c in columns:
+            col = scan.columns[c]
+            out[c] = np.asarray(col[idx.astype(np.int32)]) if idx.size \
+                else np.zeros(0)
+        return out
+    n = len(next(iter(scan.columns.values()))) if scan.columns else 0
+    idx = _even_positions(n, sample)
+    return {c: np.asarray(scan.columns[c])[idx] for c in columns}
+
+
+# ---------------------------------------------------------------------------
+# estimators
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class KeyStats:
+    """Estimates for one key tuple at one plan node."""
+
+    rows: int                                   # total rows the sample covers
+    sampled: int                                # sample size
+    distinct: int                               # GEE distinct-count estimate
+    # conservative sizing estimate: sample singletons extrapolate LINEARLY
+    # (each may represent n/r unseen distinct values) instead of GEE's
+    # sqrt(n/r).  GEE minimizes ratio error (best for join-row estimates);
+    # the linear bound is what buffer sizing wants — a heavy-tailed (zipf)
+    # key column under-samples its tail and would otherwise overflow.
+    distinct_cap: int = 0
+    heavy: tuple[tuple[tuple, float], ...] = ()  # (key values, sample freq)
+    source: str = "sample"                      # "sample" | "realized"
+
+
+def _tuple_counts(cols: list[np.ndarray]) -> dict[tuple, int]:
+    counts: dict[tuple, int] = {}
+    for row in zip(*(np.asarray(c).tolist() for c in cols)):
+        counts[row] = counts.get(row, 0) + 1
+    return counts
+
+
+def estimate_keys(cols: list[np.ndarray], total_rows: int) -> KeyStats:
+    """Distinct-count (GEE) + heavy-hitter estimates from a sample."""
+    r = len(cols[0]) if cols else 0
+    n = max(total_rows, 1)
+    if r == 0:
+        return KeyStats(total_rows, 0, n, n, ())
+    counts = _tuple_counts(cols)
+    d = len(counts)
+    f1 = sum(1 for c in counts.values() if c == 1)
+    est = int(np.sqrt(n / r) * f1 + (d - f1))
+    est = max(d, min(est, n))
+    cap_est = max(d, min(int((n / r) * f1 + (d - f1)), n))
+    heavy = sorted(((k, c / r) for k, c in counts.items()),
+                   key=lambda kv: -kv[1])[:_MAX_HOT]
+    return KeyStats(total_rows, r, est, cap_est, tuple(heavy))
+
+
+# ---------------------------------------------------------------------------
+# realized-stats feedback store (per-plan-fingerprint)
+# ---------------------------------------------------------------------------
+
+
+_REALIZED: dict[str, dict] = {}
+
+
+def _expr_sig(e: Optional[Expr]) -> str:
+    if e is None:
+        return "-"
+    if isinstance(e, ColRef):
+        return f"c:{e.name}"
+    if isinstance(e, Const):
+        v = e.value
+        try:
+            a = np.asarray(v)
+            body = str(a.item()) if a.size == 1 else f"arr{a.shape}"
+        except Exception:
+            body = type(v).__name__
+        return f"k:{body}"
+    if isinstance(e, ExternalArray):
+        return f"x:{np.asarray(e.array).shape}"
+    if isinstance(e, (BinOp, UnOp)):
+        kids = ",".join(_expr_sig(c) for c in e.children)
+        return f"{e.op}({kids})"
+    kids = ",".join(_expr_sig(c) for c in e.children)
+    return f"{type(e).__name__}({kids})"
+
+
+def _node_sig(n: ir.Node) -> str:
+    if isinstance(n, ir.Scan):
+        sch = ",".join(f"{k}:{np.dtype(d).str}" for k, d in n.schema.items())
+        rows = (n.layout.rows() if n.layout is not None
+                and n.layout.counts is not None
+                else len(next(iter(n.columns.values()))) if n.columns else 0)
+        return f"Scan[{n.name}|{sch}|{rows}]"
+    if isinstance(n, ir.Filter):
+        return f"Filter[{_expr_sig(n.pred)}]"
+    if isinstance(n, ir.Project):
+        cols = ",".join(f"{k}={_expr_sig(e)}" for k, e in n.cols.items())
+        return f"Project[{cols}]"
+    if isinstance(n, ir.Join):
+        return (f"Join[{','.join(n.left_on)}|{','.join(n.right_on)}"
+                f"|{n.how}|{n.suffix}]")
+    if isinstance(n, ir.Aggregate):
+        aggs = ",".join(f"{k}:{a.fn}:{_expr_sig(a.expr)}"
+                        for k, a in n.aggs.items())
+        return f"Agg[{','.join(n.key)}|{aggs}]"
+    if isinstance(n, ir.Window):
+        return (f"Win[{n.kind}|{_expr_sig(n.expr)}|{n.out}|{n.weights}"
+                f"|{n.center}|{','.join(n.partition_by)}"
+                f"|{','.join(n.order_by)}]")
+    if isinstance(n, ir.Sort):
+        return f"Sort[{','.join(n.by)}|{n.ascending}]"
+    if isinstance(n, ir.Limit):
+        return f"Limit[{n.n}]"
+    if isinstance(n, ir.Repartition):
+        return f"Repart[{','.join(n.by)}|{','.join(n.sort_by)}]"
+    return type(n).__name__
+
+
+def plan_fingerprint(node: ir.Node) -> str:
+    """Structural hash of the subplan rooted at ``node`` — stable across
+    processes (node ids never participate)."""
+    parts = []
+
+    def rec(n: ir.Node):
+        parts.append(_node_sig(n))
+        parts.append("(")
+        for c in n.children:
+            rec(c)
+        parts.append(")")
+
+    rec(node)
+    return hashlib.sha1("".join(parts).encode()).hexdigest()
+
+
+def record_realized(root: ir.Node, counts: np.ndarray) -> None:
+    """Feed a finished execution's per-shard valid counts back into the
+    store (called by collect()/persist() under ``adaptive_stats``)."""
+    while isinstance(root, ir.Rebalance):
+        root = root.child
+    counts = np.asarray(counts, dtype=np.int64).reshape(-1)
+    if counts.size == 0:
+        return
+    _REALIZED[plan_fingerprint(root)] = {
+        "rows": int(counts.sum()),
+        "max": int(counts.max()),
+        "mean": float(counts.mean()),
+        "nshards": int(counts.size),
+    }
+
+
+def realized_for(node: ir.Node) -> Optional[dict]:
+    while isinstance(node, ir.Rebalance):
+        node = node.child
+    return _REALIZED.get(plan_fingerprint(node))
+
+
+def clear_realized() -> None:
+    _REALIZED.clear()
+
+
+# ---------------------------------------------------------------------------
+# the per-plan analysis context
+# ---------------------------------------------------------------------------
+
+
+def _scan_rows(n: ir.Scan) -> int:
+    if n.layout is not None and n.layout.counts is not None:
+        return n.layout.rows()
+    return len(next(iter(n.columns.values()))) if n.columns else 0
+
+
+class StatsContext:
+    """Per-plan statistics: row estimates per node plus key-tuple stats on
+    demand.  Built once per planning pass by :func:`analyze`."""
+
+    def __init__(self, root: ir.Node, sample: int = 256):
+        self.root = root
+        self.sample = int(sample)
+        self.prov = column_provenance(root)
+        self.scans = {n.id: n for n in ir.topo_order(root)
+                      if isinstance(n, ir.Scan)}
+        self._samples: dict[tuple, dict[str, np.ndarray]] = {}
+        self._key_cache: dict[tuple, Optional[KeyStats]] = {}
+        self.rows_est: dict[int, float] = {}
+        self._estimate_rows(root)
+
+    # -- base-table sampling -------------------------------------------------
+
+    def _scan_sample(self, scan_id: int,
+                     cols: tuple[str, ...]) -> Optional[dict[str, np.ndarray]]:
+        key = (scan_id, tuple(sorted(cols)))
+        if key not in self._samples:
+            try:
+                self._samples[key] = sample_scan(self.scans[scan_id],
+                                                 key[1], self.sample)
+            except Exception:
+                self._samples[key] = None
+        return self._samples[key]
+
+    def _trace(self, node: ir.Node,
+               cols: tuple[str, ...]) -> Optional[tuple[int, tuple[str, ...]]]:
+        """Resolve ``cols`` at ``node`` to columns of ONE scan, or None."""
+        p = self.prov.get(node.id, {})
+        srcs = [p.get(c) for c in cols]
+        if any(s is None for s in srcs):
+            return None
+        sids = {s[0] for s in srcs}
+        if len(sids) != 1:
+            return None
+        return srcs[0][0], tuple(s[1] for s in srcs)
+
+    # -- public estimates ----------------------------------------------------
+
+    def key_stats(self, node: ir.Node,
+                  keys: tuple[str, ...]) -> Optional[KeyStats]:
+        """Sampled stats for the ``keys`` tuple at ``node`` (provenance-
+        traced to one base table), or None when untraceable."""
+        ck = (node.id, tuple(keys))
+        if ck in self._key_cache:
+            return self._key_cache[ck]
+        out = None
+        traced = self._trace(node, tuple(keys))
+        if traced is not None:
+            sid, scols = traced
+            smp = self._scan_sample(sid, scols)
+            if smp is not None and len(next(iter(smp.values()), ())) > 0:
+                out = estimate_keys([smp[c] for c in scols],
+                                    _scan_rows(self.scans[sid]))
+        self._key_cache[ck] = out
+        return out
+
+    def ndv(self, node: ir.Node, keys: tuple[str, ...]) -> Optional[int]:
+        """Distinct-count estimate for ``keys`` at ``node``, clamped by the
+        node's row estimate (a filtered/joined stream can't grow NDV)."""
+        ks = self.key_stats(node, keys)
+        if ks is None:
+            return None
+        est = ks.distinct
+        rows = self.rows_est.get(node.id)
+        if rows is not None:
+            est = min(est, max(1, int(rows)))
+        return max(1, est)
+
+    def ndv_cap(self, node: ir.Node, keys: tuple[str, ...]) -> Optional[int]:
+        """CONSERVATIVE distinct-count bound for buffer sizing (linear
+        singleton extrapolation — see KeyStats.distinct_cap)."""
+        ks = self.key_stats(node, keys)
+        if ks is None:
+            return None
+        est = ks.distinct_cap
+        rows = self.rows_est.get(node.id)
+        if rows is not None:
+            est = min(est, max(1, int(rows)))
+        return max(1, est)
+
+    def hot_keys(self, node: ir.Node, keys: tuple[str, ...],
+                 threshold: float) -> tuple[tuple[tuple, float], ...]:
+        """Heavy hitters of ``keys`` at ``node``: sampled frequency >=
+        ``threshold`` (frequencies are scan-level; filters are assumed
+        skew-preserving — a wrong call costs balance, never correctness)."""
+        ks = self.key_stats(node, keys)
+        if ks is None:
+            return ()
+        return tuple((k, f) for k, f in ks.heavy if f >= threshold)
+
+    def hot_fraction(self, node: ir.Node, keys: tuple[str, ...],
+                     hot: tuple[tuple[tuple, float], ...]) -> Optional[float]:
+        """Estimated fraction of ``node``'s rows whose key tuple is in the
+        ``hot`` set (sizes the build side's replication buffer)."""
+        if not hot:
+            return 0.0
+        ks = self.key_stats(node, keys)
+        if ks is None:
+            return None
+        want = {k for k, _f in hot}
+        frac = sum(f for k, f in ks.heavy if k in want)
+        # one-sided sampling error margin so a small sample can't undersize
+        # the replication buffer into a guaranteed overflow-retry.
+        return min(1.0, frac + 1.0 / np.sqrt(max(ks.sampled, 1)))
+
+    def realized(self, node: ir.Node) -> Optional[dict]:
+        return realized_for(node)
+
+    def skewed_before(self, node: ir.Node) -> bool:
+        """Did a previous run of this exact subplan realize shard-occupancy
+        skew (max/mean above the trigger)?  Drives the self-tuning salting
+        threshold on replan."""
+        rl = realized_for(node)
+        return bool(rl and rl["nshards"] > 1 and rl["mean"] > 0
+                    and rl["max"] / rl["mean"] >= _OCCUPANCY_TRIGGER)
+
+    # -- row estimation (one forward pass) -----------------------------------
+
+    def _filter_selectivity(self, n: ir.Filter) -> float:
+        """Sampled selectivity: evaluate the predicate over the base-table
+        sample when every referenced column traces to one scan."""
+        names = tuple(sorted({c for (_t, c) in n.pred.columns()}))
+        if not names:
+            return 1.0
+        traced = self._trace(n.child, names)
+        if traced is None:
+            return 1.0
+        sid, scols = traced
+        smp = self._scan_sample(sid, scols)
+        if smp is None:
+            return 1.0
+        r = len(next(iter(smp.values()), ()))
+        if r == 0:
+            return 1.0
+        try:
+            from .expr import evaluate
+            env = {name: smp[sc] for name, sc in zip(names, scols)}
+            mask = np.asarray(evaluate(n.pred, env))
+            return float(np.mean(mask.astype(np.float64)))
+        except Exception:
+            return 1.0
+
+    def _estimate_rows(self, root: ir.Node) -> None:
+        est = self.rows_est
+        for n in ir.topo_order(root):
+            if isinstance(n, ir.Scan):
+                est[n.id] = float(_scan_rows(n))
+            elif isinstance(n, ir.Filter):
+                est[n.id] = est[n.child.id] * self._filter_selectivity(n)
+            elif isinstance(n, ir.Limit):
+                est[n.id] = min(float(n.n), est[n.child.id])
+            elif isinstance(n, ir.Join):
+                lr, rr = est[n.left.id], est[n.right.id]
+                ndv_l = self.ndv(n.left, n.left_on)
+                ndv_r = self.ndv(n.right, n.right_on)
+                if ndv_l and ndv_r:
+                    out = lr * rr / max(ndv_l, ndv_r)
+                else:
+                    out = max(lr, rr)
+                if n.how == "left":
+                    out = max(out, lr)
+                est[n.id] = out
+            elif isinstance(n, ir.Aggregate):
+                d = self.ndv(n.child, n.key)
+                est[n.id] = float(d) if d else est[n.child.id]
+            elif isinstance(n, ir.Concat):
+                est[n.id] = sum(est[c.id] for c in n.parts)
+            elif n.children:
+                est[n.id] = est[n.children[0].id]
+            else:
+                est[n.id] = 0.0
+
+
+def analyze(root: ir.Node, cfg) -> StatsContext:
+    """Build the per-plan statistics context (planner entry point)."""
+    return StatsContext(root, sample=getattr(cfg, "stats_sample", 256))

@@ -1,0 +1,376 @@
+"""Adaptive statistics-driven planning: salted skew joins, auto group caps,
+cheap-side re-exchange, and the census gates that pin adaptive_stats as a
+zero-cost no-op on uniform data (docs/adaptive_planning.md).
+
+Oracle-checked on 1/2/8 shards via the same subprocess harness as
+test_physical_plan.py; plan-shape assertions run in-process (the planner is
+deterministic and device-free).
+"""
+import numpy as np
+import pytest
+
+from repro import hiframes as hf
+from repro.core import physical_plan as pp
+from repro.core import stats
+from oracle import o_aggregate
+from test_physical_plan import run_sharded
+
+
+@pytest.fixture(autouse=True)
+def _fresh_feedback_store():
+    """The realized-stats store is process-global (keyed by plan
+    fingerprint); isolate every test from its neighbours."""
+    stats.clear_realized()
+    yield
+    stats.clear_realized()
+
+
+def _skewed(n=4000, m=90, hot_frac=0.35, seed=7):
+    """Probe table with one zipf-hot key (~hot_frac of all rows) plus a
+    uniform dimension covering every key."""
+    rng = np.random.default_rng(seed)
+    k = rng.integers(0, m, n).astype(np.int32)
+    k[: int(hot_frac * n)] = 3
+    rng.shuffle(k)
+    probe = {"k": k, "v": rng.normal(size=n).astype(np.float32)}
+    dim = {"k": np.arange(m, dtype=np.int32),
+           "w": rng.normal(size=m).astype(np.float32)}
+    return probe, dim
+
+
+ADAPTIVE = dict(adaptive_stats=True)
+
+
+# -- plan shape ---------------------------------------------------------------
+
+
+def test_skewed_join_plans_salted():
+    probe, dim = _skewed()
+    j = hf.table(probe, "probe").merge(hf.table(dim, "dim"), on="k")
+    plan = j.physical_plan(hf.ExecConfig(**ADAPTIVE))
+    c = plan.counts()
+    assert c["salt_ops"] == 2, plan.render()
+    mj = [op for op in plan.ops if isinstance(op, pp.MergeJoin)]
+    assert len(mj) == 1 and mj[0].salted
+    # salt stripped: no __salt__ in the output schema, but the exchanges
+    # carry it on the wire.
+    assert "__salt__" not in mj[0].schema
+    ex = [op for op in plan.ops if isinstance(op, pp.HashExchange)]
+    assert all("__salt__" in op.schema for op in ex), plan.render()
+
+
+def test_salting_adds_zero_extra_collectives():
+    """Both sides of a fresh-table join pay an exchange anyway, so salting
+    is collective-free: same exchange count, same all_to_all count."""
+    probe, dim = _skewed()
+    j = hf.table(probe, "probe").merge(hf.table(dim, "dim"), on="k")
+    on = j.physical_plan(hf.ExecConfig(**ADAPTIVE))
+    off = j.physical_plan(hf.ExecConfig())
+    assert on.counts()["hash_exchanges"] == off.counts()["hash_exchanges"]
+    assert on.collective_count() == off.collective_count()
+    assert off.counts()["salt_ops"] == 0
+
+
+def test_uniform_plans_byte_identical_adaptive_on_off():
+    """The census gate: on uniform keys adaptive_stats must be a no-op —
+    identical op census, collectives, row bytes, AND the full fixed-P
+    payload census (buckets included)."""
+    rng = np.random.default_rng(11)
+    n, m = 4000, 90
+    probe = {"k": rng.integers(0, m, n).astype(np.int32),
+             "v": rng.normal(size=n).astype(np.float32)}
+    dim = {"k": np.arange(m, dtype=np.int32),
+           "w": rng.normal(size=m).astype(np.float32)}
+    j = hf.table(probe, "probe").merge(hf.table(dim, "dim"), on="k")
+    # high-cardinality uniform aggregate: the ndv estimate exceeds the
+    # per-shard capacity, so the auto-cap changes nothing either.
+    u = {"k": rng.integers(0, 1 << 30, n).astype(np.int32),
+         "v": rng.normal(size=n).astype(np.float32)}
+    a = hf.table(u, "u").groupby("k").agg(s=("v", "sum"))
+    for q in (j, a):
+        on = q.physical_plan(hf.ExecConfig(**ADAPTIVE))
+        off = q.physical_plan(hf.ExecConfig())
+        assert on.counts() == off.counts(), (on.render(), off.render())
+        assert on.collective_count() == off.collective_count()
+        assert on.shuffle_row_bytes() == off.shuffle_row_bytes()
+        assert on.shuffle_census(P=8) == off.shuffle_census(P=8)
+
+
+def test_explain_reports_estimates_and_realized():
+    probe, dim = _skewed()
+    j = hf.table(probe, "probe").merge(hf.table(dim, "dim"), on="k")
+    txt = j.explain(hf.ExecConfig(**ADAPTIVE))
+    assert "est~" in txt                    # per-exchange rows/bytes estimate
+    assert "estimated output rows" in txt
+    assert "realized" not in txt            # nothing executed yet
+    j.collect(hf.ExecConfig(**ADAPTIVE))
+    txt2 = j.explain(hf.ExecConfig(**ADAPTIVE))
+    assert "realized (previous run)" in txt2
+
+
+# -- salted-join correctness (oracle, 1/2/8 shards) ---------------------------
+
+
+_SALTED_BODY = """
+    from oracle import o_join
+    rng = np.random.default_rng(7)
+    n, m = 4000, 90
+    k = rng.integers(0, m, n).astype(np.int32)
+    k[: int(0.35 * n)] = 3
+    rng.shuffle(k)
+    probe = {"k": k, "v": rng.normal(size=n).astype(np.float32)}
+    dim = {"k": np.arange(m, dtype=np.int32),
+           "w": rng.normal(size=m).astype(np.float32)}
+    for how in ("inner", "left"):
+        j = hf.table(probe, "probe").merge(hf.table(dim, "dim"), on="k",
+                                           how=how)
+        plan = j.physical_plan(hf.ExecConfig(adaptive_stats=True))
+        assert plan.counts()["salt_ops"] == 2, plan.render()
+        out = j.collect(hf.ExecConfig(adaptive_stats=True))
+        assert not out.overflow
+        got = out.to_numpy()
+        ref = o_join(probe, dim, "k", "k", how=how)
+        assert set(got) == set(ref), (set(got), set(ref))
+        oi = np.lexsort([got[c] for c in sorted(got)])
+        ri = np.lexsort([ref[c] for c in sorted(ref)])
+        for c in ref:
+            np.testing.assert_allclose(np.asarray(got[c])[oi], ref[c][ri],
+                                       atol=1e-5, err_msg=f"{how}:{c}")
+"""
+
+
+@pytest.mark.parametrize("devices", [1, 2, 8])
+def test_salted_join_matches_oracle_sharded(devices):
+    run_sharded(_SALTED_BODY, devices)
+
+
+def test_salted_occupancy_drops_8dev():
+    """The point of salting: the hot key no longer pins one shard.  At P=8
+    with ~35% of probe rows on one key, the unsalted join's max/mean shard
+    occupancy is ~3x; salted it must drop measurably."""
+    run_sharded("""
+        rng = np.random.default_rng(7)
+        n, m = 4000, 90
+        k = rng.integers(0, m, n).astype(np.int32)
+        k[: int(0.35 * n)] = 3
+        rng.shuffle(k)
+        probe = {"k": k, "v": rng.normal(size=n).astype(np.float32)}
+        dim = {"k": np.arange(m, dtype=np.int32),
+               "w": rng.normal(size=m).astype(np.float32)}
+        j = hf.table(probe, "probe").merge(hf.table(dim, "dim"), on="k")
+        salted = j.collect(hf.ExecConfig(adaptive_stats=True))
+        base = j.collect(hf.ExecConfig())
+        cs = np.asarray(salted.counts, dtype=np.float64)
+        cb = np.asarray(base.counts, dtype=np.float64)
+        assert cs.sum() == cb.sum() == n
+        r_salted = cs.max() / cs.mean()
+        r_base = cb.max() / cb.mean()
+        assert r_base > 2.0, (r_base, cb)         # skew is real unsalted
+        assert r_salted < 0.6 * r_base, (r_salted, r_base)
+        assert cs.max() < 0.75 * cb.max(), (cs, cb)
+    """, devices=8)
+
+
+# -- auto agg_group_cap -------------------------------------------------------
+
+
+def test_auto_cap_zipf_aggregate_no_user_cap_no_overflow():
+    """The PR 4 zipf scenario with NO user-declared agg_group_cap: the
+    sampled distinct-count estimate sizes the partial-agg buckets, the run
+    completes without overflow on the FIRST attempt (auto_retry=0), and the
+    result matches the oracle."""
+    rng = np.random.default_rng(4)
+    n = 16000
+    zk = rng.zipf(1.5, n).astype(np.int32)
+    zv = rng.normal(size=n).astype(np.float32)
+    ag = hf.table({"k": zk, "v": zv}, "z").groupby("k").agg(
+        s=("v", "sum"), c=("v", "count"))
+    cfg = hf.ExecConfig(adaptive_stats=True, safe_capacities=False,
+                        auto_retry=0)
+    plan = ag.lower(cfg).pplan          # lower(): capacities are filled
+    pa = [op for op in plan.ops if isinstance(op, pp.PartialAgg)]
+    assert len(pa) == 1 and pa[0].ndv_est is not None
+    assert pa[0].ndv_src == "sample"
+    # the auto cap actually tightened the post-partial exchange
+    src_cap = plan.ops[pa[0].inputs[0]].cap
+    assert 0 < pa[0].cap < src_cap, (pa[0].cap, src_cap)
+    t = ag.collect(cfg)
+    assert not t.overflow
+    got = t.to_numpy()
+    ref = o_aggregate({"k": zk, "v": zv}, "k",
+                      {"s": ("sum", zv), "c": ("count", None)})
+    o = np.argsort(got["k"])
+    np.testing.assert_array_equal(np.asarray(got["k"])[o], ref["k"])
+    np.testing.assert_allclose(np.asarray(got["s"])[o], ref["s"], atol=1e-2)
+    np.testing.assert_array_equal(np.asarray(got["c"])[o], ref["c"])
+
+
+def test_realized_feedback_tightens_cap_on_second_run():
+    rng = np.random.default_rng(4)
+    n = 16000
+    zk = rng.zipf(1.5, n).astype(np.int32)
+    zv = rng.normal(size=n).astype(np.float32)
+    ag = hf.table({"k": zk, "v": zv}, "z").groupby("k").agg(s=("v", "sum"))
+    cfg = hf.ExecConfig(adaptive_stats=True, safe_capacities=False,
+                        auto_retry=0)
+    t = ag.collect(cfg)
+    assert not t.overflow
+    true_groups = len(np.unique(zk))
+    plan2 = ag.lower(cfg).pplan
+    pa = [op for op in plan2.ops if isinstance(op, pp.PartialAgg)][0]
+    assert pa.ndv_src == "realized"
+    assert pa.ndv_est == true_groups
+    assert pa.cap == max(64, true_groups)
+    t2 = ag.collect(cfg)
+    assert not t2.overflow
+    assert int(np.sum(np.asarray(t2.counts))) == true_groups
+
+
+# -- cheap-side re-exchange ---------------------------------------------------
+
+
+def _mixed_alignment_join(big_left: bool):
+    """Both sides pre-partitioned on DIFFERENT join-key positions, so one
+    must re-hash: left persisted on k1 (position 0), right on cb
+    (position 1)."""
+    rng = np.random.default_rng(9)
+    nl, nr = (6000, 300) if big_left else (300, 6000)
+    left = hf.table({"k1": rng.integers(0, 7, nl).astype(np.int32),
+                     "k2": rng.integers(0, 9, nl).astype(np.int32),
+                     "x": rng.normal(size=nl).astype(np.float32)},
+                    "L").repartition(by="k1").persist(name="Lp")
+    right = hf.table({"ca": rng.integers(0, 7, nr).astype(np.int32),
+                      "cb": rng.integers(0, 9, nr).astype(np.int32),
+                      "w": rng.normal(size=nr).astype(np.float32)},
+                     "R").repartition(by="cb").persist(name="Rp")
+    return left.merge(right, on=[("k1", "ca"), ("k2", "cb")])
+
+
+def _exchanged_keys(plan):
+    return [op.keys for op in plan.ops if isinstance(op, pp.HashExchange)]
+
+
+def test_cheap_side_reexchange_picks_smaller_input():
+    # static rule: keep the LEFT alignment (hash on k1, position 0), re-hash
+    # the right on ITS position-0 column ca — regardless of sizes.  Adaptive
+    # with a big left agrees with it...
+    j = _mixed_alignment_join(big_left=True)
+    assert _exchanged_keys(j.physical_plan(hf.ExecConfig())) == [("ca",)]
+    on = j.physical_plan(hf.ExecConfig(**ADAPTIVE))
+    assert _exchanged_keys(on) == [("ca",)], on.render()
+    # ...and with a big RIGHT it flips: re-hash the small left on k2
+    # (the right-aligned key position) instead.
+    j2 = _mixed_alignment_join(big_left=False)
+    assert _exchanged_keys(j2.physical_plan(hf.ExecConfig())) == [("ca",)]
+    on2 = j2.physical_plan(hf.ExecConfig(**ADAPTIVE))
+    assert _exchanged_keys(on2) == [("k2",)], on2.render()
+    # either way one exchange total, and results match the stats-blind plan
+    got = j2.collect(hf.ExecConfig(**ADAPTIVE)).to_numpy()
+    ref = j2.collect(hf.ExecConfig()).to_numpy()
+    oi = np.lexsort([got[c] for c in sorted(got)])
+    ri = np.lexsort([ref[c] for c in sorted(ref)])
+    for c in ref:
+        np.testing.assert_allclose(np.asarray(got[c])[oi],
+                                   np.asarray(ref[c])[ri], atol=1e-5)
+
+
+# -- GroupBy.transform / GroupBy.head -----------------------------------------
+
+
+def test_groupby_transform_matches_oracle():
+    rng = np.random.default_rng(13)
+    n = 1200
+    g = rng.integers(0, 11, n).astype(np.int32)
+    x = rng.normal(size=n).astype(np.float32)
+    y = rng.normal(size=n).astype(np.float32)
+    df = hf.table({"g": g, "x": x, "y": y})
+    out = df.groupby("g").transform("mean").collect().to_numpy()
+    assert set(out) == {"g", "x", "y", "x_mean", "y_mean"}
+    ref_m = o_aggregate({"g": g, "x": x, "y": y}, "g",
+                        {"xm": ("mean", x), "ym": ("mean", y)})
+    lut_x = dict(zip(ref_m["g"].tolist(), ref_m["xm"]))
+    lut_y = dict(zip(ref_m["g"].tolist(), ref_m["ym"]))
+    oi = np.lexsort((out["x"], out["g"]))
+    ei = np.lexsort((x, g))
+    np.testing.assert_array_equal(np.asarray(out["g"])[oi], g[ei])
+    np.testing.assert_allclose(np.asarray(out["x"])[oi], x[ei], atol=1e-6)
+    np.testing.assert_allclose(
+        np.asarray(out["x_mean"])[oi],
+        np.array([lut_x[int(v)] for v in g[ei]]), atol=1e-4)
+    np.testing.assert_allclose(
+        np.asarray(out["y_mean"])[oi],
+        np.array([lut_y[int(v)] for v in g[ei]]), atol=1e-4)
+    # named-spec spelling + collision guard
+    out2 = df.groupby("g").transform(total=("x", "sum")).collect().to_numpy()
+    assert set(out2) == {"g", "x", "y", "total"}
+    with pytest.raises(ValueError):
+        df.groupby("g").transform(x=("x", "sum"))
+
+
+def test_groupby_head_matches_pandas_rows():
+    """head(n) = first n rows per group in ORIGINAL order — the exact row
+    multiset pandas returns."""
+    rng = np.random.default_rng(14)
+    n = 900
+    g = rng.integers(0, 7, n).astype(np.int32)
+    x = np.arange(n, dtype=np.float32)         # row identity
+    df = hf.table({"g": g, "x": x})
+    for k in (1, 3):
+        got = df.groupby("g").head(k).collect().to_numpy()
+        seen: dict = {}
+        exp = []
+        for gi, xi in zip(g.tolist(), x.tolist()):
+            if seen.get(gi, 0) < k:
+                exp.append((gi, xi))
+            seen[gi] = seen.get(gi, 0) + 1
+        assert sorted(zip(np.asarray(got["g"]).tolist(),
+                          np.asarray(got["x"]).tolist())) == sorted(exp)
+        assert set(got) == {"g", "x"}          # helper column dropped
+
+
+def test_groupby_head_plans_single_exchange():
+    """The fusion claim: head(n) rides the grouped-sort layout — one hash
+    exchange + one local sort, nothing else; on a frame already persisted
+    on the keys, ZERO exchanges."""
+    rng = np.random.default_rng(15)
+    df = hf.table({"g": rng.integers(0, 7, 800).astype(np.int32),
+                   "x": rng.normal(size=800).astype(np.float32)})
+    c = df.groupby("g").head(3).physical_plan().counts()
+    assert c["hash_exchanges"] == 1 and c["local_sorts"] == 1
+    assert c["sample_sorts"] == 0 and c["rebalances"] == 0
+    p = df.repartition(by="g").persist(name="pg")
+    cp = p.groupby("g").head(3).physical_plan().counts()
+    assert cp["hash_exchanges"] == 0, cp
+
+
+def test_transform_sharded_matches_oracle():
+    run_sharded("""
+        from oracle import o_aggregate
+        rng = np.random.default_rng(16)
+        n = 2000
+        g = rng.integers(0, 9, n).astype(np.int32)
+        g[: n // 3] = 4                         # hot group
+        rng.shuffle(g)
+        x = rng.normal(size=n).astype(np.float32)
+        df = hf.table({"g": g, "x": x})
+        out = df.groupby("g").transform("sum").collect(
+            hf.ExecConfig(adaptive_stats=True)).to_numpy()
+        ref = o_aggregate({"g": g, "x": x}, "g", {"s": ("sum", x)})
+        lut = dict(zip(ref["g"].tolist(), ref["s"]))
+        oi = np.lexsort((out["x"], out["g"]))
+        ei = np.lexsort((x, g))
+        assert np.array_equal(np.asarray(out["g"])[oi], g[ei])
+        np.testing.assert_allclose(
+            np.asarray(out["x_sum"])[oi],
+            np.array([lut[int(v)] for v in g[ei]]), atol=1e-2)
+        out8 = df.groupby("g").head(2).collect().to_numpy()
+        seen = {}
+        exp = []
+        for gi, xi in zip(g.tolist(), x.tolist()):
+            if seen.get(gi, 0) < 2:
+                exp.append((gi, round(float(xi), 4)))
+            seen[gi] = seen.get(gi, 0) + 1
+        got = sorted((int(a), round(float(b), 4))
+                     for a, b in zip(out8["g"], out8["x"]))
+        assert got == sorted(exp)
+    """, devices=8)

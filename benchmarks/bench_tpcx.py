@@ -97,6 +97,32 @@ def q05(wcs, it):
         total=hf.count())
 
 
+def q05_string(wcs_df, item_df):
+    """Q05 with STRING category names: the equality and membership tests
+    rewrite into dictionary-code space at plan construction, so the plan
+    (exchanges, sorts, packed bytes) is identical to the int-category q05
+    shape — only the host-side ingest encode differs (docs/dtypes.md)."""
+    j = wcs_df.merge(item_df, on=("wcs_item_sk", "i_item_sk"))
+    return j.groupby("wcs_user_sk").agg(
+        clicks_books=(j["i_category_name"] == "books", "sum"),
+        clicks_media=(j["i_category_name"].isin(["electronics", "music"]),
+                      "sum"),
+        total="count")
+
+
+def q09_channel(ss_df):
+    """TPCx-BB Q09-style multi-predicate revenue rollup, on the STRING
+    sales channel: a code-space membership filter, a string groupby key
+    with null holes (pandas ``dropna=True`` grouping), and skipna
+    aggregation over the nullable discount column."""
+    f = ss_df[ss_df["ss_channel"].isin(["web", "catalog"])]
+    return f.groupby("ss_channel").agg(
+        revenue=("ss_net_paid", "sum"),
+        avg_disc=("ss_discount", "mean"),
+        n_disc=("ss_discount", "count"),
+        n="count")
+
+
 def run(scale: float = 1.0):
     n_sales = int(400_000 * scale)
     n_items = int(20_000 * scale)
@@ -164,6 +190,25 @@ def run(scale: float = 1.0):
     assert colls["persisted"] < colls["cold"], colls
 
     wcs = synth.web_clickstream(n_sales, n_items, n_cust, seed=12, skew=1.1)
+
+    # Multi-query string/categorical subset (PR 8): Q05 over string
+    # category names and a Q09-style channel rollup with nullable columns.
+    # Both ingest-encode host-side and run entirely in code space; the
+    # string-key census gate (tests/test_plan_census.py) pins the plans
+    # byte-identical to their int-keyed shapes.
+    it_x = synth.item_ext(n_items, seed=11)
+    frame = q05_string(hf.table(wcs, "wcs"), hf.table(it_x, "itx"))
+    pplan = frame.physical_plan()
+    us = timeit(frame.lower())
+    report(f"fig11_q05_string_sf{scale}", us,
+           f"shuffles={pplan.shuffle_count()};rows={n_sales}")
+
+    ss_x = synth.store_sales_ext(n_sales, n_items, n_cust, seed=10)
+    frame = q09_channel(hf.table(ss_x, "ssx"))
+    pplan = frame.physical_plan()
+    us = timeit(frame.lower())
+    report(f"fig11_q09_channel_sf{scale}", us,
+           f"shuffles={pplan.shuffle_count()};rows={n_sales}")
     # Q05 under skew: run through the overflow-retry driver and report the
     # number of replans the skew forced (the paper's Q05 story).
     def build(slack):

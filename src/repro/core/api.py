@@ -66,25 +66,169 @@ docs/api.md).
 from __future__ import annotations
 
 import dataclasses as _dc
+import functools as _ft
 from typing import Any, Sequence
 
 import numpy as np
 
 from . import distribution as D
 from . import ir
-from .expr import (AGG_FNS, AggExpr, ColRef, Expr, UDF, all_, any_, as_expr,
-                   count, first, fn_expr, max_, mean, min_, nunique, prod,
-                   std, sum_, var)
+from .dtypes import (CODE_DTYPE, DType, NULL_CODE, as_nullable, categories_of,
+                     coerce_column, dict_decode, is_category, is_nullable,
+                     physical_dtype, recode_map, union_categories)
+from .expr import (AGG_FNS, AggExpr, BinOp, Cast, ColRef, Const, Expr, IsIn,
+                   UDF, UnOp, all_, any_, as_expr, count, first, fn_expr,
+                   max_, mean, min_, nunique, prod, std, sum_, var)
 from .lower import ExecConfig, Lowered, lower
 from .table import DTable
 
 __all__ = [
-    "DataFrame", "GroupBy", "Over", "table", "join", "aggregate", "concat",
+    "DataFrame", "GroupBy", "Over", "table", "from_pandas", "join",
+    "aggregate", "concat",
     "cumsum", "stencil", "sma", "wma", "lag", "lead", "rank", "dense_rank",
     "row_number", "rolling_sum", "rolling_mean", "sum_", "mean", "count",
     "min_", "max_", "prod", "any_", "all_", "var", "std", "first", "nunique",
-    "udf", "ExecConfig", "explain",
+    "udf", "ExecConfig", "explain", "DType",
 ]
+
+
+# ---------------------------------------------------------------------------
+# string/null expression rewriting (docs/dtypes.md)
+#
+# Strings never reach the device: comparisons and membership tests against a
+# category column are rewritten INTO CODE SPACE when the expression is
+# attached to a plan (filter/assign/agg construction).  Dictionaries are
+# sorted, so code order IS lexicographic order — equality maps to a code
+# constant, ranges map to searchsorted thresholds — and isna() resolves to
+# the dtype's in-band null test (code < 0, isnan) or a constant False.
+# ---------------------------------------------------------------------------
+
+_CMP_SWAP = {"lt": "gt", "le": "ge", "gt": "lt", "ge": "le",
+             "eq": "eq", "ne": "ne"}
+
+
+def _cat_dtype_of(e: Expr, schemas: dict[int, dict]):
+    if isinstance(e, ColRef):
+        dt = schemas.get(e.table_id, {}).get(e.name)
+        if is_category(dt):
+            return dt
+    return None
+
+
+def _code_const(code: int) -> Const:
+    return Const(np.int32(code))
+
+
+def _rewrite_cat_cmp(col: ColRef, dt, op: str, v: str) -> Expr:
+    """One string comparison against a sorted dictionary, in code space.
+    Nulls (code -1) compare False except under ``ne`` (pandas semantics)."""
+    cats = categories_of(dt)
+    if op in ("eq", "ne"):
+        if v in cats:
+            return BinOp(op, col, _code_const(cats.index(v)))
+        return Const(op == "ne")            # absent value: eq False, ne True
+    arr = np.asarray(cats)
+    if op in ("lt", "le"):
+        t = int(np.searchsorted(arr, v, side="left" if op == "lt" else "right"))
+        if t == 0:
+            return Const(False)
+        return BinOp("and", BinOp("ge", col, _code_const(0)),
+                     BinOp("lt", col, _code_const(t)))
+    # gt / ge: codes >= threshold — null (-1) can never satisfy it
+    t = int(np.searchsorted(arr, v, side="right" if op == "gt" else "left"))
+    return BinOp("ge", col, _code_const(max(t, 0)))
+
+
+def _rewrite_strings(e: Expr, schemas: dict[int, dict]) -> Expr:
+    if e.children:
+        kids = tuple(_rewrite_strings(c, schemas) for c in e.children)
+        if any(k is not o for k, o in zip(kids, e.children)):
+            e = e.with_children(kids)
+    if isinstance(e, UnOp) and e.op == "isna":
+        c = e.children[0]
+        if _cat_dtype_of(c, schemas) is not None:
+            return BinOp("lt", c, _code_const(0))
+        if isinstance(c, ColRef):
+            dt = schemas.get(c.table_id, {}).get(c.name)
+            if dt is not None and not is_nullable(dt) and \
+                    not np.issubdtype(physical_dtype(dt), np.floating):
+                return Const(False)         # int/bool columns hold no nulls
+        return e
+    if isinstance(e, IsIn):
+        dt = _cat_dtype_of(e.children[0], schemas)
+        if dt is None or not any(isinstance(v, str) for v in e.values):
+            return e
+        cats = categories_of(dt)
+        lut = {v: i for i, v in enumerate(cats)}
+        bad = [v for v in e.values if not isinstance(v, str)]
+        if bad:
+            raise TypeError(
+                f"isin on a category column mixes strings and {bad!r}; "
+                "pass homogeneous string values")
+        codes = tuple(np.int32(lut[v]) for v in e.values if v in lut)
+        return IsIn(e.children[0], codes) if codes else Const(False)
+    if isinstance(e, BinOp) and e.op in _CMP_SWAP:
+        a, b = e.children
+        da, db = _cat_dtype_of(a, schemas), _cat_dtype_of(b, schemas)
+        if da is not None and db is not None:
+            if categories_of(da) != categories_of(db):
+                raise TypeError(
+                    "cannot compare category columns with different "
+                    "dictionaries; merge/concat unify them, or ingest the "
+                    "columns together")
+            return e
+        if da is None and db is None:
+            for x in (a, b):
+                if isinstance(x, Const) and isinstance(x.value, str):
+                    raise TypeError(
+                        f"string constant {x.value!r} compared against a "
+                        "non-category column — strings only compare against "
+                        "dictionary-encoded (category) columns")
+            return e
+        col, const, op = (a, b, e.op) if da is not None \
+            else (b, a, _CMP_SWAP[e.op])
+        dt = da if da is not None else db
+        if isinstance(const, Const) and isinstance(
+                const.value, (int, np.integer)):
+            return e                        # already in code space
+        if not isinstance(const, Const) or not isinstance(const.value, str):
+            raise TypeError(
+                f"category column {col.name!r} compares against string "
+                f"constants, got {const!r}")
+        return _rewrite_cat_cmp(col, dt, op, const.value)
+    return e
+
+
+# Device-side null/dictionary helpers, lifted into expressions via fn_expr.
+# Each is a closure factory so the host constants (LUT, fill code/value) bake
+# into the trace as literals.
+
+
+def _recode_fn(lut: np.ndarray, fill: int | None = None):
+    """codes -> codes through a host LUT (dictionary unification); null
+    codes stay null unless ``fill`` maps them to a new code (fillna)."""
+    fillc = np.int32(NULL_CODE if fill is None else fill)
+
+    def f(c):
+        import jax.numpy as jnp
+        return jnp.where(c >= 0, jnp.asarray(lut)[jnp.clip(c, 0)], fillc)
+    return f
+
+
+def _fill_code_fn(code: int):
+    fillc = np.int32(code)
+
+    def f(c):
+        import jax.numpy as jnp
+        return jnp.where(c < 0, fillc, c)
+    return f
+
+
+def _fill_nan_fn(v: float):
+    def f(c):
+        import jax.numpy as jnp
+        return jnp.where(jnp.isnan(c), jnp.asarray(v, c.dtype), c)
+    return f
 
 
 def _over_keys(x) -> tuple[str, ...]:
@@ -111,6 +255,13 @@ class DataFrame:
     def _wrap(self, node: ir.Node) -> "DataFrame":
         return DataFrame(node, self._rep_nodes)
 
+    def _rw(self, e) -> Expr:
+        """Resolve string comparisons / isna against this frame's logical
+        schema (applied wherever an expression attaches to the plan)."""
+        e = as_expr(e)
+        return _rewrite_strings(
+            e, {n.id: n.schema for n in ir.topo_order(self.node)})
+
     # -- schema ---------------------------------------------------------------
     @property
     def schema(self) -> dict[str, np.dtype]:
@@ -120,12 +271,19 @@ class DataFrame:
     def columns(self) -> list[str]:
         return list(self.node.schema)
 
+    @property
+    def dtypes(self) -> dict[str, Any]:
+        """Logical dtypes by column (pandas ``df.dtypes`` analogue): plain
+        ``np.dtype`` for numeric columns, :class:`DType` for category and
+        nullable columns (repr'd ``category[str]``, ``float32?``, ...)."""
+        return dict(self.node.schema)
+
     # -- expression building ---------------------------------------------------
     def __getitem__(self, key):
         if isinstance(key, str):
             return ColRef(self.node.id, key)
         if isinstance(key, Expr):                       # df[pred] -> filter
-            return self._wrap(ir.Filter(self.node, key))
+            return self._wrap(ir.Filter(self.node, self._rw(key)))
         if isinstance(key, (list, tuple)):              # df[["a","b"]] -> project
             cols = {k: ColRef(self.node.id, k) for k in key}
             return self._wrap(ir.Project(self.node, cols))
@@ -153,7 +311,7 @@ class DataFrame:
         if not isinstance(name, str):
             raise TypeError(f"column name must be a str, got {name!r}")
         cols = {k: ColRef(self.node.id, k) for k in self.node.schema}
-        cols[name] = as_expr(value)
+        cols[name] = self._rw(value)
         new = ir.Project(self.node, cols)
         if self.node.id in self._rep_nodes:
             self._rep_nodes = self._rep_nodes | {new.id}
@@ -172,7 +330,7 @@ class DataFrame:
         for name, e in exprs.items():
             if callable(e) and not isinstance(e, Expr):
                 e = e(self)
-            cols[name] = as_expr(e)
+            cols[name] = self._rw(e)
         return self._wrap(ir.Project(self.node, cols))
 
     def rename(self, mapping: dict[str, str] | None = None, *,
@@ -196,21 +354,189 @@ class DataFrame:
                            f"{list(self.node.schema)}")
         return self[[c for c in self.node.schema if c not in dropped]]
 
+    # -- null / dtype surface (docs/dtypes.md) ---------------------------------
+    def astype(self, dtype) -> "DataFrame":
+        """Cast columns, pandas-style: ``df.astype(np.float64)`` (all
+        columns) or ``df.astype({"x": np.int32})``.  Category columns can't
+        be cast on device (decode with ``to_numpy()``), casting TO category
+        happens at ingest, and nullable columns must be ``fillna``'d before
+        a cast to a dtype with no null representation."""
+        sch = self.node.schema
+        mapping = dict(dtype) if isinstance(dtype, dict) \
+            else {c: dtype for c in sch}
+        exprs: dict[str, Expr] = {c: ColRef(self.node.id, c) for c in sch}
+        dts = dict(sch)
+        for c, t in mapping.items():
+            if c not in sch:
+                raise KeyError(f"astype: no column {c!r}")
+            dt = sch[c]
+            wants_cat = (isinstance(t, str) and t == "category") \
+                or is_category(t)
+            if wants_cat:
+                if is_category(dt):
+                    continue
+                raise TypeError(
+                    f"astype: column {c!r} -> category needs host-side "
+                    "dictionary encoding; rebuild the input with hf.table() "
+                    "or hf.from_pandas()")
+            if is_category(dt):
+                raise TypeError(
+                    f"astype: column {c!r} is category[str]; decode with "
+                    "to_numpy() instead of casting on device")
+            target = np.dtype(t)
+            if dt == target and not is_nullable(dt):
+                continue
+            if is_nullable(dt) and not np.issubdtype(target, np.floating):
+                raise TypeError(
+                    f"astype: column {c!r} is nullable ({dt!r}) and "
+                    f"{target} has no null representation — fillna() first")
+            exprs[c] = Cast(ColRef(self.node.id, c), target)
+            dts[c] = (DType(target, nullable=True)
+                      if is_nullable(dt) else target)
+        return self._wrap(ir.Project(self.node, exprs, dts))
+
+    def fillna(self, value, subset=None) -> "DataFrame":
+        """Replace nulls: a scalar (applied to every nullable column, or to
+        ``subset``), or a dict column -> fill value.  Filling a category
+        column with a string outside its dictionary extends the dictionary.
+        The filled columns come back non-nullable."""
+        sch = self.node.schema
+        if isinstance(value, dict):
+            targets = dict(value)
+        else:
+            cols = ir.as_keys(subset) if subset is not None else tuple(sch)
+            targets = {c: value for c in cols}
+        exprs: dict[str, Expr] = {c: ColRef(self.node.id, c) for c in sch}
+        dts = dict(sch)
+        changed = False
+        for c, v in targets.items():
+            if c not in sch:
+                raise KeyError(f"fillna: no column {c!r}")
+            dt = sch[c]
+            if not is_nullable(dt):
+                continue
+            col = ColRef(self.node.id, c)
+            if is_category(dt):
+                if not isinstance(v, str):
+                    raise TypeError(
+                        f"fillna: column {c!r} is category[str]; the fill "
+                        f"value must be a string, got {v!r}")
+                cats = categories_of(dt)
+                if v in cats:
+                    exprs[c] = fn_expr(_fill_code_fn(cats.index(v)), col)
+                    dts[c] = DType(CODE_DTYPE, cats)
+                else:
+                    newcats = union_categories(cats, (v,))
+                    lut = recode_map(cats, newcats)
+                    exprs[c] = fn_expr(
+                        _recode_fn(lut, fill=newcats.index(v)), col)
+                    dts[c] = DType(CODE_DTYPE, newcats)
+            else:
+                exprs[c] = fn_expr(
+                    _fill_nan_fn(float(v)), col)
+                dts[c] = physical_dtype(dt)
+            changed = True
+        if not changed:
+            return self
+        return self._wrap(ir.Project(self.node, exprs, dts))
+
+    def dropna(self, subset=None) -> "DataFrame":
+        """Drop rows holding a null in any (or any ``subset``) column —
+        a Filter on the in-band null tests, collective-free."""
+        cols = ir.as_keys(subset) if subset is not None \
+            else tuple(self.node.schema)
+        sch = self.node.schema
+        missing = set(cols) - set(sch)
+        if missing:
+            raise KeyError(f"dropna: {sorted(missing)} not in columns "
+                           f"{list(sch)}")
+        preds = []
+        for c in cols:
+            dt = sch[c]
+            if not is_nullable(dt):
+                continue
+            col = ColRef(self.node.id, c)
+            if is_category(dt):
+                preds.append(BinOp("ge", col, _code_const(0)))
+            elif np.issubdtype(physical_dtype(dt), np.floating):
+                preds.append(UnOp("not", UnOp("isna", col)))
+        if not preds:
+            return self
+        return self._wrap(ir.Filter(
+            self.node, _ft.reduce(lambda a, b: BinOp("and", a, b), preds)))
+
+    def isna(self) -> "DataFrame":
+        """Per-cell null mask, one bool column per input column."""
+        cols = {c: self._rw(UnOp("isna", ColRef(self.node.id, c)))
+                for c in self.node.schema}
+        return self._wrap(ir.Project(self.node, cols))
+
+    def notna(self) -> "DataFrame":
+        cols = {c: UnOp("not", self._rw(UnOp("isna", ColRef(self.node.id, c))))
+                for c in self.node.schema}
+        return self._wrap(ir.Project(self.node, cols))
+
+    def _recode(self, targets: dict[str, tuple], nullable: dict[str, bool]
+                ) -> "DataFrame":
+        """Re-encode category columns against new (superset) dictionaries —
+        the merge/concat unification step.  Identity for empty targets."""
+        if not targets:
+            return self
+        sch = self.node.schema
+        exprs: dict[str, Expr] = {c: ColRef(self.node.id, c) for c in sch}
+        dts = dict(sch)
+        for c, newcats in targets.items():
+            dt = sch[c]
+            cats = categories_of(dt)
+            nb = nullable.get(c, is_nullable(dt))
+            if cats != newcats:
+                exprs[c] = fn_expr(_recode_fn(recode_map(cats, newcats)),
+                                   ColRef(self.node.id, c))
+            dts[c] = DType(CODE_DTYPE, newcats, nullable=nb)
+        new = ir.Project(self.node, exprs, dts)
+        rep = self._rep_nodes | ({new.id} if self._replicated else set())
+        return DataFrame(new, frozenset(rep))
+
     # -- relational verbs -------------------------------------------------------
     def merge(self, right: "DataFrame", on, how: str = "inner",
               suffix: str = "_r") -> "DataFrame":
         """Equi-join; ``on`` is a name, a (left_name, right_name) pair, or a
         list of names / pairs for composite (multi-column) keys.
 
-        how="left" keeps unmatched left rows (right columns zero-filled; a
-        ``_matched`` int column distinguishes real zeros — the static-shape
-        stand-in for SQL NULLs, documented in DESIGN.md)."""
+        how="left" keeps unmatched left rows; right float columns NaN-fill,
+        right category columns null-code-fill, and right int columns
+        zero-fill with a ``_matched`` int column distinguishing real zeros
+        (docs/dtypes.md).
+
+        String (category) keys join by dictionary code: both sides recode
+        onto the union dictionary first, then the join plans exactly like an
+        int-key join — same exchanges, same sorts, same packed bytes."""
         lo, ro = _parse_on(on)
         if how not in ("inner", "left"):
             raise ValueError(how)
-        rep = self._rep_nodes | right._rep_nodes
-        node = ir.Join(self.node, right.node, lo, ro, suffix, how)
-        if self._replicated and right._replicated:
+        left, rgt = self, right
+        lsch, rsch = left.node.schema, rgt.node.schema
+        ltgt: dict[str, tuple] = {}
+        rtgt: dict[str, tuple] = {}
+        for lk, rk in zip(lo, ro):
+            ldt, rdt = lsch.get(lk), rsch.get(rk)
+            if ldt is None or rdt is None:
+                continue                    # ir.Join reports the missing key
+            if is_category(ldt) != is_category(rdt):
+                raise TypeError(
+                    f"merge: key {lk!r}/{rk!r} is category[str] on one side "
+                    "and numeric on the other — encode both sides the same "
+                    "way at ingest")
+            if is_category(ldt) and \
+                    categories_of(ldt) != categories_of(rdt):
+                u = union_categories(categories_of(ldt), categories_of(rdt))
+                ltgt[lk] = u
+                rtgt[rk] = u
+        left = left._recode(ltgt, {})
+        rgt = rgt._recode(rtgt, {})
+        rep = left._rep_nodes | rgt._rep_nodes
+        node = ir.Join(left.node, rgt.node, lo, ro, suffix, how)
+        if left._replicated and rgt._replicated:
             rep = rep | {node.id}
         return DataFrame(node, rep)
 
@@ -384,8 +710,17 @@ class DataFrame:
                            force_rep=self._force_rep())
         return lowered
 
-    def to_numpy(self, cfg: ExecConfig | None = None) -> dict[str, np.ndarray]:
-        return self.collect(cfg).to_numpy()
+    def to_numpy(self, cfg: ExecConfig | None = None, *,
+                 decode: bool = True) -> dict[str, np.ndarray]:
+        """Collect to host numpy.  Category columns decode back to string
+        object arrays (``None`` for nulls); ``decode=False`` keeps the raw
+        int32 dictionary codes."""
+        out = self.collect(cfg).to_numpy()
+        if decode:
+            for c, dt in self.node.schema.items():
+                if is_category(dt) and c in out:
+                    out[c] = dict_decode(out[c], categories_of(dt))
+        return out
 
     def collect_matrix(self, cols: Sequence[str], cfg: ExecConfig | None = None):
         """Matrix assembly (the paper's transpose(typed_hcat) pattern): returns
@@ -438,7 +773,9 @@ class DataFrame:
         this exact plan fingerprint recorded them."""
         from . import stats as st
         root, info, pplan = self._plan(cfg or ExecConfig())
-        txt = ir.plan_str(root, info.dists) + "\n\n" + pplan.render()
+        sch = ", ".join(f"{k}:{dt}" for k, dt in self.node.schema.items())
+        txt = (ir.plan_str(root, info.dists) + "\nschema: " + sch
+               + "\n\n" + pplan.render())
         est = pplan.root_op.rows_est
         tail = []
         if est is not None:
@@ -503,9 +840,25 @@ class GroupBy:
                            f"{list(self.df.node.schema)}")
         return GroupBy(self.df, self.keys, select=sel)
 
+    # fns with no meaning on dictionary codes (a code sum is garbage);
+    # min/max/first/count/nunique stay valid — code order is lexicographic.
+    _NUMERIC_ONLY = ("sum", "mean", "var", "std", "prod", "any", "all")
+
+    def _check_cat(self, name: str, fn: str, e) -> None:
+        if fn not in self._NUMERIC_ONLY or not isinstance(e, ColRef):
+            return
+        dt = self.df.node.schema.get(e.name)
+        if is_category(dt):
+            raise TypeError(
+                f"agg {name}: {fn!r} over category[str] column {e.name!r} "
+                "has no meaning (dictionary codes aren't numbers); use "
+                "min/max/first/count/nunique, or fillna+astype first")
+
     def _spec(self, name: str, a) -> AggExpr:
         if isinstance(a, AggExpr):
-            return a
+            self._check_cat(name, a.fn, a.expr)
+            e = self.df._rw(a.expr) if a.expr is not None else None
+            return AggExpr(a.fn, e, a.skipna)
         if isinstance(a, str):
             fn = _AGG_ALIASES.get(a, a)
             if fn == "count":
@@ -523,9 +876,16 @@ class GroupBy:
             if isinstance(col, str) and col not in self.df.node.schema:
                 raise KeyError(f"agg {name}: no column {col!r}")
             if fn == "count":
+                # ("x", "count") counts non-null x when x is nullable
+                # (pandas count); otherwise it degenerates to the row count
+                # and keeps the expr-free form (no prep column on the wire).
+                if isinstance(col, str) and \
+                        is_nullable(self.df.node.schema.get(col)):
+                    return AggExpr("count", ColRef(self.df.node.id, col))
                 return AggExpr("count", None)
             e = col if isinstance(col, Expr) else ColRef(self.df.node.id, col)
-            return AggExpr(fn, as_expr(e))
+            self._check_cat(name, fn, e)
+            return AggExpr(fn, self.df._rw(e))
         raise TypeError(f"agg {name}: expected (column, fn), an AggExpr or "
                         f"'count', got {a!r}")
 
@@ -533,8 +893,15 @@ class GroupBy:
         if not aggs:
             raise ValueError("agg() needs at least one name=(column, fn) spec")
         specs = {name: self._spec(name, a) for name, a in aggs.items()}
-        node = ir.Aggregate(self.df.node, self.keys, specs)
-        rep = self.df._rep_nodes | ({node.id} if self.df._replicated else set())
+        # pandas groupby(dropna=True) default: null keys form no group.
+        # Columns resolve by name at evaluation, so specs built against the
+        # pre-drop node stay valid over the filtered child.
+        sch = self.df.node.schema
+        base = self.df
+        if any(is_nullable(sch[k]) for k in self.keys):
+            base = self.df.dropna(subset=self.keys)
+        node = ir.Aggregate(base.node, self.keys, specs)
+        rep = base._rep_nodes | ({node.id} if base._replicated else set())
         return DataFrame(node, frozenset(rep))
 
     aggregate = agg
@@ -543,14 +910,20 @@ class GroupBy:
         """Row count per group (pandas ``.size()``)."""
         return self.agg(**{name: AggExpr("count", None)})
 
-    def _apply_all(self, fn: str) -> DataFrame:
+    def _apply_all(self, fn: str, skipna: bool = True) -> DataFrame:
         if self._select is not None:
             cols = [c for c in self._select if c not in self.keys]
         else:
             cols = [c for c in self.df.node.schema if c not in self.keys]
+        if fn in self._NUMERIC_ONLY:
+            # pandas numeric_only: whole-frame sugar skips category columns
+            # (an explicit agg spec on one raises instead).
+            sch = self.df.node.schema
+            cols = [c for c in cols if not is_category(sch[c])]
         if not cols:
             return self.size(name="count")
-        return self.agg(**{c: AggExpr(fn, ColRef(self.df.node.id, c))
+        return self.agg(**{c: AggExpr(fn, ColRef(self.df.node.id, c),
+                                      skipna=skipna)
                            for c in cols})
 
     def transform(self, fn: str | None = None, **aggs) -> DataFrame:
@@ -605,15 +978,32 @@ class GroupBy:
         w = row_number(self.df, list(self.keys), None, out="__rn__")
         return w[w["__rn__"] <= n].drop("__rn__")
 
-    def sum(self) -> DataFrame:     return self._apply_all("sum")
-    def mean(self) -> DataFrame:    return self._apply_all("mean")
-    def min(self) -> DataFrame:     return self._apply_all("min")
-    def max(self) -> DataFrame:     return self._apply_all("max")
-    def prod(self) -> DataFrame:    return self._apply_all("prod")
-    def any(self) -> DataFrame:     return self._apply_all("any")
-    def all(self) -> DataFrame:     return self._apply_all("all")
-    def count(self) -> DataFrame:   return self._apply_all("count")
-    def nunique(self) -> DataFrame: return self._apply_all("nunique")
+    def sum(self, skipna: bool = True) -> DataFrame:
+        return self._apply_all("sum", skipna)
+
+    def mean(self, skipna: bool = True) -> DataFrame:
+        return self._apply_all("mean", skipna)
+
+    def min(self, skipna: bool = True) -> DataFrame:
+        return self._apply_all("min", skipna)
+
+    def max(self, skipna: bool = True) -> DataFrame:
+        return self._apply_all("max", skipna)
+
+    def prod(self, skipna: bool = True) -> DataFrame:
+        return self._apply_all("prod", skipna)
+
+    def any(self, skipna: bool = True) -> DataFrame:
+        return self._apply_all("any", skipna)
+
+    def all(self, skipna: bool = True) -> DataFrame:
+        return self._apply_all("all", skipna)
+
+    def count(self) -> DataFrame:
+        return self._apply_all("count")
+
+    def nunique(self) -> DataFrame:
+        return self._apply_all("nunique")
 
 
 # ---------------------------------------------------------------------------
@@ -622,11 +1012,42 @@ class GroupBy:
 
 
 def table(columns: dict[str, Any], name: str = "t") -> DataFrame:
-    """Create a data frame from host/device arrays (DataSource analogue)."""
+    """Create a data frame from host/device arrays (DataSource analogue).
+
+    Host columns go through ingest coercion (docs/dtypes.md): string /
+    object-of-string arrays (``None``/``NaN`` holes allowed) are
+    dictionary-encoded into int32 codes with a ``category[str]`` dtype;
+    float columns holding NaN and object columns of numbers with ``None``
+    holes become nullable; datetime/complex/structured inputs raise an
+    actionable error.  Device (jax) arrays pass through untouched — they are
+    assumed clean, numeric, and possibly mid-computation."""
     lens = {k: len(v) for k, v in columns.items()}
     if len(set(lens.values())) > 1:
         raise ValueError(f"column length mismatch: {lens}")
-    return DataFrame(ir.Scan(name, dict(columns)))
+    import jax
+    cols: dict[str, Any] = {}
+    sch: dict[str, Any] = {}
+    for k, v in columns.items():
+        if isinstance(v, jax.Array):
+            cols[k] = v
+            sch[k] = np.dtype(v.dtype)
+            continue
+        cols[k], sch[k] = coerce_column(k, v)
+    return DataFrame(ir.Scan(name, cols, sch))
+
+
+def from_pandas(df, name: str = "t") -> DataFrame:
+    """Build a frame from a pandas DataFrame (duck-typed, no pandas import):
+    columns feed :func:`table`'s ingest coercion, so object/string columns
+    dictionary-encode and ``NaN``/``None``/``pd.NA`` holes become nulls."""
+    if not hasattr(df, "columns") or not hasattr(df, "__getitem__"):
+        raise TypeError(
+            f"from_pandas expects a pandas DataFrame, got {type(df).__name__}")
+    cols = {}
+    for c in df.columns:
+        s = df[c]
+        cols[str(c)] = s.to_numpy() if hasattr(s, "to_numpy") else np.asarray(s)
+    return table(cols, name)
 
 
 def _parse_on(on) -> tuple[tuple[str, ...], tuple[str, ...]]:
@@ -680,13 +1101,50 @@ def aggregate(df: DataFrame, by, **aggs) -> DataFrame:
 
 
 def concat(*dfs: DataFrame) -> DataFrame:
+    """UNION ALL.  Column names must match; logical dtypes unify — category
+    columns recode onto the union dictionary, and a column nullable in any
+    part comes out nullable (ir.Concat reports part 0's schema, so the
+    unified dtypes ride a Project override when parts disagree)."""
     schemas = [tuple(d.node.schema) for d in dfs]
     if len(set(schemas)) > 1:
         raise ValueError(f"schema mismatch in concat: {schemas}")
-    node = ir.Concat(tuple(d.node for d in dfs))
-    rep = frozenset().union(*(d._rep_nodes for d in dfs))
-    if all(d._replicated for d in dfs):
+    parts = list(dfs)
+    targets: list[dict[str, tuple]] = [{} for _ in parts]
+    nullflags: list[dict[str, bool]] = [{} for _ in parts]
+    over: dict[str, Any] = {}
+    for c in schemas[0]:
+        dts = [d.node.schema[c] for d in parts]
+        flags = [is_category(dt) for dt in dts]
+        if any(flags):
+            if not all(flags):
+                raise TypeError(
+                    f"concat: column {c!r} is category[str] in some parts "
+                    "and numeric in others — encode every part the same way")
+            u = categories_of(dts[0])
+            for dt in dts[1:]:
+                u = union_categories(u, categories_of(dt))
+            nb = any(is_nullable(dt) for dt in dts)
+            for i, dt in enumerate(dts):
+                if categories_of(dt) != u or is_nullable(dt) != nb:
+                    targets[i][c] = u
+                    nullflags[i][c] = nb
+            over[c] = DType(CODE_DTYPE, u, nullable=nb)
+        elif any(is_nullable(dt) for dt in dts) \
+                and not is_nullable(dts[0]):
+            over[c] = as_nullable(dts[0])
+    parts = [d._recode(t, nf)
+             for d, t, nf in zip(parts, targets, nullflags)]
+    node = ir.Concat(tuple(d.node for d in parts))
+    rep = frozenset().union(*(d._rep_nodes for d in parts))
+    if all(d._replicated for d in parts):
         rep = rep | {node.id}
+    if over:
+        sch = node.schema
+        proj = ir.Project(node, {c: ColRef(node.id, c) for c in sch},
+                          {c: over.get(c, sch[c]) for c in sch})
+        if node.id in rep:
+            rep = rep | {proj.id}
+        node = proj
     return DataFrame(node, frozenset(rep))
 
 
@@ -698,7 +1156,7 @@ def cumsum(df: DataFrame, e, out: str = "cumsum", *,
     (``SUM(...) OVER (PARTITION BY ... ORDER BY ...)``) and rows come back
     hash-partitioned on the group keys, sorted by (partition, order) keys
     within each shard — the grouped layout, not input order."""
-    return DataFrame(ir.Window(df.node, "cumsum", as_expr(e), out,
+    return DataFrame(ir.Window(df.node, "cumsum", df._rw(e), out,
                                partition_by=_over_keys(partition_by),
                                order_by=_over_keys(order_by)),
                      df._rep_nodes)
@@ -716,7 +1174,7 @@ def stencil(df: DataFrame, e, weights: Sequence[float], *, scale: float = 1.0,
     of the taps that actually contributed (see :func:`rolling_mean`)."""
     w = tuple(float(x) / scale for x in weights)
     c = len(w) // 2 if center is None else center
-    return DataFrame(ir.Window(df.node, "stencil", as_expr(e), out,
+    return DataFrame(ir.Window(df.node, "stencil", df._rw(e), out,
                                weights=w, center=c, exact=exact,
                                partition_by=_over_keys(partition_by),
                                order_by=_over_keys(order_by)),

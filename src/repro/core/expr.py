@@ -57,6 +57,23 @@ class Expr:
     def __neg__(self):     return UnOp("neg", self)
     def __abs__(self):     return UnOp("abs", self)
 
+    def isin(self, values) -> "IsIn":
+        """Membership test (pandas ``Series.isin``).  String values against a
+        category column lower to code-space comparison at plan-build time."""
+        return IsIn(self, tuple(values))
+
+    def isna(self) -> "UnOp":
+        """True where the value is null (NaN for floats, null code for
+        category columns — resolved against the schema at plan-build time)."""
+        return UnOp("isna", self)
+
+    def notna(self) -> "UnOp":
+        return UnOp("not", self.isna())
+
+    def astype(self, dtype) -> "Cast":
+        """Element-wise cast to a numpy dtype."""
+        return Cast(self, dtype)
+
     def __hash__(self):
         return hash(self.key())
 
@@ -169,6 +186,45 @@ class UnOp(Expr):
         return f"{self.op}({self.children[0]})"
 
 
+class IsIn(Expr):
+    """Membership of a column expression in a small literal value set.
+
+    Evaluates as an OR-chain of equality comparisons (the set is a plan
+    constant).  String value sets against category columns are rewritten to
+    int32 code sets by the API layer before lowering.
+    """
+
+    def __init__(self, a: Expr, values: tuple):
+        self.children = (a,)
+        self.values = tuple(values)
+
+    def key(self):
+        return ("isin", self.children[0].key(), self.values)
+
+    def with_children(self, children):
+        return IsIn(children[0], self.values)
+
+    def __repr__(self):
+        return f"isin({self.children[0]}, {list(self.values)})"
+
+
+class Cast(Expr):
+    """Element-wise dtype cast (``Expr.astype`` / ``DataFrame.astype``)."""
+
+    def __init__(self, a: Expr, dtype):
+        self.children = (a,)
+        self.to = np.dtype(dtype)
+
+    def key(self):
+        return ("cast", self.children[0].key(), self.to.str)
+
+    def with_children(self, children):
+        return Cast(children[0], self.to)
+
+    def __repr__(self):
+        return f"cast[{self.to.name}]({self.children[0]})"
+
+
 class UDF(Expr):
     """Element-wise user-defined function over one or more columns.
 
@@ -210,10 +266,18 @@ AGG_FNS = ("sum", "mean", "count", "min", "max", "prod", "any", "all",
 
 @dataclasses.dataclass(frozen=True)
 class AggExpr:
-    """A reduction ``fn`` over an element-wise expression, e.g. sum(:x < 1.0)."""
+    """A reduction ``fn`` over an element-wise expression, e.g. sum(:x < 1.0).
+
+    ``skipna`` follows pandas: nulls (NaN / null dictionary codes) are
+    excluded from the reduction by default; ``skipna=False`` lets them
+    poison the group result.  ``count`` over an expression counts non-null
+    values (pandas ``count``); ``count`` with ``expr=None`` counts rows
+    (pandas ``size``) and ignores ``skipna``.
+    """
 
     fn: str
     expr: Expr = None  # None for count()
+    skipna: bool = True
 
     def __post_init__(self):
         if self.fn not in AGG_FNS:
@@ -221,18 +285,21 @@ class AggExpr:
                 f"unknown aggregation fn {self.fn!r}; valid: {AGG_FNS}")
 
 
-def sum_(e):    return AggExpr("sum", as_expr(e))
-def mean(e):    return AggExpr("mean", as_expr(e))
-def count():    return AggExpr("count", None)
-def min_(e):    return AggExpr("min", as_expr(e))
-def max_(e):    return AggExpr("max", as_expr(e))
-def prod(e):    return AggExpr("prod", as_expr(e))
-def any_(e):    return AggExpr("any", as_expr(e))
-def all_(e):    return AggExpr("all", as_expr(e))
-def var(e):     return AggExpr("var", as_expr(e))
-def std(e):     return AggExpr("std", as_expr(e))
-def first(e):   return AggExpr("first", as_expr(e))
-def nunique(e): return AggExpr("nunique", as_expr(e))
+def sum_(e, skipna=True):    return AggExpr("sum", as_expr(e), skipna)
+def mean(e, skipna=True):    return AggExpr("mean", as_expr(e), skipna)
+def min_(e, skipna=True):    return AggExpr("min", as_expr(e), skipna)
+def max_(e, skipna=True):    return AggExpr("max", as_expr(e), skipna)
+def prod(e, skipna=True):    return AggExpr("prod", as_expr(e), skipna)
+def any_(e, skipna=True):    return AggExpr("any", as_expr(e), skipna)
+def all_(e, skipna=True):    return AggExpr("all", as_expr(e), skipna)
+def var(e, skipna=True):     return AggExpr("var", as_expr(e), skipna)
+def std(e, skipna=True):     return AggExpr("std", as_expr(e), skipna)
+def first(e, skipna=True):   return AggExpr("first", as_expr(e), skipna)
+def nunique(e, skipna=True): return AggExpr("nunique", as_expr(e), skipna)
+
+
+def count(e=None):
+    return AggExpr("count", as_expr(e) if e is not None else None)
 
 
 # ---------------------------------------------------------------------------
@@ -297,7 +364,25 @@ def evaluate(e: Expr, env: dict[str, jax.Array],
         b = evaluate(e.children[1], env, cache)
         out = _BIN_IMPL[e.op](a, b)
     elif isinstance(e, UnOp):
-        out = _UN_IMPL[e.op](evaluate(e.children[0], env, cache))
+        if e.op == "isna":
+            # Unresolved fallback: floats are null iff NaN; non-float columns
+            # cannot hold nulls (category isna is rewritten to a code test
+            # against the schema before lowering).
+            a = evaluate(e.children[0], env, cache)
+            out = jnp.isnan(a) if jnp.issubdtype(a.dtype, jnp.floating) \
+                else jnp.zeros(jnp.shape(a), dtype=bool)
+        else:
+            out = _UN_IMPL[e.op](evaluate(e.children[0], env, cache))
+    elif isinstance(e, IsIn):
+        a = evaluate(e.children[0], env, cache)
+        if not e.values:
+            out = jnp.zeros(jnp.shape(a), dtype=bool)
+        else:
+            out = jnp.zeros(jnp.shape(a), dtype=bool)
+            for v in e.values:
+                out = out | (a == jnp.asarray(v))
+    elif isinstance(e, Cast):
+        out = evaluate(e.children[0], env, cache).astype(e.to)
     elif isinstance(e, UDF):
         out = e.fn(*(evaluate(c, env, cache) for c in e.children))
     else:
@@ -315,3 +400,106 @@ def log(e):   return UnOp("log", as_expr(e))
 def exp(e):   return UnOp("exp", as_expr(e))
 def sqrt(e):  return UnOp("sqrt", as_expr(e))
 def isnan(e): return UnOp("isnan", as_expr(e))
+
+
+# ---------------------------------------------------------------------------
+# Static result-dtype / nullability inference (schema propagation)
+# ---------------------------------------------------------------------------
+
+_BOOL_BIN = frozenset({"lt", "le", "gt", "ge", "eq", "ne", "and", "or"})
+_BOOL_UN = frozenset({"not", "isnan", "isna"})
+_FLOAT_UN = frozenset({"log", "exp", "sqrt", "floor", "ceil"})
+
+
+def _float_ty() -> np.dtype:
+    # jax's canonical float for the active x64 setting
+    return np.dtype(jnp.result_type(float))
+
+
+def infer_dtype(e: Expr, schema: dict[str, Any]) -> np.dtype:
+    """Physical result dtype of ``e`` over columns typed by ``schema``.
+
+    Mirrors jnp promotion under the active x64 setting, so ``explain()`` and
+    the capacity/byte censuses report what the lowered program actually
+    computes instead of a blanket float32 (the old ``ir.Project`` fallback).
+    UDFs are abstractly traced via ``jax.eval_shape``; anything untraceable
+    falls back to float32.
+    """
+    if isinstance(e, ColRef):
+        dt = schema.get(e.name)
+        return np.dtype(dt) if dt is not None else np.dtype(np.float32)
+    if isinstance(e, Const):
+        return np.dtype(jnp.result_type(e.value))
+    if isinstance(e, ExternalArray):
+        return np.dtype(jnp.result_type(e.array.dtype))
+    if isinstance(e, IsIn):
+        return np.dtype(bool)
+    if isinstance(e, Cast):
+        return e.to
+    if isinstance(e, BinOp):
+        if e.op in _BOOL_BIN:
+            return np.dtype(bool)
+        a = infer_dtype(e.children[0], schema)
+        b = infer_dtype(e.children[1], schema)
+        t = np.dtype(jnp.promote_types(a, b))
+        if e.op == "div" and not np.issubdtype(t, np.floating):
+            t = np.dtype(jnp.promote_types(t, _float_ty()))
+        return t
+    if isinstance(e, UnOp):
+        if e.op in _BOOL_UN:
+            return np.dtype(bool)
+        t = infer_dtype(e.children[0], schema)
+        if e.op in _FLOAT_UN and not np.issubdtype(t, np.floating):
+            return np.dtype(jnp.promote_types(t, _float_ty()))
+        if e.op == "neg" and t == np.dtype(bool):
+            return np.dtype(np.int32)
+        return t
+    if isinstance(e, UDF):
+        try:
+            spec = [jax.ShapeDtypeStruct((4,), infer_dtype(c, schema))
+                    for c in e.children]
+            return np.dtype(jax.eval_shape(e.fn, *spec).dtype)
+        except Exception:
+            return np.dtype(np.float32)
+    return np.dtype(np.float32)
+
+
+def expr_nullable(e: Expr, schema: dict[str, Any]) -> bool:
+    """Whether ``e`` can produce nulls (NaN / null codes) over ``schema``.
+
+    Comparisons and membership tests are never null (NaN compares False —
+    pandas semantics); arithmetic propagates nullability; non-nullable
+    sources stay non-nullable, so null-free pipelines pay zero masking cost.
+    """
+    from .dtypes import is_nullable
+    if isinstance(e, ColRef):
+        return is_nullable(schema.get(e.name))
+    if isinstance(e, (Const, ExternalArray, IsIn)):
+        return False
+    if isinstance(e, BinOp):
+        if e.op in _BOOL_BIN:
+            return False
+        return any(expr_nullable(c, schema) for c in e.children)
+    if isinstance(e, UnOp):
+        if e.op in _BOOL_UN:
+            return False
+        return expr_nullable(e.children[0], schema)
+    if isinstance(e, (Cast, UDF)):
+        return any(expr_nullable(c, schema) for c in e.children)
+    return False
+
+
+def nulltag_for(e: Expr | None, schema: dict[str, Any]) -> str | None:
+    """The in-band null encoding of an expression's values over ``schema``:
+    ``"code"`` (dictionary code -1) for nullable category columns, ``"nan"``
+    for nullable floating results, None for everything null-free — the tag
+    the segment/partial kernels use to DERIVE validity masks, decided at
+    lowering time so null-free pipelines take the exact pre-null code paths.
+    """
+    from .dtypes import is_category
+    if e is None or not expr_nullable(e, schema):
+        return None
+    if isinstance(e, ColRef) and is_category(schema.get(e.name)):
+        return "code"
+    dt = np.dtype(infer_dtype(e, schema))
+    return "nan" if np.issubdtype(dt, np.floating) else None

@@ -17,7 +17,8 @@ from typing import Any, Optional
 
 import numpy as np
 
-from .expr import AggExpr, ColRef, Expr
+from .expr import AggExpr, ColRef, Expr, expr_nullable, infer_dtype
+from .dtypes import as_nullable, is_category, is_nullable
 
 _ids = itertools.count()
 
@@ -217,9 +218,11 @@ class Project(Node):
         out = {}
         for name, e in self.cols.items():
             if isinstance(e, ColRef) and e.name in child_schema:
-                out[name] = child_schema[e.name]
+                out[name] = child_schema[e.name]  # logical dtype rides along
             else:
-                out[name] = np.dtype(np.float32)  # refined at lowering
+                dt = infer_dtype(e, child_schema)
+                out[name] = (as_nullable(dt)
+                             if expr_nullable(e, child_schema) else dt)
         return out
 
     def passthrough(self) -> dict[str, str]:
@@ -272,6 +275,11 @@ class Join(Node):
         for name, dt in rs.items():
             if name in self.right_on:
                 continue  # keys are unified into left_on
+            if self.how == "left" and (
+                    is_category(dt) or np.issubdtype(np.dtype(dt), np.floating)):
+                # unmatched left rows null-fill the right columns (NaN /
+                # null code); int payloads keep zero-fill + _matched
+                dt = as_nullable(dt)
             out[name + self.suffix if name in out else name] = dt
         if self.how == "left":
             out["_matched"] = np.dtype(np.int32)
@@ -310,14 +318,31 @@ class Aggregate(Node):
         cs = self.child.schema
         out = {k: cs[k] for k in self.key}
         for name, agg in self.aggs.items():
+            nullable = agg.expr is not None and (
+                expr_nullable(agg.expr, cs)
+                or (isinstance(agg.expr, ColRef)
+                    and is_nullable(cs.get(agg.expr.name))))
             if agg.fn in ("count", "nunique"):
                 out[name] = np.dtype(np.int32)
             elif agg.fn in ("any", "all"):
                 out[name] = np.dtype(np.bool_)
             elif agg.fn in ("mean", "var", "std"):
-                out[name] = np.dtype(np.float32)
+                dt = np.dtype(np.float32)
+                out[name] = as_nullable(dt) if nullable else dt
+            elif agg.fn in ("min", "max", "first"):
+                # value dtype passes through — category min/max/first stay
+                # category (sorted dictionaries make code order string order)
+                dt = infer_dtype(agg.expr, cs)
+                if isinstance(agg.expr, ColRef) and is_category(cs.get(agg.expr.name)):
+                    dt = cs[agg.expr.name]
+                out[name] = as_nullable(dt) if nullable else dt
+            elif agg.fn in ("sum", "prod"):
+                dt = infer_dtype(agg.expr, cs)
+                if dt == np.dtype(bool):
+                    dt = np.dtype(np.int32)  # segment sums cast bool up
+                out[name] = dt  # skipna sum/prod of all-null = 0/1, not null
             else:
-                out[name] = np.dtype(np.float32)  # refined at lowering
+                out[name] = np.dtype(np.float32)
         return out
 
     def with_children(self, children):
@@ -436,8 +461,16 @@ class Window(Node):
     @property
     def schema(self):
         s = self.child.schema
-        s[self.out] = (np.dtype(np.int32) if self.kind in RANK_KINDS
-                       else np.dtype(np.float32))
+        if self.kind in RANK_KINDS:
+            s[self.out] = np.dtype(np.int32)
+        elif self.kind == "cumsum" and self.expr is not None:
+            dt = infer_dtype(self.expr, s)
+            if dt == np.dtype(bool):
+                dt = np.dtype(np.int32)  # cumsum promotes bool
+            s[self.out] = (as_nullable(dt)
+                           if expr_nullable(self.expr, s) else dt)
+        else:
+            s[self.out] = np.dtype(np.float32)  # stencils compute in float
         return s
 
     def with_children(self, children):

@@ -30,7 +30,8 @@ from . import ir, physical as phys
 from . import physical_plan as pp
 from ..kernels import registry as kreg
 from .compat import shard_map as _compat_shard_map
-from .expr import ExternalArray, evaluate
+from .dtypes import NULL_CODE, is_category, physical_dtype
+from .expr import ExternalArray, evaluate, nulltag_for
 from .table import DTable, pad_to
 
 
@@ -255,8 +256,10 @@ class Lowered:
                         # no collectives.
                         pk = tuple(cols[k] for k in n.partition_by)
                         if n.kind == "cumsum":
+                            tag = nulltag_for(n.expr, n.children[0].schema)
                             col = phys.segment_cumsum(x, pk, cnt,
-                                                      kernels=kernels)
+                                                      kernels=kernels,
+                                                      nulltag=tag)
                         elif n.kind == "stencil":
                             col = phys.segment_stencil1d(x, pk, cnt,
                                                          n.weights, n.center,
@@ -267,9 +270,18 @@ class Lowered:
                             col = phys.segment_rank(pk, ok, cnt, n.kind,
                                                     kernels=kernels)
                     elif n.kind == "cumsum":
+                        tag = nulltag_for(n.expr, n.children[0].schema)
+                        nullm = phys.null_mask(x, tag)
+                        if nullm is not None:   # pandas: nulls stay null,
+                            x = jnp.where(nullm, jnp.zeros((), x.dtype), x)
                         col = phys.dist_cumsum(x, cnt, ax,
                                                method=cfg.exscan_method,
                                                kernels=kernels)
+                        if nullm is not None:   # the running total skips them
+                            col = jnp.where(
+                                nullm,
+                                phys.null_value(col.dtype, tag).astype(col.dtype),
+                                col)
                     else:
                         col = phys.stencil1d(x, cnt, n.weights, n.center, ax,
                                              kernels=kernels, exact=n.exact)
@@ -304,7 +316,8 @@ class Lowered:
                             if c not in ron}
                     out, cnt2, ovf = phys.merge_join(
                         lcols, lcnt, rcols, rcnt, lon, ron,
-                        cap_out=op.cap, r_suffix_map=smap, how=n.how)
+                        cap_out=op.cap, r_suffix_map=smap, how=n.how,
+                        null_fill=_join_null_fill(n))
                     flags.append(ovf)
                     out.pop(phys.SALT_COL, None)    # strip probe-side salt
                     res = (out, cnt2)
@@ -339,7 +352,11 @@ class Lowered:
 
                 elif isinstance(op, pp.PartialAgg):
                     cols, cnt = env[op.inputs[0]]
-                    values = {name: (agg.fn, cols["__v_" + name])
+                    tags = _agg_nulltags(n)
+                    values = {name: (agg.fn, cols["__v_" + name],
+                                     agg.skipna, tags[name])
+                              if tags[name] is not None
+                              else (agg.fn, cols["__v_" + name])
                               for name, agg in n.aggs.items()}
                     keys = tuple(cols[k] for k in n.key)
                     out, n_seg, ovf = phys.partial_aggregate(
@@ -350,13 +367,19 @@ class Lowered:
                 elif isinstance(op, pp.SegmentAgg):
                     cols, cnt = env[op.inputs[0]]
                     keys = tuple(cols[k] for k in n.key)
+                    tags = _agg_nulltags(n)
                     if op.from_partials:
+                        fns = {name: (agg.fn, agg.skipna, tags[name])
+                               if tags[name] is not None else agg.fn
+                               for name, agg in n.aggs.items()}
                         out, n_seg, ovf = phys.final_aggregate(
-                            keys, cnt,
-                            {name: agg.fn for name, agg in n.aggs.items()},
+                            keys, cnt, fns,
                             cols, cap_out=op.cap, kernels=kernels)
                     else:
-                        values = {name: (agg.fn, cols["__v_" + name])
+                        values = {name: (agg.fn, cols["__v_" + name],
+                                         agg.skipna, tags[name])
+                                  if tags[name] is not None
+                                  else (agg.fn, cols["__v_" + name])
                                   for name, agg in n.aggs.items()}
                         out, n_seg, ovf = phys.segment_aggregate(
                             keys, cnt, values, cap_out=op.cap,
@@ -489,6 +512,31 @@ class Lowered:
         return DTable(columns=out["cols"], counts=out["count"],
                       capacity=cap, nshards=self.P, dist=self.dists[self.root.id],
                       overflow=bool(np.any(np.asarray(out["overflow"]))))
+
+
+def _agg_nulltags(n: ir.Aggregate) -> dict[str, str | None]:
+    """Per-output null tag for an Aggregate's value expressions, decided
+    from the child's LOGICAL schema (None = exact pre-null code path)."""
+    sch = n.children[0].schema
+    return {name: nulltag_for(agg.expr, sch) for name, agg in n.aggs.items()}
+
+
+def _join_null_fill(n: ir.Join) -> dict[str, Any] | None:
+    """Unmatched-row fill values for a left join's right columns, from the
+    right child's logical schema: null code for categories, NaN for floats
+    (matching the nullable output schema ir.Join declares); int columns
+    keep the legacy zero-fill + ``_matched`` flag."""
+    if n.how != "left":
+        return None
+    fill: dict[str, Any] = {}
+    for c, dt in n.children[1].schema.items():
+        if c in n.right_on:
+            continue
+        if is_category(dt):
+            fill[c] = NULL_CODE
+        elif np.issubdtype(physical_dtype(dt), np.floating):
+            fill[c] = np.nan
+    return fill or None
 
 
 def _restore_key_names(out: dict, key: tuple[str, ...]) -> dict:

@@ -276,7 +276,9 @@ def prune_columns(root: ir.Node, keep: set[str] | None = None) -> tuple[ir.Node,
                 live_cols = {k: v for k, v in out.cols.items() if k in need}
                 if len(live_cols) < len(out.cols):
                     pruned += len(out.cols) - len(live_cols)
-                    out = ir.Project(out.child, live_cols)
+                    dts = ({k: v for k, v in out.dtypes.items()
+                            if k in live_cols} if out.dtypes else None)
+                    out = ir.Project(out.child, live_cols, dts)
             elif isinstance(out, ir.Aggregate):
                 live_aggs = {k: v for k, v in out.aggs.items()
                              if k in need or k in out.key}

@@ -411,7 +411,8 @@ def lex_ranks(keycols: Sequence[jax.Array], valid: jax.Array):
 
 
 def merge_join(lcols, lcount, rcols, rcount, lkeys, rkeys, *,
-               cap_out: int, r_suffix_map: dict[str, str], how: str = "inner"):
+               cap_out: int, r_suffix_map: dict[str, str], how: str = "inner",
+               null_fill: dict[str, Any] | None = None):
     """Equi-join of two co-partitioned shards (inner or left-outer) on one
     or more key columns.  Inputs do NOT need to be pre-sorted.
 
@@ -484,8 +485,11 @@ def merge_join(lcols, lcount, rcols, rcount, lkeys, rkeys, *,
     for name, v in rcols.items():
         if name in rkeys:
             continue
-        out[r_suffix_map.get(name, name)] = jnp.where(
-            r_valid, v[ri_c], jnp.zeros((), v.dtype))
+        # unmatched left rows NULL-fill right columns: NaN for floats, the
+        # null dictionary code for categories (null_fill, from the schema);
+        # other dtypes keep zero-fill + the _matched indicator.
+        fill = jnp.asarray((null_fill or {}).get(name, 0), v.dtype)
+        out[r_suffix_map.get(name, name)] = jnp.where(r_valid, v[ri_c], fill)
     if how == "left":
         out["_matched"] = (out_valid & matched).astype(jnp.int32)
     return out, jnp.minimum(total, cap_out).astype(jnp.int32), overflow
@@ -495,7 +499,37 @@ def merge_join(lcols, lcount, rcols, rcount, lkeys, rkeys, *,
 # segmented aggregation (group-by backend; sorted-key TPU idiom)
 # ---------------------------------------------------------------------------
 
-def segment_aggregate(keys_sorted, count, values: dict[str, tuple[str, jax.Array]],
+def null_mask(x: jax.Array, nulltag: str | None):
+    """Row nullity under the in-band null encoding (docs/dtypes.md):
+    ``"nan"`` — floats, null iff NaN; ``"code"`` — dictionary codes, null
+    iff negative; ``None`` — the column cannot hold nulls."""
+    if nulltag == "nan":
+        if not jnp.issubdtype(x.dtype, jnp.floating):
+            return jnp.zeros(x.shape, bool)
+        return jnp.isnan(x)
+    if nulltag == "code":
+        return x < 0
+    return None
+
+
+def null_value(dtype, nulltag: str | None):
+    """The in-band null of a value dtype (NaN / the null code)."""
+    dtype = jnp.asarray(jnp.zeros((), dtype)).dtype
+    if nulltag == "code" or not jnp.issubdtype(dtype, jnp.floating):
+        return jnp.asarray(-1, dtype)
+    return jnp.asarray(jnp.nan, dtype)
+
+
+def _value_spec(spec):
+    """Normalize a values entry: (fn, x) or (fn, x, skipna, nulltag)."""
+    if len(spec) == 2:
+        fn, x = spec
+        return fn, x, True, None
+    fn, x, skipna, nulltag = spec
+    return fn, x, skipna, nulltag
+
+
+def segment_aggregate(keys_sorted, count, values: dict[str, tuple],
                       *, cap_out: int, kernels=None,
                       presorted: Sequence[str] = ()):
     """Aggregate ``values`` over runs of equal (grouped) composite keys.
@@ -504,10 +538,20 @@ def segment_aggregate(keys_sorted, count, values: dict[str, tuple[str, jax.Array
     must have equal key tuples CONTIGUOUS (sorted by a key prefix, either
     direction — though ``nunique`` additionally requires ascending, see
     below).  A new run starts where ANY key column differs from the previous
-    row.  values: name -> (fn, value_array) with fn in {sum, mean, count,
-    min, max, prod, any, all, var, std, first, nunique} (``any``/``all``
-    reduce the truth of ``x != 0`` and return bool).  Any number of nunique
-    columns is
+    row.  values: name -> (fn, value_array) or (fn, value_array, skipna,
+    nulltag) with fn in {sum, mean, count, min, max, prod, any, all, var,
+    std, first, nunique} (``any``/``all`` reduce the truth of ``x != 0`` and
+    return bool).
+
+    ``nulltag`` ("nan" | "code" | None, see :func:`null_mask`) marks value
+    columns that can hold in-band nulls; with ``skipna=True`` (pandas
+    default) null rows are excluded from the reduction and all-null groups
+    yield the null value; with ``skipna=False`` nulls poison their group's
+    result.  ``count`` over a nullable column counts non-null rows (pandas
+    ``count``); ``nunique`` always ignores nulls (pandas ``dropna=True``).
+    Columns without a nulltag take the exact pre-null code paths.
+
+    Any number of nunique columns is
     supported: each one re-sorts (keys..., x) independently with one
     ``lax.sort`` and counts within-run value boundaries; the aux sort is
     ascending, so its group order matches the main segment order only for
@@ -533,41 +577,45 @@ def segment_aggregate(keys_sorted, count, values: dict[str, tuple[str, jax.Array
     n_seg = jnp.sum(seg_start.astype(jnp.int32))
     overflow = n_seg > cap_out
 
-    def ssum(x):
+    def ssum(x, v=None):
+        v = valid if v is None else v
         if x.dtype == jnp.bool_:
             x = x.astype(jnp.int32)      # sum(:x < 1.0) counts True rows
         if jnp.issubdtype(x.dtype, jnp.floating):
             # registry segment_sums: ref is the dtype-preserving
             # jax.ops.segment_sum composition; the Pallas backend is the
             # segment_reduce scan-difference kernel (f32 accumulation).
-            return _K(kernels).segment_sums(x, seg_id, valid, cap_out)
+            return _K(kernels).segment_sums(x, seg_id, v, cap_out)
         # integer sums stay on segment_sum directly for exactness (the
         # Pallas kernel accumulates in f32).
-        return jax.ops.segment_sum(jnp.where(valid, x, jnp.zeros((), x.dtype)),
+        return jax.ops.segment_sum(jnp.where(v, x, jnp.zeros((), x.dtype)),
                                    seg_id, num_segments=cap_out + 1)[:cap_out]
 
-    def smin(x):
+    def smin(x, v=None):
+        v = valid if v is None else v
         if x.dtype == jnp.bool_:
             x = x.astype(jnp.int32)      # bool has no iinfo sentinel
         big = _sentinel(x.dtype)
-        return jax.ops.segment_min(jnp.where(valid, x, big), seg_id,
+        return jax.ops.segment_min(jnp.where(v, x, big), seg_id,
                                    num_segments=cap_out + 1)[:cap_out]
 
-    def smax(x):
+    def smax(x, v=None):
+        v = valid if v is None else v
         if x.dtype == jnp.bool_:
             x = x.astype(jnp.int32)
         if jnp.issubdtype(x.dtype, jnp.floating):
             small = jnp.array(jnp.finfo(x.dtype).min, x.dtype)
         else:
             small = jnp.array(jnp.iinfo(x.dtype).min, x.dtype)
-        return jax.ops.segment_max(jnp.where(valid, x, small), seg_id,
+        return jax.ops.segment_max(jnp.where(v, x, small), seg_id,
                                    num_segments=cap_out + 1)[:cap_out]
 
-    def sprod(x):
+    def sprod(x, v=None):
+        v = valid if v is None else v
         if x.dtype == jnp.bool_:
             x = x.astype(jnp.int32)
         one = jnp.ones((), x.dtype)
-        return jax.ops.segment_prod(jnp.where(valid, x, one), seg_id,
+        return jax.ops.segment_prod(jnp.where(v, x, one), seg_id,
                                     num_segments=cap_out + 1)[:cap_out]
 
     ones = valid.astype(jnp.int32)
@@ -582,41 +630,83 @@ def segment_aggregate(keys_sorted, count, values: dict[str, tuple[str, jax.Array
             jnp.where(valid, ks, neg),
             seg_id, num_segments=cap_out + 1)[:cap_out]
 
-    for name, (fn, x) in values.items():
+    for name, spec in values.items():
+        fn, x, skipna, nulltag = _value_spec(spec)
+        nullm = null_mask(x, nulltag) if x is not None else None
+        # vvalid: rows contributing under skipna; vn: their per-group count;
+        # has_null: whether the group saw a null (skipna=False poisoning).
+        vvalid = valid if nullm is None else valid & ~nullm
+        vn = has_null = None
+        if nullm is not None:
+            vn = jax.ops.segment_sum(vvalid.astype(jnp.int32), seg_id,
+                                     num_segments=cap_out + 1)[:cap_out]
+            has_null = vn < group_n
+
+        def _null_out(res, dt):
+            """null-fill groups with no contributing rows (skipna) or with
+            any null row (skipna=False)."""
+            if nullm is None:
+                return res
+            bad = (vn == 0) if skipna else has_null
+            return jnp.where(bad, null_value(dt, nulltag).astype(dt), res)
+
         if fn == "count":
-            out[name] = group_n
+            out[name] = group_n if nullm is None else vn
         elif fn == "sum":
-            out[name] = ssum(x)
+            # skipna sum of an all-null group is 0 (pandas); skipna=False
+            # lets NaN propagate — codes are never summed.
+            out[name] = ssum(x, vvalid if skipna else valid)
         elif fn == "mean":
-            out[name] = ssum(x.astype(jnp.float32)) / jnp.maximum(group_n, 1)
+            xf = x.astype(jnp.float32)
+            v = vvalid if skipna else valid
+            n = vn if (skipna and nullm is not None) else group_n
+            res = ssum(xf, v) / jnp.maximum(n, 1)
+            out[name] = _null_out(res, res.dtype)
         elif fn == "min":
-            out[name] = smin(x)
+            res = smin(x, vvalid if skipna else valid)
+            out[name] = _null_out(res, res.dtype)
         elif fn == "max":
-            out[name] = smax(x)
+            res = smax(x, vvalid if skipna else valid)
+            out[name] = _null_out(res, res.dtype)
         elif fn == "prod":
-            out[name] = sprod(x)
+            # skipna prod of an all-null group is 1 (pandas)
+            out[name] = sprod(x, vvalid if skipna else valid)
         elif fn == "any":
-            out[name] = smax((x != 0).astype(jnp.int32)) > 0
+            # skipna: nulls never assert truth; skipna=False: NaN is truthy
+            # (x != 0 holds for NaN), matching pandas
+            flag = (x != 0).astype(jnp.int32)
+            out[name] = smax(flag, vvalid if skipna else valid) > 0
         elif fn == "all":
-            out[name] = smin((x != 0).astype(jnp.int32)) > 0
+            flag = (x != 0).astype(jnp.int32)
+            out[name] = smin(flag, vvalid if skipna else valid) > 0
         elif fn in ("var", "std"):
             xf = x.astype(jnp.float32)
-            m = ssum(xf) / jnp.maximum(group_n, 1)
-            m2 = ssum(xf * xf) / jnp.maximum(group_n, 1)
-            v = jnp.maximum(m2 - m * m, 0.0)
-            out[name] = jnp.sqrt(v) if fn == "std" else v
+            v = vvalid if skipna else valid
+            n = vn if (skipna and nullm is not None) else group_n
+            m = ssum(xf, v) / jnp.maximum(n, 1)
+            m2 = ssum(xf * xf, v) / jnp.maximum(n, 1)
+            var = jnp.maximum(m2 - m * m, 0.0)
+            res = jnp.sqrt(var) if fn == "std" else var
+            out[name] = _null_out(res, res.dtype)
         elif fn == "first":
+            # pandas groupby.first(skipna=True) takes the first NON-NULL
+            v = vvalid if skipna else valid
             first_idx = jax.ops.segment_min(
-                jnp.where(valid, jnp.arange(cap, dtype=jnp.int32), cap),
+                jnp.where(v, jnp.arange(cap, dtype=jnp.int32), cap),
                 seg_id, num_segments=cap_out + 1)[:cap_out]
-            out[name] = x[jnp.clip(first_idx, 0, cap - 1)]
+            res = x[jnp.clip(first_idx, 0, cap - 1)]
+            if nullm is not None and skipna:
+                res = jnp.where(first_idx >= cap,
+                                null_value(res.dtype, nulltag).astype(res.dtype),
+                                res)
+            out[name] = res
         elif fn == "nunique" and name in presorted:
             # aux-sort elision: x is already sorted within each key run (it
             # was a trailing key of the planner's LocalSort), so distinct
             # values are contiguous and boundaries fall out of the MAIN
             # segment machinery — no extra lax.sort.
             vprev = jnp.concatenate([jnp.full((1,), True), x[1:] != x[:-1]])
-            boundary = (seg_start | vprev) & valid
+            boundary = (seg_start | vprev) & vvalid   # nulls never distinct
             out[name] = jax.ops.segment_sum(boundary.astype(jnp.int32), seg_id,
                                             num_segments=cap_out + 1)[:cap_out]
         elif fn == "nunique":
@@ -635,6 +725,9 @@ def segment_aggregate(keys_sorted, count, values: dict[str, tuple[str, jax.Array
             seg_id2 = jnp.where(valid, seg_id2, cap_out)
             vprev = jnp.concatenate([jnp.full((1,), True), sx[1:] != sx[:-1]])
             boundary = (seg_start2 | vprev) & valid
+            snullm = null_mask(sx, nulltag)
+            if snullm is not None:
+                boundary = boundary & ~snullm   # null runs don't count
             out[name] = jax.ops.segment_sum(boundary.astype(jnp.int32), seg_id2,
                                             num_segments=cap_out + 1)[:cap_out]
         else:
@@ -752,54 +845,132 @@ AGG_DECOMP: dict[str, tuple[tuple[PartialSpec, ...], Any]] = {
 DECOMPOSABLE_AGGS = frozenset(AGG_DECOMP)
 
 
-def partial_decompose(name: str, fn: str, x: jax.Array):
-    """Partial-column specs for one decomposable agg output: a list of
-    ``(partial_name, partial_fn, array)`` triples feeding segment_aggregate."""
+def _agg_null_spec(fn: str, skipna: bool, nulltag: str | None):
+    """Normalize a final_aggregate ``agg_fns`` entry (str, or a tuple of
+    (fn, skipna, nulltag)) — nulltag None means the pre-null exact path."""
+    return fn, skipna, nulltag
+
+
+def decomposable(fn: str, skipna: bool = True, nulltag: str | None = None) -> bool:
+    """Whether this agg can take the partial/final two-stage path.
+
+    ``skipna=False`` on a nullable column needs the group's full row set to
+    poison correctly, so the planner keeps it on the raw single-stage path.
+    """
     if fn not in AGG_DECOMP:
+        return False
+    return skipna or nulltag is None
+
+
+def _partial_marker(partial_fn: str, dtype):
+    """The in-band "no contributing rows" marker a null-masked partial
+    min/max reduces to: the same sentinel the validity masking uses, so an
+    all-null group's partial is the sentinel on every shard and survives the
+    combine.  The finalizer maps it to the null value."""
+    if partial_fn == "min":
+        return _sentinel(dtype)
+    dtype = jnp.dtype(dtype)
+    if jnp.issubdtype(dtype, jnp.floating):
+        return jnp.array(jnp.finfo(dtype).min, dtype)
+    return jnp.array(jnp.iinfo(dtype).min, dtype)
+
+
+def partial_decompose(name: str, fn: str, x: jax.Array, skipna: bool = True,
+                      nulltag: str | None = None):
+    """Partial-column specs for one decomposable agg output: a list of
+    ``(partial_name, partial_fn, array)`` triples feeding segment_aggregate.
+
+    With a ``nulltag`` the preps implement skipna map-side: null rows
+    contribute the reduction identity (0 for sums, 1 for prod, the sentinel
+    for min/max) and count partials count NON-null rows — so the wire schema
+    (column count and dtypes) is identical to the null-free decomposition
+    and the finalizer undoes the identities (docs/dtypes.md).
+    """
+    if not decomposable(fn, skipna, nulltag):
         raise ValueError(f"{fn} is not decomposable")
     specs, _final = AGG_DECOMP[fn]
-    return [(f"__p_{name}__{s.suffix}", s.partial_fn, s.prep(x))
-            for s in specs]
+    nullm = null_mask(x, nulltag) if x is not None else None
+    out = []
+    for s in specs:
+        pcol = f"__p_{name}__{s.suffix}"
+        if nullm is None:
+            out.append((pcol, s.partial_fn, s.prep(x)))
+            continue
+        if s.partial_fn == "count":
+            # count partials become sums of the non-null flag (same wire
+            # column name/dtype; the combine is already "sum")
+            out.append((pcol, "sum", (~nullm).astype(jnp.int32)))
+            continue
+        arr = s.prep(x)
+        if s.partial_fn in ("min", "max"):
+            ident = _partial_marker(s.partial_fn, arr.dtype)
+        elif s.partial_fn == "prod":
+            ident = jnp.ones((), arr.dtype)
+        else:                                   # sum
+            ident = jnp.zeros((), arr.dtype)
+        out.append((pcol, s.partial_fn, jnp.where(nullm, ident, arr)))
+    return out
 
 
-def partial_aggregate(keys_sorted, count, values: dict[str, tuple[str, jax.Array]],
+def partial_aggregate(keys_sorted, count, values: dict[str, tuple],
                       *, cap_out: int, kernels=None):
     """Map-side stage: reduce each LOCAL key run to its partial statistics.
 
-    Same grouped-input contract and ``(__key<i>__, ...)`` output convention
+    Same grouped-input contract, values-entry forms ((fn, x) or
+    (fn, x, skipna, nulltag)) and ``(__key<i>__, ...)`` output convention
     as :func:`segment_aggregate`; the output rows (one per local distinct key
     tuple) are what the hash exchange ships.
     """
     pvals: dict[str, tuple[str, jax.Array]] = {}
-    for name, (fn, x) in values.items():
-        for pcol, pfn, arr in partial_decompose(name, fn, x):
+    for name, spec in values.items():
+        fn, x, skipna, nulltag = _value_spec(spec)
+        for pcol, pfn, arr in partial_decompose(name, fn, x, skipna, nulltag):
             pvals[pcol] = (pfn, arr)
     return segment_aggregate(keys_sorted, count, pvals, cap_out=cap_out,
                              kernels=kernels)
 
 
-def final_aggregate(keys_sorted, count, agg_fns: dict[str, str],
+def final_aggregate(keys_sorted, count, agg_fns: dict[str, Any],
                     cols: dict[str, jax.Array], *, cap_out: int,
                     kernels=None):
     """Reduce-side stage: combine :func:`partial_aggregate` rows from every
     shard (grouped by key after the exchange + local sort) into final
-    results.  ``agg_fns`` maps output name -> original agg fn; ``cols``
+    results.  ``agg_fns`` maps output name -> original agg fn (a bare str,
+    or ``(fn, skipna, nulltag)`` for nullable value columns); ``cols``
     holds the partial ``__p_<name>__*`` columns.
     """
+    norm = {name: (_agg_null_spec(*spec) if isinstance(spec, tuple)
+                   else (spec, True, None))
+            for name, spec in agg_fns.items()}
     cvals: dict[str, tuple[str, jax.Array]] = {}
-    for name, fn in agg_fns.items():
-        if fn not in AGG_DECOMP:
+    for name, (fn, skipna, tag) in norm.items():
+        if not decomposable(fn, skipna, tag):
             raise ValueError(f"{fn} is not decomposable")
         for s in AGG_DECOMP[fn][0]:
             pcol = f"__p_{name}__{s.suffix}"
             cvals[pcol] = (s.combine_fn, cols[pcol])
     agg, n_seg, ovf = segment_aggregate(keys_sorted, count, cvals,
                                         cap_out=cap_out, kernels=kernels)
+    gvalid = jnp.arange(cap_out, dtype=jnp.int32) < n_seg
     out = {k: v for k, v in agg.items() if k.startswith("__key")}
-    for name, fn in agg_fns.items():
+    for name, (fn, skipna, nulltag) in norm.items():
         specs, final = AGG_DECOMP[fn]
-        out[name] = final({s.suffix: agg[f"__p_{name}__{s.suffix}"]
-                           for s in specs})
+        p = {s.suffix: agg[f"__p_{name}__{s.suffix}"] for s in specs}
+        res = final(p)
+        if nulltag is not None and skipna:
+            # undo the skipna identities: all-null groups reduced to the
+            # pure marker/identity — map them back to the null value
+            if fn in ("min", "max"):
+                pf = specs[0].partial_fn
+                marker = _partial_marker(pf, res.dtype)
+                res = jnp.where(gvalid & (res == marker),
+                                null_value(res.dtype, nulltag).astype(res.dtype),
+                                res)
+            elif fn in ("mean", "var", "std"):
+                res = jnp.where(gvalid & (p["n"] == 0),
+                                null_value(res.dtype, nulltag).astype(res.dtype),
+                                res)
+        out[name] = res
     return out, n_seg, ovf
 
 
@@ -828,19 +999,28 @@ def _segment_first_index(seg_start: jax.Array) -> jax.Array:
 
 
 def segment_cumsum(x: jax.Array, part_keys: Sequence[jax.Array], count,
-                   kernels=None):
+                   kernels=None, nulltag: str | None = None):
     """Grouped cumulative sum via the registry's ``segment_scan`` primitive.
     The ref backend is a plain inclusive scan minus the running total at each
     row's segment start (segment-reset exscan); the Pallas backend fuses the
     boundary mask and the scan into one pass.  No collectives — groups are
-    shard-local under hash(partition_by)."""
+    shard-local under hash(partition_by).
+
+    With a ``nulltag`` the semantics match pandas cumsum on nullable data:
+    null rows stay null in the output and the running total skips them.
+    """
     cap = x.shape[0]
     valid = valid_mask(count, cap)
-    xz = jnp.where(valid, x, jnp.zeros((), x.dtype))
+    nullm = null_mask(x, nulltag)
+    skip = valid if nullm is None else valid & ~nullm
+    xz = jnp.where(skip, x, jnp.zeros((), x.dtype))
     if xz.dtype == jnp.bool_:
         xz = xz.astype(jnp.int32)        # cumsum of bool promotes anyway
     seg_start = run_starts(part_keys, valid)
     out = _K(kernels).segment_scan(xz, seg_start.astype(jnp.int32))
+    if nullm is not None:
+        out = jnp.where(nullm, null_value(out.dtype, nulltag).astype(out.dtype),
+                        out)
     return jnp.where(valid, out, jnp.zeros((), out.dtype))
 
 

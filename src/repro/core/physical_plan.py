@@ -44,9 +44,9 @@ import numpy as np
 
 from . import distribution as D
 from . import ir
-from .expr import ColRef
-from .physical import (AGG_DECOMP, DECOMPOSABLE_AGGS, PACK_WORD_BYTES,
-                       SALT_COL, col_words)
+from .expr import infer_dtype, nulltag_for
+from .physical import (AGG_DECOMP, PACK_WORD_BYTES, SALT_COL, col_words,
+                       decomposable)
 
 
 # ---------------------------------------------------------------------------
@@ -873,9 +873,11 @@ def plan_physical(root: ir.Node, dists: dict[int, str], cfg,
             # table) — independent of elision, like the join/sort rep guards.
             needs_exchange = dists[n.id] != D.REP and \
                 not (elide and colocates(src.part, n.key))
-            decomposable = all(a.fn in DECOMPOSABLE_AGGS
-                               for a in n.aggs.values())
-            if needs_exchange and decomposable and partial_agg:
+            ch_schema = n.child.schema
+            decomp = all(decomposable(a.fn, a.skipna,
+                                      nulltag_for(a.expr, ch_schema))
+                         for a in n.aggs.values())
+            if needs_exchange and decomp and partial_agg:
                 # Map-side partial aggregation: pre-reduce local key runs so
                 # the exchange ships at most this shard's DISTINCT key
                 # tuples.  A pre-partitioned input (needs_exchange False)
@@ -943,10 +945,10 @@ def annotate_schemas(plan: PhysicalPlan) -> None:
 
     One forward pass (ops are emitted in topo order): inserted exchanges and
     sorts pass their input schema through; AggPrep narrows to keys + __v_*
-    value columns (dtype from the child column for pure ColRef expressions,
-    the float32 default otherwise — same refinement policy as ir.Project);
-    PartialAgg replaces values with the decomposed __p_* statistics.  The
-    estimates drive the collective/byte census of the packed exchange.
+    value columns (dtype via expr.infer_dtype over the child schema — same
+    inference ir.Project uses); PartialAgg replaces values with the
+    decomposed __p_* statistics.  The estimates drive the collective/byte
+    census of the packed exchange.
     """
     f32 = np.dtype(np.float32)
     i32 = np.dtype(np.int32)
@@ -961,12 +963,10 @@ def annotate_schemas(plan: PhysicalPlan) -> None:
             base = plan.ops[op.inputs[0]].schema
             sch = {k: base.get(k, f32) for k in n.key}
             for name, agg in n.aggs.items():
-                if agg.fn == "count" or agg.expr is None:
-                    dt = i32
+                if agg.expr is None:
+                    dt = i32            # bare count rides a zeros placeholder
                 else:
-                    dt = (np.dtype(base[agg.expr.name])
-                          if isinstance(agg.expr, ColRef)
-                          and agg.expr.name in base else f32)
+                    dt = np.dtype(infer_dtype(agg.expr, base))
                 sch["__v_" + name] = dt
             op.schema = sch
         elif isinstance(op, PartialAgg):

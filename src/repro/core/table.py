@@ -21,6 +21,13 @@ import numpy as np
 
 from . import distribution as D
 
+# Logical dtypes live in core/dtypes.py; re-exported here because ingest
+# coercion (dictionary encode, null promotion) is part of the table contract.
+from .dtypes import (  # noqa: F401
+    CODE_DTYPE, NULL_CODE, DType, as_nullable, categories_of, coerce_column,
+    dict_decode, dict_encode, is_category, is_nullable, physical_dtype,
+    recode_map, union_categories,
+)
 
 @dataclass(eq=False)
 class DTable:

@@ -74,6 +74,42 @@ def web_clickstream(n_rows: int, n_items: int, n_users: int, seed: int = 2,
     }
 
 
+# -- string/categorical variants (docs/dtypes.md) -----------------------------
+
+CATEGORY_NAMES = ("appliances", "books", "clothing", "electronics",
+                  "garden", "music", "sports", "toys")
+CHANNELS = ("catalog", "store", "web")
+
+
+def item_ext(n_items: int, seed: int = 1):
+    """:func:`item` plus a STRING category-name column (dictionary-encoded
+    at ingest).  The name maps deterministically from ``i_category_id`` so
+    string-keyed and int-keyed query variants stay comparable."""
+    base = item(n_items, seed)
+    names = np.asarray(CATEGORY_NAMES, dtype=object)
+    base["i_category_name"] = names[(base["i_category_id"] - 1)
+                                    % len(CATEGORY_NAMES)]
+    return base
+
+
+def store_sales_ext(n_rows: int, n_items: int, n_customers: int,
+                    seed: int = 0, skew: float = 0.0,
+                    null_rate: float = 0.02):
+    """:func:`store_sales` plus the ingest-coercion stressors: a string
+    sales-channel column with ``None`` holes and a nullable float discount
+    column (NaN holes) — the Q09-style skipna-aggregation input."""
+    base = store_sales(n_rows, n_items, n_customers, seed, skew)
+    rng = np.random.default_rng(seed + 2000)
+    ch = np.asarray(CHANNELS, dtype=object)[
+        rng.integers(0, len(CHANNELS), n_rows)]
+    ch[rng.random(n_rows) < null_rate] = None
+    base["ss_channel"] = ch
+    disc = rng.gamma(1.5, 5.0, n_rows).astype(np.float32)
+    disc[rng.random(n_rows) < null_rate] = np.nan
+    base["ss_discount"] = disc
+    return base
+
+
 # -- tokenized corpus stub (LM pipeline) --------------------------------------
 
 

@@ -18,8 +18,9 @@ def o_join(left: dict, right: dict, lkey, rkey, suffix="_r",
 
     ``lkey``/``rkey`` may be a single name or a sequence of names (composite
     key — rows match when ALL key columns are equal).  how="left" keeps
-    unmatched left rows with zero-filled right columns and a ``_matched``
-    indicator, mirroring the system's static-shape NULL convention.
+    unmatched left rows with NaN-filled float right columns (pandas' null
+    convention), zero-filled int right columns and a ``_matched`` indicator,
+    mirroring the system's in-band NULL model (docs/dtypes.md).
     """
     lks, rks = _as_keys(lkey), _as_keys(rkey)
     rpos: dict = {}
@@ -46,8 +47,10 @@ def o_join(left: dict, right: dict, lkey, rkey, suffix="_r",
             continue
         name = k + suffix if k in left else k
         vals = np.zeros(len(ri), v.dtype)
+        if np.issubdtype(v.dtype, np.floating):
+            vals.fill(np.nan)           # unmatched float rows are null
         hit = matched == 1
-        vals[hit] = v[ri[hit]]          # unmatched stay zero-filled
+        vals[hit] = v[ri[hit]]          # unmatched ints stay zero-filled
         out[name] = vals
     if how == "left":
         out["_matched"] = matched

@@ -1,0 +1,358 @@
+"""Dictionary-encoded string columns + the validity/null model
+(docs/dtypes.md): ingest coercion, code-space expression rewriting, the
+pandas-style null API, and pandas-parity oracles for string-key
+merge/groupby/sort and skipna aggregation — cross-checked at 1, 2 and 8
+shards through the subprocess harness."""
+import numpy as np
+import pytest
+
+from repro import hiframes as hf
+from repro.core import dtypes as dt
+from test_physical_plan import run_sharded
+
+pd = pytest.importorskip("pandas")
+
+
+# ---------------------------------------------------------------------------
+# encoding layer (host-side, no device)
+# ---------------------------------------------------------------------------
+
+
+def test_dict_encode_sorted_roundtrip():
+    vals = np.array(["pear", "apple", None, "fig", "apple"], dtype=object)
+    codes, cats, has_null = dt.dict_encode(vals)
+    assert cats == ("apple", "fig", "pear")        # sorted: code order == lex
+    assert has_null
+    assert codes.dtype == dt.CODE_DTYPE
+    assert codes.tolist() == [2, 0, dt.NULL_CODE, 1, 0]
+    back = dt.dict_decode(codes, cats)
+    assert back.tolist() == ["pear", "apple", None, "fig", "apple"]
+
+
+def test_dict_encode_fixed_dictionary_rejects_unknown():
+    with pytest.raises(ValueError, match="outside the dictionary"):
+        dt.dict_encode(np.array(["a", "z"], dtype=object), categories=("a", "b"))
+
+
+def test_union_and_recode():
+    a, b = ("b", "d"), ("a", "b", "c")
+    u = dt.union_categories(a, b)
+    assert u == ("a", "b", "c", "d")
+    lut = dt.recode_map(a, u)
+    assert lut.tolist() == [1, 3]
+    with pytest.raises(ValueError, match="superset"):
+        dt.recode_map(("a", "x"), ("a", "b"))
+
+
+def test_dtype_equality_semantics():
+    cat = dt.DType(dt.CODE_DTYPE, ("a", "b"))
+    assert cat != np.dtype(np.int32)               # category != raw code dtype
+    assert cat == dt.DType(dt.CODE_DTYPE, ("a", "b"))
+    assert cat != dt.DType(dt.CODE_DTYPE, ("a", "c"))
+    assert np.dtype(cat) == np.int32               # physical resolution
+    nf = dt.DType(np.float32, nullable=True)
+    assert nf == np.dtype(np.float32)              # nullability is transparent
+    assert repr(nf) == "float32?"
+    assert repr(cat) == "category[str]"
+
+
+def test_coerce_rejects_datetime_with_guidance():
+    with pytest.raises(TypeError, match="epoch"):
+        dt.coerce_column("ts", np.array(["2024-01-01"], dtype="datetime64[D]"))
+    with pytest.raises(TypeError, match="homogeneous"):
+        dt.coerce_column("m", np.array(["a", 1], dtype=object))
+
+
+def test_ingest_dtypes():
+    df = hf.table({
+        "s": np.array(["x", "y", None], dtype=object),
+        "f": np.array([1.0, np.nan, 3.0], np.float32),
+        "i": np.arange(3, dtype=np.int32),
+        "o": np.array([1, None, 3], dtype=object),
+    })
+    d = df.dtypes
+    assert dt.is_category(d["s"]) and dt.is_nullable(d["s"])
+    assert dt.is_nullable(d["f"]) and np.dtype(d["f"]) == np.float32
+    assert d["i"] == np.dtype(np.int32)
+    assert dt.is_nullable(d["o"]) and np.dtype(d["o"]) == np.float32
+
+
+def test_from_pandas_object_and_holes():
+    pdf = pd.DataFrame({"s": ["b", None, "a"], "v": [1.0, np.nan, 3.0]})
+    df = hf.from_pandas(pdf)
+    assert dt.is_category(df.dtypes["s"])
+    out = df.to_numpy()
+    assert out["s"].tolist() == ["b", None, "a"]
+    with pytest.raises(TypeError, match="DataFrame"):
+        hf.from_pandas({"s": [1, 2]})
+
+
+# ---------------------------------------------------------------------------
+# code-space expression rewriting
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture()
+def strdf():
+    return hf.table({
+        "cat": np.array(["b", "a", None, "c", "a", "b"], dtype=object),
+        "x": np.array([1.0, 2.0, 3.0, np.nan, 5.0, 6.0], np.float32),
+        "n": np.arange(6, dtype=np.int32),
+    })
+
+
+def test_string_equality_and_membership(strdf):
+    assert strdf[strdf["cat"] == "a"].to_numpy()["n"].tolist() == [1, 4]
+    assert strdf[strdf["cat"] != "a"].to_numpy()["n"].tolist() == [0, 2, 3, 5]
+    assert sorted(strdf[strdf["cat"].isin(["a", "c"])].to_numpy()["n"]) \
+        == [1, 3, 4]
+    # absent value: eq -> empty, isin ignores it
+    assert len(strdf[strdf["cat"] == "zzz"].to_numpy()["n"]) == 0
+    assert sorted(strdf[strdf["cat"].isin(["zzz", "c"])].to_numpy()["n"]) == [3]
+
+
+def test_string_range_comparisons_match_pandas(strdf):
+    pdf = pd.DataFrame({"cat": ["b", "a", None, "c", "a", "b"],
+                        "n": np.arange(6)})
+    for op, ref in [("gt", pdf.cat > "a"), ("ge", pdf.cat >= "b"),
+                    ("lt", pdf.cat < "b"), ("le", pdf.cat <= "a")]:
+        e = {"gt": strdf["cat"] > "a", "ge": strdf["cat"] >= "b",
+             "lt": strdf["cat"] < "b", "le": strdf["cat"] <= "a"}[op]
+        got = sorted(strdf[e].to_numpy()["n"].tolist())
+        assert got == sorted(pdf.n[ref].tolist()), op
+
+
+def test_string_vs_plain_column_raises(strdf):
+    with pytest.raises(TypeError, match="non-category"):
+        strdf[strdf["n"] == "a"]
+
+
+def test_different_dictionaries_comparison_raises():
+    a = hf.table({"u": np.array(["a", "b"], dtype=object),
+                  "v": np.array(["b", "c"], dtype=object)})
+    with pytest.raises(TypeError, match="different"):
+        a[a["u"] == a["v"]]
+
+
+# ---------------------------------------------------------------------------
+# null API surface
+# ---------------------------------------------------------------------------
+
+
+def test_isna_dropna_fillna(strdf):
+    m = strdf.isna().to_numpy()
+    assert np.asarray(m["cat"]).astype(bool).tolist() \
+        == [False, False, True, False, False, False]
+    assert np.asarray(m["x"]).astype(bool).tolist() \
+        == [False, False, False, True, False, False]
+    assert strdf.dropna().to_numpy()["n"].tolist() == [0, 1, 4, 5]
+    assert strdf.dropna(subset="cat").to_numpy()["n"].tolist() == [0, 1, 3, 4, 5]
+    f = strdf.fillna({"cat": "zz", "x": -1.0})
+    assert not dt.is_nullable(f.dtypes["cat"])
+    out = f.to_numpy()
+    assert out["cat"].tolist() == ["b", "a", "zz", "c", "a", "b"]
+    assert out["x"][3] == -1.0
+    # filling with an in-dictionary value does not grow the dictionary
+    f2 = strdf.fillna({"cat": "a"})
+    assert dt.categories_of(f2.dtypes["cat"]) == ("a", "b", "c")
+
+
+def test_astype_paths(strdf):
+    t = hf.table({"x": np.array([1.5, 2.5], np.float32)})
+    assert t.astype({"x": np.float64}).dtypes["x"] == np.dtype(np.float64)
+    with pytest.raises(TypeError, match="decode"):
+        strdf.astype({"cat": np.int32})
+    with pytest.raises(TypeError, match="fillna"):
+        strdf.astype({"x": np.int32})
+    # nullable float -> float keeps nullability
+    assert dt.is_nullable(strdf.astype({"x": np.float64}).dtypes["x"])
+
+
+def test_all_null_and_empty_dictionary():
+    df = hf.table({"s": np.array([None, None, None], dtype=object),
+                   "x": np.ones(3, np.float32)})
+    assert dt.categories_of(df.dtypes["s"]) == ()
+    out = df.to_numpy()
+    assert out["s"].tolist() == [None, None, None]
+    # every key null: groupby drops all rows -> empty result
+    g = df.groupby("s").agg(s=("x", "sum")).to_numpy()
+    assert len(g["s"]) == 0
+
+
+# ---------------------------------------------------------------------------
+# pandas-parity oracles (single shard, in-process)
+# ---------------------------------------------------------------------------
+
+
+def _pdframe(seed=21, n=300):
+    rng = np.random.default_rng(seed)
+    cats = np.array(["aa", "bb", "cc", "dd", "ee"], dtype=object)
+    k = cats[rng.integers(0, 5, n)].astype(object)
+    k[rng.random(n) < 0.1] = None
+    x = rng.normal(size=n).astype(np.float32)
+    x[rng.random(n) < 0.15] = np.nan
+    return {"k": k, "x": x}
+
+
+def _sorted_by_key(out):
+    order = np.argsort(np.asarray(out["k"], dtype=object))
+    return {c: np.asarray(v, dtype=object)[order] if v.dtype == object
+            else np.asarray(v)[order] for c, v in out.items()}
+
+
+def test_groupby_skipna_matches_pandas():
+    cols = _pdframe()
+    df = hf.table(cols)
+    out = df.groupby("k").agg(
+        s=("x", "sum"), m=("x", "mean"), mn=("x", "min"), mx=("x", "max"),
+        c=("x", "count"), n="count").to_numpy()
+    out = _sorted_by_key(out)
+    pdf = pd.DataFrame({"k": cols["k"], "x": cols["x"].astype(np.float64)})
+    ref = pdf.groupby("k").agg(
+        s=("x", "sum"), m=("x", "mean"), mn=("x", "min"), mx=("x", "max"),
+        c=("x", "count"), n=("x", "size")).sort_index()
+    assert list(out["k"]) == list(ref.index)
+    np.testing.assert_allclose(out["s"].astype(np.float64), ref["s"],
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(out["m"].astype(np.float64), ref["m"],
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(out["mn"].astype(np.float64), ref["mn"])
+    np.testing.assert_allclose(out["mx"].astype(np.float64), ref["mx"])
+    assert out["c"].astype(int).tolist() == ref["c"].tolist()
+    assert out["n"].astype(int).tolist() == ref["n"].tolist()
+
+
+def test_groupby_all_null_group_matches_pandas():
+    k = np.array(["a", "a", "b", "b"], dtype=object)
+    x = np.array([1.0, 2.0, np.nan, np.nan], np.float32)
+    out = hf.table({"k": k, "x": x}).groupby("k").agg(
+        s=("x", "sum"), m=("x", "mean"), c=("x", "count")).to_numpy()
+    out = _sorted_by_key(out)
+    # pandas: all-NaN sum -> 0.0, mean -> NaN, count -> 0
+    assert out["s"].tolist() == [3.0, 0.0]
+    assert out["m"][0] == pytest.approx(1.5) and np.isnan(out["m"][1])
+    assert out["c"].astype(int).tolist() == [2, 0]
+
+
+def test_groupby_skipna_false_poisons():
+    k = np.array(["a", "a", "b"], dtype=object)
+    x = np.array([1.0, np.nan, 3.0], np.float32)
+    df = hf.table({"k": k, "x": x})
+    out = _sorted_by_key(df.groupby("k").sum(skipna=False).to_numpy())
+    # group "a" holds a NaN -> poisoned; "b" is clean
+    assert np.isnan(out["x"][0]) and out["x"][1] == 3.0
+    # default skipna=True drops the NaN instead
+    out = _sorted_by_key(df.groupby("k").sum().to_numpy())
+    assert out["x"].tolist() == [1.0, 3.0]
+
+
+def test_category_numeric_agg_rejected():
+    df = hf.table({"k": np.array(["a", "b"], dtype=object),
+                   "s": np.array(["x", "y"], dtype=object)})
+    with pytest.raises(TypeError, match="category"):
+        df.groupby("k").agg(bad=("s", "sum"))
+    # min/max/nunique stay valid (code order is lexicographic)
+    out = df.groupby("k").agg(lo=("s", "min")).to_numpy()
+    assert sorted(out["lo"].tolist()) == ["x", "y"]
+
+
+def test_merge_string_keys_matches_pandas():
+    cols = _pdframe(seed=5)
+    dim = {"k": np.array(["aa", "cc", "ee", "zz"], dtype=object),
+           "w": np.array([10.0, 20.0, 30.0, 40.0], np.float32)}
+    got = hf.table(cols).merge(hf.table(dim, "d"), on="k").to_numpy()
+    ref = pd.DataFrame(cols).merge(pd.DataFrame(dim), on="k")
+    assert len(got["k"]) == len(ref)
+    np.testing.assert_allclose(np.sort(got["w"]), np.sort(ref["w"]))
+
+
+def test_sort_string_column_nulls_first():
+    """Divergence from pandas documented in docs/dtypes.md: the null code -1
+    sorts FIRST (pandas na_position defaults to last); non-null order is
+    plain lexicographic."""
+    k = np.array(["b", None, "a", "c"], dtype=object)
+    out = hf.table({"k": k}).sort("k").to_numpy()
+    assert out["k"].tolist() == [None, "a", "b", "c"]
+
+
+def test_concat_unifies_dictionaries():
+    a = hf.table({"k": np.array(["b", "a"], dtype=object)})
+    b = hf.table({"k": np.array(["c", None], dtype=object)})
+    cc = hf.concat(a, b)
+    assert dt.categories_of(cc.dtypes["k"]) == ("a", "b", "c")
+    assert dt.is_nullable(cc.dtypes["k"])
+    assert cc.to_numpy()["k"].tolist() == ["b", "a", "c", None]
+
+
+def test_explain_shows_logical_dtypes(strdf):
+    txt = strdf.explain()
+    logical = txt.split("\n\n")[0]
+    assert "schema:" in logical
+    assert "category[str]?" in logical and "float32?" in logical
+    # the physical-plan header stays the first line of section 2
+    assert txt.split("\n\n")[1].splitlines()[0].startswith("physical plan:")
+
+
+# ---------------------------------------------------------------------------
+# sharded pandas-parity (subprocess, 1/2/8 devices)
+# ---------------------------------------------------------------------------
+
+_SHARDED_GROUPBY = """
+    import pandas as pd
+    rng = np.random.default_rng(23)
+    n = 600
+    cats = np.array(["aa","bb","cc","dd","ee","ff","gg"], dtype=object)
+    k = cats[rng.integers(0, 7, n)].astype(object)
+    k[rng.random(n) < 0.1] = None
+    x = rng.normal(size=n).astype(np.float32)
+    x[rng.random(n) < 0.15] = np.nan
+    df = hf.table({"k": k, "x": x})
+    out = df.groupby("k").agg(s=("x","sum"), m=("x","mean"),
+                              c=("x","count"), mn=("x","min")).to_numpy()
+    order = np.argsort(np.asarray(out["k"], dtype=object))
+    ref = pd.DataFrame({"k": k, "x": x.astype(np.float64)}).groupby("k").agg(
+        s=("x","sum"), m=("x","mean"), c=("x","count"),
+        mn=("x","min")).sort_index()
+    assert list(np.asarray(out["k"], dtype=object)[order]) == list(ref.index)
+    np.testing.assert_allclose(np.asarray(out["s"])[order].astype(np.float64),
+                               ref["s"], rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(out["m"])[order].astype(np.float64),
+                               ref["m"], rtol=1e-3, atol=1e-3)
+    assert np.asarray(out["c"])[order].astype(int).tolist() == ref["c"].tolist()
+    np.testing.assert_allclose(np.asarray(out["mn"])[order].astype(np.float64),
+                               ref["mn"], rtol=1e-5, atol=1e-5)
+"""
+
+_SHARDED_MERGE = """
+    import pandas as pd
+    rng = np.random.default_rng(29)
+    n = 500
+    cats = np.array(["aa","bb","cc","dd","ee","ff"], dtype=object)
+    k = cats[rng.integers(0, 6, n)].astype(object)
+    x = rng.normal(size=n).astype(np.float32)
+    # the dimension table's dictionary only OVERLAPS the fact table's —
+    # merge must recode both onto the union before joining
+    dim = {"k": np.array(["cc", "dd", "ee", "ff", "xx"], dtype=object),
+           "w": np.arange(5, dtype=np.float32)}
+    got = (hf.table({"k": k, "x": x})
+             .merge(hf.table(dim, "d"), on="k")
+             .groupby("k").agg(s=("x","sum"), c="count").to_numpy())
+    order = np.argsort(np.asarray(got["k"], dtype=object))
+    ref = (pd.DataFrame({"k": k, "x": x.astype(np.float64)})
+             .merge(pd.DataFrame(dim), on="k")
+             .groupby("k").agg(s=("x","sum"), c=("x","size")).sort_index())
+    assert list(np.asarray(got["k"], dtype=object)[order]) == list(ref.index)
+    np.testing.assert_allclose(np.asarray(got["s"])[order].astype(np.float64),
+                               ref["s"], rtol=1e-3, atol=1e-3)
+    assert np.asarray(got["c"])[order].astype(int).tolist() == ref["c"].tolist()
+"""
+
+
+@pytest.mark.parametrize("devices", [1, 2, 8])
+def test_sharded_groupby_skipna_parity(devices):
+    run_sharded(_SHARDED_GROUPBY, devices)
+
+
+@pytest.mark.parametrize("devices", [1, 2, 8])
+def test_sharded_merge_dictionary_parity(devices):
+    run_sharded(_SHARDED_MERGE, devices)

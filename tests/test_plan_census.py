@@ -268,6 +268,58 @@ def test_census_partial_agg_shrinks_wire_volume():
     assert any(c.startswith("__p_") for c in ex.schema)
 
 
+def test_census_string_keys_identical_to_int_keys():
+    """PR 8 gate: a string-key join -> aggregate pipeline plans the SAME
+    census as the int-key pipeline of identical shape — exchange/sort
+    counts, collectives issued, AND per-row packed bytes (dictionary codes
+    are one int32 word, docs/dtypes.md)."""
+    rng = np.random.default_rng(12)
+    n, m = 400, 26
+    codes = rng.integers(0, m, n)
+    x = rng.normal(size=n).astype(np.float32)
+    w = rng.normal(size=m).astype(np.float32)
+    strs = np.array([chr(ord("a") + c) for c in codes], dtype=object)
+    sdim = np.array([chr(ord("a") + i) for i in range(m)], dtype=object)
+
+    def pipeline(keys, dimkeys):
+        fact = hf.table({"k": keys, "x": x})
+        dim = hf.table({"k": dimkeys, "w": w}, "d")
+        return fact.merge(dim, on="k").groupby("k").agg(
+            s=("x", "sum"), mw=("w", "mean"), c="count")
+
+    qi = pipeline(codes.astype(np.int32), np.arange(m, dtype=np.int32))
+    qs = pipeline(strs, sdim)
+    pi, ps = qi.physical_plan(), qs.physical_plan()
+    assert pi.counts() == ps.counts()
+    assert pi.shuffle_census(P=8) == ps.shuffle_census(P=8)
+    hi = qi.explain().split("\n\n")[1].splitlines()[0]
+    hs = qs.explain().split("\n\n")[1].splitlines()[0]
+    assert hi == hs and "B/row shuffled" in hs
+
+
+def test_census_nullable_values_plan_like_clean_values():
+    """skipna aggregation is census-free: a NULLABLE float value column
+    decomposes to the same partial columns, wire dtypes and byte counts as
+    a clean one (count partials ride the existing count slot)."""
+    rng = np.random.default_rng(13)
+    n = 400
+    k = rng.integers(0, 9, n).astype(np.int32)
+    clean = rng.normal(size=n).astype(np.float32)
+    holed = clean.copy()
+    holed[rng.random(n) < 0.2] = np.nan
+
+    def agg(x):
+        df = hf.table({"k": k, "x": x})
+        return df.groupby("k").agg(s=("x", "sum"), m=("x", "mean"),
+                                   mn=("x", "min"))
+
+    pc = agg(clean).physical_plan()
+    pn = agg(holed).physical_plan()
+    assert pc.counts() == pn.counts()
+    assert pc.shuffle_census(P=8) == pn.shuffle_census(P=8)
+    assert pc.counts()["partial_aggs"] == 1     # both ride the partial path
+
+
 def test_census_rebalance_result_still_sorted():
     """Execution cross-check for the rebalance-ordering fix."""
     left, _ = _frames(seed=5)

@@ -68,7 +68,7 @@ def test_left_join_keeps_unmatched():
     matched = out["_matched"].astype(bool)
     assert np.array_equal(np.sort(out["id"][~matched]),
                           np.sort(left["id"][left["id"] % 2 == 1]))
-    np.testing.assert_allclose(out["w"][~matched], 0.0)   # zero-filled NULLs
+    assert np.all(np.isnan(out["w"][~matched]))   # NaN-filled NULLs
     # matched rows carry the right value
     wmap = dict(zip(right["cid"].tolist(), right["w"].tolist()))
     for i in range(len(out["id"])):

@@ -16,13 +16,15 @@ def main() -> None:
     ap.add_argument("--scale", type=float, default=0.25)
     ap.add_argument("--skip", nargs="*", default=[],
                     choices=["relational", "multikey", "analytics", "udf",
-                             "tpcx", "scaling", "kernels", "pallas_ab"])
+                             "tpcx", "scaling", "kernels", "pallas_ab",
+                             "validate"])
     ap.add_argument("--out", default=None,
                     help="write results as JSON to this path")
     args = ap.parse_args()
 
     from . import (bench_analytics, bench_kernels, bench_pallas_ab,
-                   bench_relational, bench_scaling, bench_tpcx, bench_udf)
+                   bench_relational, bench_scaling, bench_tpcx, bench_udf,
+                   bench_validate)
 
     suites = {
         "relational": lambda: bench_relational.run(args.scale),
@@ -32,6 +34,7 @@ def main() -> None:
         "tpcx": lambda: bench_tpcx.run(args.scale),
         "kernels": lambda: bench_kernels.run(args.scale),
         "pallas_ab": lambda: bench_pallas_ab.run(args.scale),
+        "validate": lambda: bench_validate.run(args.scale),
         "scaling": lambda: bench_scaling.run(args.scale),
     }
     print("name,us_per_call,derived")

@@ -616,32 +616,40 @@ class DataFrame:
 
     def _execute(self, cfg: ExecConfig, keep: Sequence[str] | None = None,
                  ) -> tuple[Lowered, DTable]:
-        """Lower + run with capacity-overflow auto-retry (doubled expansion —
-        the 1D_VAR static-capacity fault-tolerance hook, DESIGN.md §2).
+        """Lower + run under the unified retry policy (runtime/retry.py):
+        per-op capacity escalation from the overflow attribution vector
+        (``cfg.retry_scope="global"`` restores legacy slack-doubling), the
+        kernel / packed-exchange / stats degradation ladders, and a
+        structured event log carried on the returned DTable (``.events``)
+        and in the per-fingerprint store :meth:`explain` renders.
         Shared by :meth:`collect` and :meth:`persist`."""
-        # Clamp once up front: a negative auto_retry means "no retries", and
-        # the loop below must still run (and bind ``t``) exactly once.
-        retries = max(cfg.auto_retry, 0)
-        for _attempt in range(retries + 1):
-            lowered, _ = lower(self.node, cfg, set(keep) if keep else None,
+        from ..runtime import retry as _rt
+        policy = _rt.RetryPolicy(max_retries=max(cfg.auto_retry, 0),
+                                 scope=getattr(cfg, "retry_scope", "op"))
+
+        def run_once(c):
+            lowered, _ = lower(self.node, c, set(keep) if keep else None,
                                force_rep=self._force_rep())
-            t = lowered()
-            if not t.overflow or _attempt == retries:
-                if cfg.adaptive_stats and not t.overflow:
-                    # feed realized per-shard counts back into the
-                    # per-fingerprint stats store: a repeated run of this
-                    # exact plan sizes PartialAgg from the true group count
-                    # and lowers the salting threshold if skew materialized.
-                    from . import stats as _st
-                    _st.record_realized(lowered.root, np.asarray(t.counts))
-                return lowered, t
-            cfg = _dc.replace(cfg,
-                              join_expansion=max(cfg.join_expansion, 1.0) * 2,
-                              shuffle_slack=cfg.shuffle_slack * 2,
-                              stats_cap_slack=cfg.stats_cap_slack * 2,
-                              agg_group_cap=(max(1, cfg.agg_group_cap) * 2
-                                             if cfg.agg_group_cap is not None
-                                             else None))
+            return lowered, lowered()
+
+        lowered, t, events, cfg = policy.execute(run_once, cfg)
+        if events:
+            _rt.record_events(lowered.root, events)
+        if cfg.adaptive_stats:
+            from . import stats as _st
+            if not t.overflow:
+                # feed realized per-shard counts back into the
+                # per-fingerprint stats store: a repeated run of this exact
+                # plan sizes PartialAgg from the true group count and lowers
+                # the salting threshold if skew materialized.
+                _st.record_realized(lowered.root, np.asarray(t.counts))
+            else:
+                # record the FAILURE's observed requirement so the next
+                # adaptive run sizes the site correctly up front.
+                for op_id, rec in (t.overflow_ops or {}).items():
+                    if rec["kind"] in ("partial_agg", "segment_agg"):
+                        _st.record_failure(lowered.pplan.ops[op_id].node,
+                                           rec["req_shards"])
         return lowered, t
 
     def collect(self, cfg: ExecConfig | None = None,
@@ -675,10 +683,32 @@ class DataFrame:
         if t.overflow:
             # collect() returns the flagged table for the caller to inspect;
             # baking truncated shards into a reusable frame would silently
-            # drop rows from every later query.
-            raise RuntimeError(
-                "persist(): capacity overflow survived the auto-retries — "
-                "raise ExecConfig.shuffle_slack/join_expansion/auto_retry")
+            # drop rows from every later query.  The typed error names the
+            # offending plan op and the cap that would have sufficed.
+            from .errors import CapacityOverflow
+            attempts = max(cfg.auto_retry, 0) + 1
+            ops = t.overflow_ops or {}
+            if ops:
+                op_id, rec = max(ops.items(),
+                                 key=lambda kv: kv[1]["cap_req"])
+                raise CapacityOverflow(
+                    op_id=op_id, op=rec["op"],
+                    observed_est=rec["cap_req"], cap=rec["cap"],
+                    attempts=attempts,
+                    message=(
+                        "persist(): capacity overflow survived the "
+                        f"auto-retries at op #{op_id} ({rec['op']}): observed "
+                        f"requirement ~{rec['cap_req']} rows > planned cap "
+                        f"{rec['cap']} — raise ExecConfig.auto_retry or "
+                        "pre-size via ExecConfig.cap_overrides"
+                        f"[{op_id}] = ({rec['cap_req']}, "
+                        f"{rec['bucket_req']})"))
+            raise CapacityOverflow(
+                attempts=attempts,
+                message=(
+                    "persist(): capacity overflow survived the auto-retries "
+                    "— raise ExecConfig.shuffle_slack/join_expansion/"
+                    "auto_retry"))
         root_op = lowered.pplan.root_op
         layout = ir.ScanLayout(
             kind=root_op.part.kind, partitioned_by=root_op.part.keys,
@@ -788,6 +818,11 @@ class DataFrame:
                 f"{rl['max']}/{rl['mean']:.1f}")
         if tail:
             txt += "\nstats: " + "; ".join(tail)
+        from ..runtime import retry as _rt
+        evs = _rt.events_for(root)
+        if evs:
+            txt += "\nevents (previous run):\n" + "\n".join(
+                "  " + e.render() for e in evs)
         return txt
 
     def __repr__(self):

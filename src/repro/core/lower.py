@@ -26,11 +26,12 @@ import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
 from . import distribution as D
+from . import errors as err
 from . import ir, physical as phys
 from . import physical_plan as pp
 from ..kernels import registry as kreg
 from .compat import shard_map as _compat_shard_map
-from .dtypes import NULL_CODE, is_category, physical_dtype
+from .dtypes import NULL_CODE, categories_of, is_category, physical_dtype
 from .expr import ExternalArray, evaluate, nulltag_for
 from .table import DTable, pad_to
 
@@ -105,6 +106,28 @@ class ExecConfig:
     # size buffers (realized feedback is exact and gets none).  Doubled by
     # the overflow-retry loop alongside shuffle_slack.
     stats_cap_slack: float = 2.0
+    # -- execution guardrails (docs/robustness.md) --------------------------
+    # validate: in-flight invariant checks — row-count conservation and a
+    # packed-word checksum across every exchange, post-sort monotonicity,
+    # category-code range.  All checks are per-shard locals reduced on the
+    # host: they add ZERO collectives and change ZERO plans (census-gated).
+    # None defers to $HIFRAMES_VALIDATE (default off).
+    validate: Any = None
+    # fault_inject: a runtime.faults.FaultPlan with deterministic injection
+    # points (force-overflow an op, fail a kernel backend, poison a stats
+    # estimate, corrupt an exchange payload).  None = no injection.
+    fault_inject: Any = None
+    # retry_scope: "op" escalates only the overflowed capacity site(s) via
+    # cap_overrides (strictly fewer retries + smaller buffers on skew);
+    # "global" restores the legacy slack-doubling across all four knobs.
+    retry_scope: str = "op"
+    # cap_overrides: {op_id: (cap_floor, bucket_floor)} applied as floors in
+    # compute_capacities — written by runtime.retry.RetryPolicy, not users.
+    cap_overrides: Any = None
+    # kernel_fallbacks: {kernel name: mode} per-kernel backend overrides —
+    # the degradation-ladder state (compiled -> interpret -> off) driven by
+    # RetryPolicy on KernelBackendError.  None = all kernels on use_pallas.
+    kernel_fallbacks: Any = None
 
     def __post_init__(self):
         if not self.use_pallas:
@@ -115,6 +138,14 @@ class ExecConfig:
             raise ValueError(
                 f"use_pallas must be one of {kreg.MODES}, "
                 f"got {self.use_pallas!r}")
+        if self.validate is None:
+            self.validate = os.environ.get(
+                "HIFRAMES_VALIDATE", "0").lower() in ("1", "true", "yes", "on")
+        else:
+            self.validate = bool(self.validate)
+        if self.retry_scope not in ("op", "global"):
+            raise ValueError(
+                f"retry_scope must be 'op' or 'global', got {self.retry_scope!r}")
 
     def get_mesh(self) -> Mesh:
         if self.mesh is not None:
@@ -143,9 +174,21 @@ class Lowered:
         self.cfg = cfg
         self.dists = dists
         self.pplan = pplan
-        self.kernels = kreg.resolve(cfg.use_pallas)
+        fault = getattr(cfg, "fault_inject", None)
+        fallbacks = getattr(cfg, "kernel_fallbacks", None)
+        # wrap only when something can go wrong at the kernel layer: pallas
+        # backends (typed KernelBackendError), per-kernel fallbacks, or an
+        # injected kernel fault.  The default off-mode path keeps the cached
+        # KernelSet untouched.
+        need_wrap = (cfg.use_pallas != "off" or bool(fallbacks)
+                     or (fault is not None
+                         and getattr(fault, "fail_kernel", "")))
+        self.kernels = kreg.resolve_with(
+            cfg.use_pallas, fallbacks,
+            wrap=_kernel_wrap(fault) if need_wrap else None)
         self.mesh = cfg.get_mesh()
         self.P = int(np.prod([self.mesh.shape[a] for a in cfg.axes]))
+        self.events: list = []   # degradation events picked up by RetryPolicy
         self._build()
 
     # -- input marshalling ---------------------------------------------------
@@ -189,17 +232,92 @@ class Lowered:
             in_specs["ext"][tag] = P(axes)
 
         out_specs = {"cols": {c: P(axes) for c in self.root.schema},
-                     "count": P(axes), "overflow": P(axes)}
+                     "count": P(axes), "overflow": P(axes),
+                     "ovf_req": P(axes)}
 
         root = self.root
         pplan = self.pplan
         kernels = self.kernels
+        Pn = self.P
+        validate = bool(getattr(cfg, "validate", False))
+        fault = getattr(cfg, "fault_inject", None)
+
+        # -- per-op failure attribution: the static capacity-site table.
+        # per_shard emits one (flag, requirement-estimate) pair per site, in
+        # this order; __call__ reduces them host-side into DTable.overflow_ops
+        # so the retry policy can escalate exactly the op that overflowed.
+        self.sites = _capacity_sites(pplan)
+        forced = (fault.take_overflow_sites(pplan.ops)
+                  if fault is not None else frozenset())
+        corrupt = (fault.corrupt_sites(pplan.ops, cfg.packed_exchange)
+                   if fault is not None else frozenset())
+
+        # -- ExecConfig.validate: static check tables.  Flag checks emit one
+        # per-shard bool; pair checks emit (in, out) uint32 scalars reduced
+        # host-side — no collectives, no plan change (census-gated).
+        self.val_flags_meta: list[tuple[str, int, str]] = []
+        self.val_pairs_meta: list[tuple[str, int, str]] = []
+        if validate:
+            for op in pplan.ops:
+                if isinstance(op, (pp.HashExchange, pp.SampleSort,
+                                   pp.RebalanceOp)):
+                    self.val_pairs_meta.append(
+                        ("rowcount", op.op_id, type(op).__name__))
+                    self.val_pairs_meta.append(
+                        ("checksum", op.op_id, type(op).__name__))
+                if isinstance(op, pp.LocalSort):
+                    self.val_flags_meta.append(
+                        ("monotonic", op.op_id, op.keys[0]))
+                elif isinstance(op, pp.SampleSort):
+                    self.val_flags_meta.append(
+                        ("monotonic", op.op_id, op.node.by[0]))
+            for c, dt in root.schema.items():
+                if is_category(dt):
+                    self.val_flags_meta.append(
+                        ("code_range", pplan.root_id, c))
+            out_specs["val_flags"] = P(axes)
+            out_specs["val_pairs"] = P(axes)
+        n_codes = {c: len(categories_of(dt))
+                   for c, dt in root.schema.items() if is_category(dt)}
 
         def per_shard(inputs):
             rank = phys.my_rank(axes)
             env: dict[int, tuple[dict, Any]] = {}
             flags = []
+            reqs = []
+            vflags = []
+            vpairs = []
             ext = {f"ext:{t}": v for t, v in inputs["ext"].items()}
+
+            def flag(op, ovf, req):
+                """Record one capacity site: overflow flag + this shard's
+                requirement estimate (rows), with fault injection applied."""
+                if op.op_id in forced:
+                    ovf = jnp.logical_or(ovf, jnp.bool_(True))
+                flags.append(ovf)
+                reqs.append(jnp.asarray(req, jnp.float32).reshape(()))
+
+            def pre_exchange(op, cols, cnt):
+                if not validate:
+                    return None
+                return (cnt.astype(jnp.uint32), _checksum_u32(cols, cnt))
+
+            def post_exchange(op, pre, out, cnt2):
+                if op.op_id in corrupt:
+                    # deterministic payload corruption: bump row 0 of the
+                    # first non-bool column on every shard with rows.
+                    name = next((k for k in sorted(out)
+                                 if out[k].dtype != jnp.bool_), None)
+                    if name is not None:
+                        v = out[name]
+                        bump = jnp.where(cnt2 > 0, jnp.ones((), v.dtype),
+                                         jnp.zeros((), v.dtype))
+                        out = dict(out)
+                        out[name] = v.at[0].add(bump)
+                if validate:
+                    vpairs.append((pre[0], cnt2.astype(jnp.uint32)))
+                    vpairs.append((pre[1], _checksum_u32(out, cnt2)))
+                return out
 
             for op in pplan.ops:
                 n = op.node
@@ -229,7 +347,7 @@ class Lowered:
                         cnt, next(iter(cols.values())).shape[0])
                     out, cnt2, ovf = phys.compact(cols, keep, op.cap,
                                                   kernels=kernels)
-                    flags.append(ovf)
+                    flag(op, ovf, jnp.sum(keep.astype(jnp.int32)))
                     res = (out, cnt2)
 
                 elif isinstance(op, pp.Map):
@@ -291,16 +409,29 @@ class Lowered:
 
                 elif isinstance(op, pp.HashExchange):
                     cols, cnt = env[op.inputs[0]]
-                    out, cnt2, ovf = phys.shuffle_by_key(
-                        cols, cnt, op.keys, axes=axes,
+                    # shuffle_by_key inlined so the routing hashes also feed
+                    # the per-op requirement estimate (max destination load)
+                    # without a second hash pass.
+                    cap_in = next(iter(cols.values())).shape[0]
+                    dest = (phys.hash_keys(cols, op.keys)
+                            % np.uint32(Pn)).astype(jnp.int32)
+                    valid = phys.valid_mask(cnt, cap_in)
+                    hist = jnp.zeros((Pn,), jnp.int32).at[dest].add(
+                        valid.astype(jnp.int32))
+                    pre = pre_exchange(op, cols, cnt)
+                    out, cnt2, ovf = phys.exchange(
+                        cols, cnt, dest, axes=axes,
                         bucket_cap=op.bucket, cap_out=op.cap,
                         kernels=kernels, packed=cfg.packed_exchange)
-                    flags.append(ovf)
+                    flag(op, ovf, jnp.max(hist))
+                    out = post_exchange(op, pre, out, cnt2)
                     res = (out, cnt2)
 
                 elif isinstance(op, pp.LocalSort):
                     cols, cnt = env[op.inputs[0]]
                     out, _ = phys.local_sort(cols, cnt, op.keys)
+                    if validate:
+                        vflags.append(_mono_violation(out[op.keys[0]], cnt))
                     res = (out, cnt)
 
                 elif isinstance(op, pp.MergeJoin):
@@ -318,7 +449,9 @@ class Lowered:
                         lcols, lcnt, rcols, rcnt, lon, ron,
                         cap_out=op.cap, r_suffix_map=smap, how=n.how,
                         null_fill=_join_null_fill(n))
-                    flags.append(ovf)
+                    lf = lcnt.astype(jnp.float32)
+                    flag(op, ovf,
+                         jnp.maximum(lf * rcnt.astype(jnp.float32), lf))
                     out.pop(phys.SALT_COL, None)    # strip probe-side salt
                     res = (out, cnt2)
 
@@ -328,7 +461,8 @@ class Lowered:
                         out, cnt2, ovf = phys.salt_build(
                             cols, cnt, op.keys, op.hot, op.R,
                             cap_out=op.cap, kernels=kernels)
-                        flags.append(ovf)
+                        flag(op, ovf,
+                             jnp.float32(op.R) * cnt.astype(jnp.float32))
                     else:
                         out, cnt2 = phys.salt_probe(cols, cnt, op.keys,
                                                     op.hot, op.R)
@@ -361,7 +495,7 @@ class Lowered:
                     keys = tuple(cols[k] for k in n.key)
                     out, n_seg, ovf = phys.partial_aggregate(
                         keys, cnt, values, cap_out=op.cap, kernels=kernels)
-                    flags.append(ovf)
+                    flag(op, ovf, _distinct_runs(keys, cnt))
                     res = (_restore_key_names(out, n.key), n_seg)
 
                 elif isinstance(op, pp.SegmentAgg):
@@ -386,17 +520,22 @@ class Lowered:
                             kernels=kernels,
                             presorted=(op.nunique_ride,)
                             if op.nunique_ride else ())
-                    flags.append(ovf)
+                    flag(op, ovf, _distinct_runs(keys, cnt))
                     res = (_restore_key_names(out, n.key), n_seg)
 
                 elif isinstance(op, pp.SampleSort):
                     cols, cnt = env[op.inputs[0]]
+                    pre = pre_exchange(op, cols, cnt)
                     out, cnt2, ovf = phys.sample_sort(
                         cols, cnt, n.by, axes=ax, bucket_cap=op.bucket,
                         cap_out=op.cap, ascending=n.ascending,
                         pre_sorted=op.pre_sorted, kernels=kernels,
                         packed=cfg.packed_exchange)
-                    flags.append(ovf)
+                    flag(op, ovf, cnt)
+                    out = post_exchange(op, pre, out, cnt2)
+                    if validate:
+                        vflags.append(_mono_violation(
+                            out[n.by[0]], cnt2, ascending=n.ascending))
                     res = (out, cnt2)
 
                 elif isinstance(op, pp.LimitOp):
@@ -406,17 +545,22 @@ class Lowered:
 
                 elif isinstance(op, pp.RebalanceOp):
                     cols, cnt = env[op.inputs[0]]
+                    pre = pre_exchange(op, cols, cnt)
                     out, cnt2, ovf = phys.rebalance(
                         cols, cnt, axes=axes, bucket_cap=op.bucket,
                         cap_out=op.cap, kernels=kernels,
                         packed=cfg.packed_exchange)
-                    flags.append(ovf)
+                    flag(op, ovf, cnt)
+                    out = post_exchange(op, pre, out, cnt2)
                     res = (out, cnt2)
 
                 elif isinstance(op, pp.ConcatOp):
                     parts = [env[i] for i in op.inputs]
                     out, cnt, ovf = phys.concat(parts, op.cap, kernels=kernels)
-                    flags.append(ovf)
+                    flag(op, ovf,
+                         functools.reduce(
+                             jnp.add, [c.astype(jnp.float32)
+                                       for _, c in parts]))
                     res = (out, cnt)
 
                 else:
@@ -425,10 +569,32 @@ class Lowered:
                 env[op.op_id] = res
 
             cols, cnt = env[pplan.root_id]
-            ovf = functools.reduce(jnp.logical_or, flags, jnp.array(False))
-            return {"cols": {k: cols[k] for k in root.schema},
+            if validate:
+                for kind, _oid, cname in self.val_flags_meta:
+                    if kind != "code_range":
+                        continue
+                    colv = cols[cname]
+                    validr = phys.valid_mask(cnt, colv.shape[0])
+                    vflags.append(jnp.any(
+                        validr & ((colv < NULL_CODE)
+                                  | (colv >= n_codes[cname]))))
+
+            assert len(flags) == len(self.sites), (len(flags), self.sites)
+            outd = {"cols": {k: cols[k] for k in root.schema},
                     "count": cnt.reshape(1),
-                    "overflow": ovf.reshape(1)}
+                    "overflow": (jnp.stack(flags) if flags
+                                 else jnp.zeros((1,), jnp.bool_)),
+                    "ovf_req": (jnp.stack(reqs) if reqs
+                                else jnp.zeros((1,), jnp.float32))}
+            if validate:
+                assert len(vflags) == len(self.val_flags_meta)
+                assert len(vpairs) == len(self.val_pairs_meta)
+                outd["val_flags"] = (jnp.stack(vflags) if vflags
+                                     else jnp.zeros((1,), jnp.bool_))
+                outd["val_pairs"] = (
+                    jnp.stack([jnp.stack([a, b]) for a, b in vpairs])
+                    if vpairs else jnp.zeros((1, 2), jnp.uint32))
+            return outd
 
         # rows are static python ints — closed over, not traced.
         self._per_shard = per_shard
@@ -509,9 +675,159 @@ class Lowered:
         fn, inputs = self._prepare(scan_arrays)
         out = fn(inputs["scans"], inputs["ext"])
         cap = self.pplan.root_op.cap
+        flags = np.asarray(out["overflow"]).reshape(self.P, -1)
+        reqs = np.asarray(out["ovf_req"]).reshape(self.P, -1)
+        overflow_ops = self._attribute_overflow(flags, reqs)
+        failures = self._check_invariants(out, overflow_ops)
         return DTable(columns=out["cols"], counts=out["count"],
                       capacity=cap, nshards=self.P, dist=self.dists[self.root.id],
-                      overflow=bool(np.any(np.asarray(out["overflow"]))))
+                      overflow=bool(flags.any()),
+                      overflow_ops=overflow_ops,
+                      invariant_failures=failures)
+
+    def _attribute_overflow(self, flags: np.ndarray,
+                            reqs: np.ndarray) -> dict[int, dict]:
+        """Reduce per-shard (flag, requirement) vectors to the per-op
+        attribution record the retry policy escalates from."""
+        overflow_ops: dict[int, dict] = {}
+        for i, (op_id, kind, rule, strategy) in enumerate(self.sites):
+            if not flags[:, i].any():
+                continue
+            vals = reqs[:, i].astype(np.float64)
+            cap_req = {"max": float(vals.max()),
+                       "sum": float(vals.sum()),
+                       "block": float(np.ceil(vals.sum() / max(self.P, 1)))
+                       }[rule]
+            op = self.pplan.ops[op_id]
+            overflow_ops[op_id] = {
+                "kind": kind, "op": type(op).__name__, "strategy": strategy,
+                "cap": int(op.cap), "bucket": int(op.bucket),
+                "cap_req": int(np.ceil(cap_req)),
+                "bucket_req": int(np.ceil(float(vals.max()))),
+                "req_shards": vals,     # per-shard requirement estimates
+            }
+        return overflow_ops
+
+    def _check_invariants(self, out, overflow_ops) -> tuple:
+        """Host-side reduction of the ExecConfig.validate check outputs."""
+        fails: list[err.InvariantFailure] = []
+        if self.val_flags_meta:
+            vf = np.asarray(out["val_flags"]).reshape(self.P, -1)
+            for i, (kind, opid, detail) in enumerate(self.val_flags_meta):
+                if vf[:, i].any():
+                    fails.append(err.InvariantFailure(kind, opid, detail))
+        if self.val_pairs_meta:
+            vp = np.asarray(out["val_pairs"]).reshape(
+                self.P, len(self.val_pairs_meta), 2).astype(np.uint64)
+            for i, (kind, opid, detail) in enumerate(self.val_pairs_meta):
+                if opid in overflow_ops:
+                    continue    # clamped rows legitimately break conservation
+                a, b = int(vp[:, i, 0].sum()), int(vp[:, i, 1].sum())
+                if kind == "checksum":
+                    a &= 0xFFFFFFFF
+                    b &= 0xFFFFFFFF
+                if a != b:
+                    fails.append(err.InvariantFailure(
+                        kind, opid, f"{detail}: in={a} out={b}"))
+        return tuple(fails)
+
+
+def _capacity_sites(pplan: pp.PhysicalPlan) -> list[tuple[int, str, str, str]]:
+    """The static capacity-site table for per-op overflow attribution: one
+    entry per overflow-flagged buffer, in per-shard flag order —
+    ``(op_id, kind, reduce-rule, escalation-strategy)``.
+
+    The reduce rule maps per-shard requirement estimates to a global cap
+    requirement: "max" for per-shard buffers, "sum" for exchange receive
+    totals, "block" for evenly re-split rows.  Strategy "abs" sites report a
+    true upper bound, so ONE retry at that size heals; "double" sites
+    (join/salt expansion) only know a worst-case product and escalate
+    geometrically instead.
+    """
+    sites = []
+    for op in pplan.ops:
+        rep = op.dist == D.REP
+        if isinstance(op, pp.Compact):
+            sites.append((op.op_id, "compact", "max", "abs"))
+        elif isinstance(op, pp.HashExchange):
+            sites.append((op.op_id, "exchange",
+                          "max" if rep else "sum", "abs"))
+        elif isinstance(op, pp.MergeJoin):
+            sites.append((op.op_id, "join", "max", "double"))
+        elif isinstance(op, pp.SaltOp):
+            if op.build:
+                sites.append((op.op_id, "salt", "max", "double"))
+        elif isinstance(op, pp.PartialAgg):
+            sites.append((op.op_id, "partial_agg", "max", "abs"))
+        elif isinstance(op, pp.SegmentAgg):
+            sites.append((op.op_id, "segment_agg", "max", "abs"))
+        elif isinstance(op, pp.SampleSort):
+            sites.append((op.op_id, "sort", "max" if rep else "sum", "abs"))
+        elif isinstance(op, pp.RebalanceOp):
+            sites.append((op.op_id, "rebalance",
+                          "max" if rep else "block", "abs"))
+        elif isinstance(op, pp.ConcatOp):
+            sites.append((op.op_id, "concat", "max", "abs"))
+    return sites
+
+
+def _kernel_wrap(fault):
+    """Registry ``wrap`` hook: type real kernel-backend failures as
+    KernelBackendError and honor FaultPlan.fail_kernel injection."""
+    def wrap(name, mode, fn):
+        injected = fault is not None and fault.kernel_fails(name, mode)
+        if mode == "off" and not injected:
+            return fn
+        def call(*a, **k):
+            if injected:
+                raise err.KernelBackendError(
+                    name, mode, "injected fault (FaultPlan.fail_kernel)")
+            try:
+                return fn(*a, **k)
+            except err.HiFramesError:
+                raise
+            except Exception as e:
+                raise err.KernelBackendError(name, mode, e) from e
+        return call
+    return wrap
+
+
+def _checksum_u32(cols: dict, cnt) -> jax.Array:
+    """Order-invariant uint32 payload checksum of the valid prefix: the
+    word-packed columns (a pure bitcast, so float payload bits survive
+    exactly), masked to valid rows, summed mod 2**32.  Exchanges permute
+    rows across shards, so the host-side sum over shards is conserved."""
+    cap = next(iter(cols.values())).shape[0]
+    valid = phys.valid_mask(cnt, cap)
+    words, _ = phys.pack_columns({k: cols[k] for k in sorted(cols)})
+    w = jnp.where(valid[:, None], words, jnp.zeros((), words.dtype))
+    return jnp.sum(w, dtype=jnp.uint32)
+
+
+def _mono_violation(col, cnt, ascending: bool = True) -> jax.Array:
+    """True iff an adjacent pair inside the valid prefix is out of order.
+    NaN-lenient: comparisons with NaN are False, so null floats never flag."""
+    cap = col.shape[0]
+    if cap < 2:
+        return jnp.zeros((), jnp.bool_)
+    pair_valid = phys.valid_mask(cnt, cap)[1:]   # pair (i-1, i) needs i < cnt
+    a, b = col[:-1], col[1:]
+    bad = (b < a) if ascending else (b > a)
+    return jnp.any(bad & pair_valid)
+
+
+def _distinct_runs(keys: tuple, cnt) -> jax.Array:
+    """Exact count of key runs in the valid prefix of sorted key columns —
+    the true PartialAgg/SegmentAgg output requirement (NaN keys each count
+    as their own run: a safe upper bound)."""
+    cap = keys[0].shape[0]
+    if cap < 2:
+        return (cnt > 0).astype(jnp.int32)
+    valid = phys.valid_mask(cnt, cap)
+    neq = functools.reduce(
+        jnp.logical_or, [k[1:] != k[:-1] for k in keys])
+    return (jnp.sum((neq & valid[1:]).astype(jnp.int32))
+            + (cnt > 0).astype(jnp.int32))
 
 
 def _agg_nulltags(n: ir.Aggregate) -> dict[str, str | None]:
@@ -592,9 +908,17 @@ def lower(root: ir.Node, cfg: ExecConfig | None = None,
     source_rows = {n.id: pp.scan_rows(n)
                    for n in order if isinstance(n, ir.Scan)}
     sctx = None
+    events: list = []
     if cfg.adaptive_stats:
         from . import stats as st
-        sctx = st.analyze(root, cfg)
+        try:
+            sctx = st.analyze(root, cfg)
+        except Exception as e:   # degradation ladder: adaptive -> static
+            events.append({"kind": "degrade_stats",
+                           "detail": f"adaptive -> static planning: {e}"})
+            sctx = None
     pplan = pp.plan_physical(root, info.dists, cfg, stats=sctx)
     pp.plan_capacities(pplan, Pn, cfg, source_rows)
-    return Lowered(root, cfg, info.dists, pplan), stats
+    lowered = Lowered(root, cfg, info.dists, pplan)
+    lowered.events.extend(events)
+    return lowered, stats

@@ -428,6 +428,25 @@ class PhysicalPlan:
         a shard-count-free volume estimate."""
         return sum(self.op_row_bytes(op) for op in self._exchange_ops())
 
+    def buffer_bytes(self, P: int | None = None) -> int:
+        """Total bytes of row buffers the LIVE capacity plan allocates across
+        all shards: every op's (cap,) output columns plus each exchange's
+        (P, bucket) send staging, at native column widths.
+
+        The retry-quality metric (docs/robustness.md): per-op escalation must
+        heal skew with strictly fewer total bytes than global slack-doubling,
+        and this is the number tests/test_faults.py compares.
+        """
+        if P is None:
+            mesh = self.cfg.get_mesh()
+            P = int(np.prod([mesh.shape[a] for a in self.cfg.axes]))
+        total = 0
+        for op in self.ops:
+            rb = _row_bytes_unpacked(op.schema)
+            rows = op.cap + (P * op.bucket if op.bucket else 0)
+            total += P * rows * rb
+        return total
+
     def source_rows(self) -> dict[int, int]:
         """Scan id -> VALID row count, read off the Source ops' bound arrays
         (persisted scans: the layout's summed counts, not the padded
@@ -1031,6 +1050,11 @@ def compute_capacities(plan: PhysicalPlan, P: int, cfg,
     slack = getattr(cfg, "shuffle_slack", 2.0)
     join_exp = getattr(cfg, "join_expansion", 1.5)
     group_cap = getattr(cfg, "agg_group_cap", None)
+    # per-op capacity overrides (runtime/retry.py escalation): op_id ->
+    # (cap, bucket) FLOORS applied after the normal rule, so a retry grows
+    # exactly the overflowed site and downstream ops inherit the growth
+    # through this forward pass — no global slack-doubling.
+    overrides = getattr(cfg, "cap_overrides", None) or {}
     caps: dict[int, tuple[int, int]] = {}
 
     def shuffle_plan(cap_in: int) -> tuple[int, int]:
@@ -1094,6 +1118,11 @@ def compute_capacities(plan: PhysicalPlan, P: int, cfg,
                 cap = max(1, min(cap, max(64, est)))
         else:   # Compact / Map / WindowOp / AggPrep / LocalSort / SegmentAgg
             cap = ins[0][0]
+        if op.op_id in overrides:
+            o_cap, o_bucket = overrides[op.op_id]
+            cap = max(cap, int(o_cap))
+            if bucket:
+                bucket = max(bucket, int(o_bucket))
         caps[op.op_id] = (cap, bucket)
     return caps
 

@@ -233,6 +233,30 @@ def record_realized(root: ir.Node, counts: np.ndarray) -> None:
     }
 
 
+def record_failure(node: ir.Node, reqs: np.ndarray) -> None:
+    """Record an OVERFLOW's observed per-shard buffer requirements under the
+    failing op's logical-node fingerprint (runtime/retry.py calls this when
+    a PartialAgg site exhausts its retry budget).
+
+    The record has the realized-feedback shape, so the next adaptive run of
+    the same plan sizes the site from it with ``ndv_src == "realized"`` —
+    exact sizing, no slack, no retry.  ``rows`` is the summed per-shard
+    requirement: local distinct groups can double-count a key across shards,
+    so the sum is a safe upper bound on the per-shard capacity it feeds.
+    """
+    while isinstance(node, ir.Rebalance):
+        node = node.child
+    reqs = np.asarray(reqs, dtype=np.int64).reshape(-1)
+    if reqs.size == 0:
+        return
+    _REALIZED[plan_fingerprint(node)] = {
+        "rows": int(reqs.sum()),
+        "max": int(reqs.max()),
+        "mean": float(reqs.mean()),
+        "nshards": int(reqs.size),
+    }
+
+
 def realized_for(node: ir.Node) -> Optional[dict]:
     while isinstance(node, ir.Rebalance):
         node = node.child
@@ -432,5 +456,21 @@ class StatsContext:
 
 
 def analyze(root: ir.Node, cfg) -> StatsContext:
-    """Build the per-plan statistics context (planner entry point)."""
-    return StatsContext(root, sample=getattr(cfg, "stats_sample", 256))
+    """Build the per-plan statistics context (planner entry point).
+
+    Fault injection (``cfg.fault_inject.poison_stats``, armed only under
+    ``adaptive_stats``): ``"raise"`` raises a typed StatsError — lowering
+    degrades to static planning; ``"ndv"`` clamps the buffer-sizing
+    distinct-count bound to 1 — an undersized PartialAgg the per-op overflow
+    retry must heal (tests/test_faults.py).
+    """
+    fault = getattr(cfg, "fault_inject", None)
+    poison = (getattr(fault, "poison_stats", "")
+              if getattr(cfg, "adaptive_stats", False) else "")
+    if poison == "raise":
+        from .errors import StatsError
+        raise StatsError("injected stats failure (fault_inject.poison_stats)")
+    ctx = StatsContext(root, sample=getattr(cfg, "stats_sample", 256))
+    if poison == "ndv":
+        ctx.ndv_cap = lambda node, keys: 1      # type: ignore[method-assign]
+    return ctx

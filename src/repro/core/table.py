@@ -38,7 +38,20 @@ class DTable:
     capacity: int                   # per-shard row capacity
     nshards: int
     dist: str = D.ONE_D             # lattice element this table satisfies
-    overflow: Any = None            # scalar bool array; True => capacity overflow
+    overflow: Any = None            # bool; True => some capacity site overflowed
+    # per-op failure attribution (docs/robustness.md): physical-plan op id ->
+    # {"kind", "op", "cap", "bucket", "cap_req", "bucket_req", "strategy"}
+    # for every capacity site whose flag fired.  Empty dict on a clean run.
+    overflow_ops: dict = None       # type: ignore[assignment]
+    # ExecConfig.validate check results: tuple of errors.InvariantFailure.
+    invariant_failures: tuple = ()
+    # retry/degradation events (runtime/retry.RetryEvent) from the policy
+    # that produced this table — the collect report.
+    events: tuple = ()
+
+    def __post_init__(self):
+        if self.overflow_ops is None:
+            self.overflow_ops = {}
 
     @property
     def schema(self) -> dict[str, np.dtype]:

@@ -81,21 +81,44 @@ class KernelSet:
     Primitives are attributes: ``kernels.prefix_sum(x)``.  In "off" mode the
     attribute IS the ref callable; otherwise it is the pallas callable with
     ``interpret`` pre-bound, so call sites are mode-oblivious.
+
+    ``overrides`` maps kernel name -> mode, stepping INDIVIDUAL kernels off
+    the global mode — the carrier of the per-kernel degradation ladder
+    (compiled -> interpret -> off) the retry policy drives on
+    :class:`~repro.core.errors.KernelBackendError`.  ``wrap`` is an optional
+    ``wrap(name, mode, fn) -> fn`` hook applied to every resolved callable
+    (error typing + fault injection, core/lower.py).
     """
 
-    def __init__(self, mode: str):
+    def __init__(self, mode: str, overrides: dict | None = None, wrap=None):
         if mode not in MODES:
             raise ValueError(
                 f"use_pallas must be one of {MODES}, got {mode!r}")
+        overrides = dict(overrides or {})
+        bad = {m for m in overrides.values() if m not in MODES}
+        if bad:
+            raise ValueError(f"kernel fallback modes must be in {MODES}, "
+                             f"got {sorted(bad)}")
         fns = {}
+        modes = {}
         for name, spec in _REGISTRY.items():
-            if mode == "off":
-                fns[name] = spec.ref
+            m = overrides.get(name, mode)
+            if m == "off":
+                fn = spec.ref
             else:
-                fns[name] = functools.partial(
-                    spec.pallas, interpret=(mode == "interpret"))
+                fn = functools.partial(
+                    spec.pallas, interpret=(m == "interpret"))
+            if wrap is not None:
+                fn = wrap(name, m, fn)
+            fns[name] = fn
+            modes[name] = m
         self.mode = mode
+        self.kernel_modes = modes
         self._fns = fns
+
+    def mode_of(self, name: str) -> str:
+        """The backend mode ``name`` actually resolves to (after overrides)."""
+        return self.kernel_modes[name]
 
     def __getattr__(self, name):
         try:
@@ -112,6 +135,19 @@ class KernelSet:
 def resolve(mode: str) -> KernelSet:
     """KernelSet for a ``use_pallas`` mode; cached, one instance per mode."""
     return KernelSet(mode)
+
+
+def resolve_with(mode: str, overrides: dict | None = None,
+                 wrap=None) -> KernelSet:
+    """KernelSet with per-kernel mode ``overrides`` and an optional ``wrap``
+    hook.  Falls back to the cached plain set when neither is given."""
+    if not overrides and wrap is None:
+        return resolve(mode)
+    return KernelSet(mode, overrides, wrap)
+
+
+DOWNGRADE = {"compiled": "interpret", "interpret": "off", "off": None}
+"""The degradation ladder: next-softer backend per mode (None = exhausted)."""
 
 
 # -- registrations -------------------------------------------------------------

@@ -1,2 +1,4 @@
 from . import ft
+from .faults import FaultPlan
 from .ft import FTConfig, TrainDriver, run_with_overflow_retry
+from .retry import RetryEvent, RetryPolicy, clear_events, events_for

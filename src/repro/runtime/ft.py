@@ -126,15 +126,12 @@ def run_with_overflow_retry(build_and_run: Callable[[float], Any],
     """Retry hook for 1D_VAR capacity overflow (DESIGN.md §2).
 
     ``build_and_run(slack)`` must return a DTable; if its overflow flag is
-    set, the plan is rebuilt with doubled slack.  Raises after max_retries.
+    set, the plan is rebuilt with doubled slack.  Raises a typed
+    ``CapacityOverflow`` (a RuntimeError subclass) after max_retries.
+
+    Thin shim over :class:`runtime.retry.RetryPolicy` — the engine's single
+    retry implementation; kept for API compatibility with external drivers.
     """
-    slack = base_slack
-    for attempt in range(max_retries + 1):
-        table = build_and_run(slack)
-        if not getattr(table, "overflow", False):
-            return table, attempt
-        slack *= 2.0
-    raise RuntimeError(
-        f"shuffle capacity overflow persisted after {max_retries} retries "
-        f"(final slack {slack/2}) — data skew exceeds plan bounds (cf. paper "
-        "Q05 skew discussion)")
+    from .retry import RetryPolicy
+    return RetryPolicy(max_retries=max_retries, scope="global").run_slack(
+        build_and_run, base_slack)

@@ -1,0 +1,361 @@
+"""Chaos suite for the execution guardrails (docs/robustness.md).
+
+Every injectable fault site is driven to one of exactly two outcomes: a
+TYPED error (errors.py taxonomy) or a healed retry/degradation within
+budget, oracle-checked — never a silent wrong result.  A census gate pins
+``validate=True`` and ``fault_inject=None`` as zero-plan-change levers, and
+the flagship acceptance scenario shows per-op overflow attribution beating
+global slack-doubling on the PR-7 skew join: strictly fewer retries AND
+strictly smaller total buffer bytes.
+"""
+import numpy as np
+import pytest
+
+from repro import hiframes as hf
+from repro.core import errors as err
+from repro.core import stats
+from repro.runtime import retry as rt
+from repro.runtime.faults import FaultPlan
+from repro.runtime.ft import run_with_overflow_retry
+from oracle import o_aggregate
+from test_physical_plan import run_sharded
+
+
+@pytest.fixture(autouse=True)
+def _fresh_stores():
+    """Realized-stats and retry-event stores are process-global (keyed by
+    plan fingerprint); isolate every test from its neighbours."""
+    stats.clear_realized()
+    rt.clear_events()
+    yield
+    stats.clear_realized()
+    rt.clear_events()
+
+
+def _frame(n=600, keys=23, seed=11):
+    rng = np.random.default_rng(seed)
+    return {"k": rng.integers(0, keys, n).astype(np.int32),
+            "v": rng.normal(size=n).astype(np.float32)}
+
+
+def _agg(df):
+    return df.groupby("k").agg(s=("v", "sum"), n=("v", "count"))
+
+
+def _check_agg(out, cols):
+    ref = o_aggregate(cols, "k", {"s": ("sum", cols["v"]),
+                                  "n": ("count", None)})
+    o = np.argsort(out["k"])
+    np.testing.assert_array_equal(np.sort(out["k"]), ref["k"])
+    np.testing.assert_allclose(out["s"][o], ref["s"], rtol=1e-4, atol=1e-4)
+    np.testing.assert_array_equal(out["n"][o], ref["n"])
+
+
+# -- taxonomy -----------------------------------------------------------------
+
+
+def test_error_taxonomy_types_and_fields():
+    e = err.CapacityOverflow(op_id=7, op="HashExchange",
+                             observed_est=1400, cap=250, attempts=2)
+    assert isinstance(e, RuntimeError)          # legacy matchers keep working
+    assert isinstance(e, err.HiFramesError)
+    assert e.op_id == 7 and e.observed_est == 1400 and e.cap == 250
+    assert "overflow" in str(e) and "op #7" in str(e)
+
+    f = err.InvariantFailure("checksum", 3, "HashExchange")
+    assert "checksum@op#3" in f.render()
+    pe = err.PlanInvariantError((f,))
+    assert isinstance(pe, RuntimeError) and pe.failures == (f,)
+    assert "checksum" in str(pe)
+
+    ke = err.KernelBackendError("prefix_sum", "compiled", "boom")
+    assert isinstance(ke, RuntimeError)
+    assert ke.kernel == "prefix_sum" and ke.backend == "compiled"
+
+
+def test_ft_shim_typed_error_reports_last_slack():
+    """run_with_overflow_retry now delegates to RetryPolicy and raises the
+    typed CapacityOverflow naming the LAST slack actually attempted."""
+
+    class T:
+        overflow = True
+
+    calls = []
+    with pytest.raises(err.CapacityOverflow, match="last slack attempted 8"):
+        run_with_overflow_retry(lambda s: (calls.append(s), T())[1],
+                                base_slack=2.0, max_retries=2)
+    assert calls == [2.0, 4.0, 8.0]             # exact legacy call sequence
+
+
+# -- census gate: guardrail levers change ZERO plans --------------------------
+
+
+def test_validate_and_fault_inject_change_zero_plans():
+    cols = _frame()
+    dim = {"k": np.arange(23, dtype=np.int32),
+           "w": np.random.default_rng(1).normal(size=23).astype(np.float32)}
+    q = _agg(hf.join(hf.table(cols, "t"), hf.table(dim, "d"),
+                     on=("k", "k"))).sort_values("s")
+    base = q.physical_plan(hf.ExecConfig())
+    for cfg in (hf.ExecConfig(validate=True),
+                hf.ExecConfig(fault_inject=FaultPlan()),
+                hf.ExecConfig(validate=True, fault_inject=FaultPlan())):
+        plan = q.physical_plan(cfg)
+        assert plan.counts() == base.counts()
+        assert plan.collective_count() == base.collective_count()
+        assert plan.shuffle_census(P=8) == base.shuffle_census(P=8)
+        assert plan.render() == base.render()
+
+
+def test_validate_clean_run_no_failures():
+    cols = _frame()
+    t = _agg(hf.table(cols, "t")).collect(hf.ExecConfig(validate=True))
+    assert t.invariant_failures == ()
+    assert not t.overflow and t.overflow_ops == {}
+    _check_agg(t.to_numpy(), cols)
+
+
+# -- per-op attribution beats global slack-doubling (acceptance) --------------
+
+
+_SKEW_BEATS_GLOBAL = """
+import numpy as np
+from oracle import o_join
+rng = np.random.default_rng(7)
+n = 4000
+k = np.where(rng.random(n) < 0.35, 0,
+             rng.integers(1, 400, n)).astype(np.int64)
+probe = {"k": k, "v": rng.normal(size=n).astype(np.float32)}
+dim = {"k": np.arange(400).astype(np.int64),
+       "w": rng.normal(size=400).astype(np.float32)}
+q = hf.join(hf.table(probe, "t"), hf.table(dim, "d"), on=("k", "k"))
+ref = o_join(probe, dim, "k", "k")
+
+results = {}
+for scope in ("op", "global"):
+    cfg = hf.ExecConfig(safe_capacities=False, shuffle_slack=1.0,
+                        join_expansion=1.0, auto_retry=6,
+                        retry_scope=scope, broadcast_join=False)
+    lowered, t = q._execute(cfg)
+    assert not t.overflow
+    out = t.to_numpy()
+    assert len(out["k"]) == len(ref["k"])
+    np.testing.assert_allclose(np.sort(out["v"]), np.sort(ref["v"]),
+                               rtol=1e-4, atol=1e-4)
+    attempts = {e.attempt for e in t.events
+                if e.kind in ("retry", "retry_global")}
+    results[scope] = (len(attempts), lowered.pplan.buffer_bytes())
+(op_r, op_b), (gl_r, gl_b) = results["op"], results["global"]
+assert op_r >= 1, "scenario must actually overflow"
+assert op_r < gl_r, (op_r, gl_r)        # strictly fewer retries
+assert op_b < gl_b, (op_b, gl_b)        # strictly smaller buffers
+print("RETRIES", op_r, gl_r, "BYTES", op_b, gl_b)
+"""
+
+
+def test_per_op_retry_beats_global_on_skew_join():
+    out = run_sharded(_SKEW_BEATS_GLOBAL, 8)
+    assert "RETRIES" in out
+
+
+# -- forced overflow: healed retry within budget, oracle parity ---------------
+
+
+_FORCED_OVERFLOW_HEAL = """
+import numpy as np
+from oracle import o_aggregate
+from repro.runtime.faults import FaultPlan
+rng = np.random.default_rng(11)
+cols = {"k": rng.integers(0, 23, 600).astype(np.int32),
+        "v": rng.normal(size=600).astype(np.float32)}
+q = hf.table(cols, "t").groupby("k").agg(s=("v", "sum"), n=("v", "count"))
+cfg = hf.ExecConfig(validate=True, auto_retry=3,
+                    fault_inject=FaultPlan(force_overflow=("HashExchange",)))
+t = q.collect(cfg)
+assert not t.overflow, t.overflow_ops
+assert any(e.kind == "retry" for e in t.events), t.events
+assert t.invariant_failures == ()
+out = t.to_numpy()
+ref = o_aggregate(cols, "k", {"s": ("sum", cols["v"]), "n": ("count", None)})
+o = np.argsort(out["k"])
+np.testing.assert_array_equal(np.sort(out["k"]), ref["k"])
+np.testing.assert_allclose(out["s"][o], ref["s"], rtol=1e-4, atol=1e-4)
+np.testing.assert_array_equal(out["n"][o], ref["n"])
+"""
+
+
+@pytest.mark.parametrize("devices", [1, 2, 8])
+def test_forced_overflow_heals_within_budget(devices):
+    run_sharded(_FORCED_OVERFLOW_HEAL, devices)
+
+
+def test_forced_overflow_attribution_names_the_op():
+    cols = _frame()
+    q = _agg(hf.table(cols, "t"))
+    cfg = hf.ExecConfig(auto_retry=0,
+                        fault_inject=FaultPlan(force_overflow=("HashExchange",)))
+    t = q.collect(cfg)
+    assert t.overflow
+    assert len(t.overflow_ops) == 1
+    (op_id, rec), = t.overflow_ops.items()
+    assert rec["op"] == "HashExchange" and rec["kind"] == "exchange"
+    assert rec["cap_req"] >= 1 and rec["cap"] >= rec["cap_req"]
+
+
+def test_persist_overflow_raises_typed_capacity_overflow():
+    cols = _frame()
+    q = _agg(hf.table(cols, "t"))
+    cfg = hf.ExecConfig(auto_retry=1, fault_inject=FaultPlan(
+        force_overflow=("HashExchange",), overflow_shots=-1))
+    with pytest.raises(err.CapacityOverflow, match="persist"):
+        q.persist(cfg)
+    try:
+        q.persist(cfg)
+    except err.CapacityOverflow as e:
+        assert e.op_id >= 0 and e.observed_est >= 1   # names the op + cap
+        assert "HashExchange" in str(e)
+
+
+def test_retry_events_rendered_in_explain():
+    cols = _frame()
+    q = _agg(hf.table(cols, "t"))
+    cfg = hf.ExecConfig(auto_retry=2,
+                        fault_inject=FaultPlan(force_overflow=("HashExchange",)))
+    t = q.collect(cfg)
+    assert not t.overflow and any(e.kind == "retry" for e in t.events)
+    txt = q.explain(hf.ExecConfig())
+    assert "events (previous run):" in txt and "retry" in txt
+
+
+# -- kernel-backend degradation ladder ----------------------------------------
+
+
+def test_kernel_fault_degrades_one_rung_and_heals():
+    cols = _frame()
+    df = hf.table(cols, "t")
+    q = _agg(df[df["v"] > -0.3])
+    cfg = hf.ExecConfig(use_pallas="interpret", fault_inject=FaultPlan(
+        fail_kernel="prefix_sum", fail_modes=("interpret",)))
+    t = q.collect(cfg)
+    assert not t.overflow
+    keep = cols["v"] > -0.3
+    sub = {k: v[keep] for k, v in cols.items()}
+    _check_agg(t.to_numpy(), sub)
+    evs = [e for e in t.events if e.kind == "degrade_kernel"]
+    assert evs and "prefix_sum" in evs[0].detail
+    assert "interpret -> off" in evs[0].detail
+
+
+def test_kernel_fault_exhausted_raises_typed_error():
+    cols = _frame()
+    df = hf.table(cols, "t")
+    q = _agg(df[df["v"] > 0.0])
+    cfg = hf.ExecConfig(use_pallas="off", fault_inject=FaultPlan(
+        fail_kernel="prefix_sum",
+        fail_modes=("off", "interpret", "compiled")))
+    with pytest.raises(err.KernelBackendError, match="prefix_sum"):
+        q.collect(cfg)
+
+
+# -- packed-exchange corruption: validate catches, ladder degrades ------------
+
+
+_CORRUPT_PACKED_DEGRADE = """
+import numpy as np
+from oracle import o_aggregate
+from repro.runtime.faults import FaultPlan
+rng = np.random.default_rng(3)
+cols = {"k": rng.integers(0, 17, 500).astype(np.int32),
+        "v": rng.normal(size=500).astype(np.float32)}
+q = hf.table(cols, "t").groupby("k").agg(s=("v", "sum"))
+cfg = hf.ExecConfig(validate=True, fault_inject=FaultPlan(
+    corrupt_exchange=("HashExchange",), corrupt_packed_only=True))
+t = q.collect(cfg)
+assert any(e.kind == "degrade_packed" for e in t.events), t.events
+assert t.invariant_failures == ()
+out = t.to_numpy()
+ref = o_aggregate(cols, "k", {"s": ("sum", cols["v"])})
+o = np.argsort(out["k"])
+np.testing.assert_array_equal(np.sort(out["k"]), ref["k"])
+np.testing.assert_allclose(out["s"][o], ref["s"], rtol=1e-4, atol=1e-4)
+"""
+
+
+@pytest.mark.parametrize("devices", [2, 8])
+def test_corrupt_packed_exchange_degrades_to_unpacked(devices):
+    """A packed-payload fault trips the checksum invariant; the ladder falls
+    back to the unpacked per-column exchange and the answer is right."""
+    run_sharded(_CORRUPT_PACKED_DEGRADE, devices)
+
+
+def test_unhealable_corruption_raises_plan_invariant_error():
+    cols = _frame()
+    q = _agg(hf.table(cols, "t"))
+    cfg = hf.ExecConfig(validate=True, packed_exchange=False,
+                        fault_inject=FaultPlan(
+                            corrupt_exchange=("HashExchange",),
+                            corrupt_packed_only=False))
+    with pytest.raises(err.PlanInvariantError, match="checksum"):
+        q.collect(cfg)
+
+
+def test_corruption_without_validate_goes_undetected():
+    """The control: the same fault with validate=False flows through —
+    documenting exactly what the validation lever buys."""
+    cols = _frame()
+    q = _agg(hf.table(cols, "t"))
+    cfg = hf.ExecConfig(validate=False, packed_exchange=False,
+                        fault_inject=FaultPlan(
+                            corrupt_exchange=("HashExchange",),
+                            corrupt_packed_only=False))
+    t = q.collect(cfg)                          # no error raised
+    assert t.invariant_failures == ()
+
+
+# -- stats poisoning ----------------------------------------------------------
+
+
+def test_poison_stats_raise_degrades_to_static_planning():
+    cols = _frame()
+    q = _agg(hf.table(cols, "t"))
+    cfg = hf.ExecConfig(adaptive_stats=True,
+                        fault_inject=FaultPlan(poison_stats="raise"))
+    t = q.collect(cfg)
+    assert not t.overflow
+    evs = [e for e in t.events if e.kind == "degrade_stats"]
+    assert evs and "static" in evs[0].detail
+    _check_agg(t.to_numpy(), cols)
+
+
+def test_poison_stats_ndv_healed_by_per_op_retry():
+    """A poisoned distinct-count estimate undersizes PartialAgg to 1 group;
+    the per-op retry reads the TRUE requirement from the attribution vector
+    and heals in one attempt.  (>64 keys: the auto-cap floor would otherwise
+    absorb the poison.)"""
+    cols = _frame(n=2000, keys=500)
+    q = _agg(hf.table(cols, "t"))
+    cfg = hf.ExecConfig(adaptive_stats=True, safe_capacities=False,
+                        auto_retry=2,
+                        fault_inject=FaultPlan(poison_stats="ndv"))
+    t = q.collect(cfg)
+    assert not t.overflow
+    assert any(e.kind == "retry" for e in t.events), t.events
+    _check_agg(t.to_numpy(), cols)
+
+
+def test_overflow_failure_feeds_realized_store():
+    """Satellite: an exhausted PartialAgg overflow records its observed
+    requirement, so the NEXT adaptive run sizes correctly with no retry."""
+    cols = _frame(n=2000, keys=500)
+    q = _agg(hf.table(cols, "t"))
+    bad = hf.ExecConfig(adaptive_stats=True, safe_capacities=False,
+                        auto_retry=0,
+                        fault_inject=FaultPlan(poison_stats="ndv"))
+    t1 = q.collect(bad)
+    assert t1.overflow and any(
+        rec["kind"] == "partial_agg" for rec in t1.overflow_ops.values())
+    good = hf.ExecConfig(adaptive_stats=True, safe_capacities=False,
+                         auto_retry=0)
+    t2 = q.collect(good)
+    assert not t2.overflow                       # sized from the failure
+    _check_agg(t2.to_numpy(), cols)

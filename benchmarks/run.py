@@ -17,14 +17,14 @@ def main() -> None:
     ap.add_argument("--skip", nargs="*", default=[],
                     choices=["relational", "multikey", "analytics", "udf",
                              "tpcx", "scaling", "kernels", "pallas_ab",
-                             "validate"])
+                             "validate", "serve", "serve_reshard"])
     ap.add_argument("--out", default=None,
                     help="write results as JSON to this path")
     args = ap.parse_args()
 
     from . import (bench_analytics, bench_kernels, bench_pallas_ab,
-                   bench_relational, bench_scaling, bench_tpcx, bench_udf,
-                   bench_validate)
+                   bench_relational, bench_scaling, bench_serve, bench_tpcx,
+                   bench_udf, bench_validate)
 
     suites = {
         "relational": lambda: bench_relational.run(args.scale),
@@ -35,6 +35,8 @@ def main() -> None:
         "kernels": lambda: bench_kernels.run(args.scale),
         "pallas_ab": lambda: bench_pallas_ab.run(args.scale),
         "validate": lambda: bench_validate.run(args.scale),
+        "serve": lambda: bench_serve.run(args.scale),
+        "serve_reshard": lambda: bench_serve.run_reshard(args.scale),
         "scaling": lambda: bench_scaling.run(args.scale),
     }
     print("name,us_per_call,derived")
@@ -48,12 +50,20 @@ def main() -> None:
             failed.append(name)
             traceback.print_exc()
     if args.out:
+        import os
+        import platform
+
         from . import common
         rows = [{"name": n, "us_per_call": us, "derived": d}
                 for (n, us, d) in common.ROWS]
+        # host fingerprint: trend.py only enforces its regression gate
+        # between snapshots from the same host — cross-machine absolute
+        # timings are noise (see trend.py docstring).
+        host = {"nproc": os.cpu_count(), "machine": platform.machine()}
         with open(args.out, "w") as f:
             json.dump({"scale": args.scale, "skipped": args.skip,
-                       "failed": failed, "rows": rows}, f, indent=2)
+                       "failed": failed, "host": host, "rows": rows},
+                      f, indent=2)
         print(f"wrote {len(rows)} rows to {args.out}", file=sys.stderr)
     if failed:
         sys.exit(f"benchmark suites failed: {failed}")

@@ -8,6 +8,13 @@ the us_per_call ratio is printed; any shared row slower by more than
 bench-smoke regression gate.  Rows only one side has (new benches, retired
 benches) are listed but never fail; if the snapshots share no rows at all
 the gate passes vacuously with a warning.
+
+Snapshots record the host they were generated on (``host`` block written
+by benchmarks/run.py — cpu count + arch).  When the two newest snapshots
+come from different hosts the absolute timings are not comparable (a
+1-core container runs every 8-fake-device shard_map ~serialized), so the
+diff is printed for information but regressions do NOT fail the gate.  A
+snapshot without a host block (pre-PR-10) counts as unknown = different.
 """
 from __future__ import annotations
 
@@ -28,20 +35,30 @@ def _latest_two(root: str) -> tuple[str, str]:
     return snaps[-2], snaps[-1]
 
 
-def _rows(path: str) -> dict[str, float]:
+def _load(path: str) -> tuple[dict[str, float], dict | None]:
     with open(path) as f:
         doc = json.load(f)
-    return {r["name"]: float(r["us_per_call"]) for r in doc["rows"]}
+    rows = {r["name"]: float(r["us_per_call"]) for r in doc["rows"]}
+    return rows, doc.get("host")
 
 
 def compare(old_path: str, new_path: str, threshold: float = 0.25,
             out=sys.stdout) -> list[str]:
-    """Return the names of shared rows regressing past ``threshold``."""
-    old, new = _rows(old_path), _rows(new_path)
+    """Return the names of shared rows regressing past ``threshold``.
+
+    Returns [] (informational diff only) when the snapshots were generated
+    on different hosts — absolute timings across machines are noise.
+    """
+    (old, old_host), (new, new_host) = _load(old_path), _load(new_path)
+    same_host = old_host is not None and old_host == new_host
     shared = sorted(set(old) & set(new))
     print(f"trend: {os.path.basename(old_path)} -> "
           f"{os.path.basename(new_path)}  ({len(shared)} shared rows, "
           f"gate at +{threshold:.0%})", file=out)
+    if not same_host:
+        print(f"trend: host changed ({old_host} -> {new_host}) — "
+              "timings not comparable, diff is informational only",
+              file=out)
     regressed = []
     for name in shared:
         ratio = new[name] / old[name] if old[name] > 0 else float("inf")
@@ -58,7 +75,7 @@ def compare(old_path: str, new_path: str, threshold: float = 0.25,
     if not shared:
         print("trend: WARNING — no shared rows; gate passes vacuously",
               file=out)
-    return regressed
+    return regressed if same_host else []
 
 
 def main() -> None:

@@ -1,0 +1,76 @@
+"""Serving-session walk-through (docs/serving.md): one long-lived Session
+owning the mesh, a shared-table registry, and a fingerprint-keyed plan
+cache — the steady-state multi-query deployment shape.
+
+Run:  PYTHONPATH=src python examples/serve_session.py
+(8 fake devices: XLA_FLAGS=--xla_force_host_platform_device_count=8)
+"""
+import numpy as np
+
+from repro import hiframes as hf
+from repro.core.api import ExecConfig
+from repro.data import synth
+from repro.runtime.session import Session
+
+with Session(ExecConfig()) as sess:
+    # --- registry: layout once, share with every query -------------------
+    ss = synth.store_sales(50_000, n_items=1_000, n_customers=5_000, seed=0)
+    it = synth.item(1_000, seed=1)
+    sess.register("store_sales", hf.table(ss, "store_sales"),
+                  partition_by="ss_item_sk")
+    sess.register("item", hf.table(it, "item").replicate())
+
+    def q26():
+        s, i = sess.table("store_sales"), sess.table("item")
+        j = s.merge(i, on=("ss_item_sk", "i_item_sk"))
+        agg = (j.groupby("ss_customer_sk")
+               .agg(cnt="count", cls=hf.sum_(j["i_class_id"] == 1)))
+        return agg[agg["cnt"] > 2]
+
+    def leaderboard():
+        s = sess.table("store_sales")
+        per = s.groupby("ss_customer_sk").agg(spend=("ss_net_paid", "sum"))
+        # global rank (no partition_by): per-shard-count exscan + O(P)
+        # boundary scalars — no second global sort, no row movement.
+        return hf.rank(per, [], ["spend"], out="r", ascending=False)
+
+    # --- cold pass: plans, lowers, compiles ------------------------------
+    t1 = sess.collect(q26())
+    t2 = sess.collect(leaderboard())
+    print("=== cold ===")
+    for t in (t1, t2):
+        r = t.query_record
+        print(f"  {r.cache:12s} plan={r.plan_s * 1e3:7.1f}ms "
+              f"exec={r.exec_s * 1e3:7.1f}ms compiles={r.compiles}")
+
+    # --- warm pass: same shapes -> cache hits, zero compiles -------------
+    # (concurrent: submit() overlaps host planning, mesh stays serialized)
+    futs = [sess.submit(q26()), sess.submit(leaderboard())]
+    print("=== warm ===")
+    for f in futs:
+        r = f.result().query_record
+        print(f"  {r.cache:12s} plan={r.plan_s * 1e3:7.1f}ms "
+              f"exec={r.exec_s * 1e3:7.1f}ms compiles={r.compiles}")
+
+    # a DIFFERENT same-shape table hits too: the cache key is the shape
+    # fingerprint (schema + layout geometry), not the table identity — the
+    # compiled executable is rebound onto the new buffers.
+    ss2 = synth.store_sales(50_000, n_items=1_000, n_customers=5_000,
+                            seed=7)
+    sess.register("store_sales_v2", hf.table(ss2, "store_sales_v2"),
+                  partition_by="ss_item_sk")
+    s2 = sess.table("store_sales_v2")
+    per2 = s2.groupby("ss_customer_sk").agg(spend=("ss_net_paid", "sum"))
+    r2 = sess.collect(hf.rank(per2, [], ["spend"], out="r",
+                              ascending=False)).query_record
+    print(f"=== rebind (new table, same shape) ===\n  {r2.cache}")
+
+    print("=== session stats ===")
+    st = sess.stats()
+    print(f"  queries={st['queries']} cache={st['plan_cache']} "
+          f"compiles={st['compiles']}")
+    print(sess.explain(leaderboard()).splitlines()[0])
+
+# On exit the session drained its pool, saved the stats sidecar (when
+# session_dir is set), and released the mesh.  docs/serving.md covers the
+# cache-key definition, resharding (P -> P'), and failure behaviour.

@@ -1275,31 +1275,54 @@ def rolling_mean(df: DataFrame, e, window: int, out: str = "rolling_mean", *,
 
 
 def _rank_df(df: DataFrame, kind: str, partition_by, order_by,
-             out: str) -> DataFrame:
-    return DataFrame(ir.Window(df.node, kind, None, out,
-                               partition_by=_over_keys(partition_by),
-                               order_by=_over_keys(order_by)),
+             out: str, ascending: bool = True) -> DataFrame:
+    pk, ok = _over_keys(partition_by), _over_keys(order_by)
+    node = df.node
+    if not pk and ok:
+        # GLOBAL window (no PARTITION BY): equal order-key tuples must be
+        # adjacent across the shard-concatenated stream, so sort first.
+        # The planner makes an already-globally-sorted input (leaderboard:
+        # ``sort_values(...).persist()`` then rank) a FULL no-op — the rank
+        # itself is a per-shard-count exscan, never a second global sort.
+        node = ir.Sort(node, ok, ascending)
+    return DataFrame(ir.Window(node, kind, None, out,
+                               partition_by=pk, order_by=ok),
                      df._rep_nodes)
 
 
-def rank(df: DataFrame, partition_by, order_by, out: str = "rank") -> DataFrame:
-    """SQL RANK() OVER (PARTITION BY ... ORDER BY ...): 1-based; equal
-    order-key tuples share a rank, with gaps after ties."""
-    return _rank_df(df, "rank", partition_by, order_by, out)
+def rank(df: DataFrame, partition_by, order_by, out: str = "rank", *,
+         ascending: bool = True) -> DataFrame:
+    """SQL RANK() OVER ([PARTITION BY ...] ORDER BY ...): 1-based; equal
+    order-key tuples share a rank, with gaps after ties.
+
+    ``partition_by=None`` ranks GLOBALLY over ``order_by`` (``ascending``
+    picks the direction, SQL ``ORDER BY ... DESC``): the engine sorts first
+    — elided entirely when the input is already globally sorted that way —
+    and computes ranks with a per-shard-count exscan plus boundary-run
+    reconciliation (no second global pass)."""
+    return _rank_df(df, "rank", partition_by, order_by, out, ascending)
 
 
 def dense_rank(df: DataFrame, partition_by, order_by,
-               out: str = "dense_rank") -> DataFrame:
-    """SQL DENSE_RANK(): ties share a rank, no gaps."""
-    return _rank_df(df, "dense_rank", partition_by, order_by, out)
+               out: str = "dense_rank", *,
+               ascending: bool = True) -> DataFrame:
+    """SQL DENSE_RANK(): ties share a rank, no gaps.  ``partition_by=None``
+    ranks globally (see :func:`rank`)."""
+    return _rank_df(df, "dense_rank", partition_by, order_by, out, ascending)
 
 
-def row_number(df: DataFrame, partition_by, order_by,
-               out: str = "row_number") -> DataFrame:
+def row_number(df: DataFrame, partition_by, order_by=None,
+               out: str = "row_number", *,
+               ascending: bool = True) -> DataFrame:
     """SQL ROW_NUMBER(): 1-based position within the group (ties broken by
     the stable sort, so equal order keys number deterministically by
-    post-exchange arrival order)."""
-    return _rank_df(df, "row_number", partition_by, order_by, out)
+    post-exchange arrival order).
+
+    ``partition_by=None`` numbers rows GLOBALLY: with ``order_by`` the
+    stream is sorted first (no-op when already sorted), without it rows
+    number in shard-concatenation arrival order — either way the numbers
+    come from an exclusive scan of the per-shard counts, zero shuffles."""
+    return _rank_df(df, "row_number", partition_by, order_by, out, ascending)
 
 
 class Over:

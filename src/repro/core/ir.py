@@ -435,11 +435,14 @@ class Window(Node):
             # in post-exchange arrival order (segment_rank ignores order
             # keys for it) — the per-group top-k fusion relies on this.
             # rank/dense_rank compare order-key values, so they require one.
+            # partition_by may be EMPTY: the window is then GLOBAL, lowered
+            # as a per-shard-count exscan plus (for rank/dense_rank)
+            # boundary-run reconciliation — the physical planner requires
+            # equal order-key tuples adjacent across the global stream
+            # (api.rank sorts first; already-sorted inputs plan a no-op).
             need_order = self.kind != "row_number"
-            if not self.partition_by or (need_order and not self.order_by):
-                raise ValueError(
-                    f"{self.kind} requires partition_by"
-                    f"{' and order_by keys' if need_order else ''}")
+            if need_order and not self.order_by:
+                raise ValueError(f"{self.kind} requires order_by keys")
         elif self.order_by and not self.partition_by:
             # A global ORDER BY (no PARTITION BY) would need a global
             # re-sort before the scan/stencil; silently computing in

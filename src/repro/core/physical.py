@@ -1084,6 +1084,97 @@ def segment_rank(part_keys: Sequence[jax.Array],
     return jnp.where(valid, r, 0).astype(jnp.int32)
 
 
+def global_rank(order_keys: Sequence[jax.Array], count, cap: int, kind: str,
+                axes: Axes, method: str = "allgather", kernels=None):
+    """GLOBAL SQL ranking (no PARTITION BY) over the shard-concatenated
+    stream, via a per-shard-count exscan — never a second global sort.
+
+    row_number: 1-based global position in arrival order (an exclusive scan
+    of the per-shard valid counts plus the local index).  rank/dense_rank:
+    REQUIRE equal order-key tuples adjacent across the global stream (the
+    planner guarantees it; api.rank sorts first).  Cross-shard tie runs are
+    reconciled from tiny all-gathered per-shard scalars — each shard's
+    count, first/last key tuple, trailing-run start and run count — so the
+    only collectives are O(P) scalar gathers, no row movement.
+    """
+    if kind not in ("row_number", "rank", "dense_rank"):
+        raise ValueError(kind)
+    valid = valid_mask(count, cap)
+    cnt = jnp.asarray(count, jnp.int32).reshape(())
+    idx = jnp.arange(cap, dtype=jnp.int32)
+    P = nshards(axes) if axes else 1
+
+    if kind == "row_number":
+        base = (exscan_scalar(cnt, axes, method=method) if axes
+                else jnp.int32(0))
+        return jnp.where(valid, base + idx + 1, 0).astype(jnp.int32)
+
+    keys = tuple(order_keys)
+    order_start = run_starts(keys, valid)
+    start_idx = _segment_first_index(order_start)       # local run-start index
+    run_ord = jnp.cumsum(order_start.astype(jnp.int32))  # 1-based local run #
+
+    if P == 1:
+        r = start_idx + 1 if kind == "rank" else run_ord
+        return jnp.where(valid, r, 0).astype(jnp.int32)
+
+    # -- tiny boundary gathers (one scalar all_gather per quantity) ----------
+    last_i = jnp.clip(cnt - 1, 0, cap - 1)
+    t_loc = start_idx[last_i]                   # trailing run's local start
+    nruns = jnp.sum(order_start.astype(jnp.int32))
+    gather = functools.partial(lax.all_gather, axis_name=axes, tiled=False)
+    cnts = gather(cnt)                                          # (P,)
+    ts = gather(t_loc)
+    runs = gather(nruns)
+    firsts = [gather(k[0]) for k in keys]
+    lasts = [gather(k[last_i]) for k in keys]
+    bases = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                             jnp.cumsum(cnts)[:-1]])            # exclusive
+    r_me = my_rank(axes)
+    base = bases[r_me]
+
+    def key_eq(cols_a, j, cols_b):
+        return functools.reduce(
+            jnp.logical_and, [a[j] == b for a, b in zip(cols_a, cols_b)])
+
+    if kind == "rank":
+        # Walk backward from my shard: while the previous shard's trailing
+        # run carries my first key, my leading run started there (or
+        # earlier, when that whole shard is the key).  P is static and
+        # small, so the walk unrolls to scalar selects.
+        fk = [k[0] for k in keys]
+        g = base                                 # leading run's global start
+        alive = cnt > 0
+        for step in range(1, P):
+            j = jnp.maximum(r_me - step, 0)
+            inb = (r_me - step >= 0) & alive
+            nonempty = cnts[j] > 0
+            take = inb & nonempty & key_eq(lasts, j, fk)
+            g = jnp.where(take, bases[j] + ts[j], g)
+            alive = inb & (~nonempty | (take & (ts[j] == 0)))
+        out = jnp.where(start_idx == 0, g, base + start_idx) + 1
+        return jnp.where(valid, out, 0).astype(jnp.int32)
+
+    # dense_rank: distinct runs in shards before mine, minus the boundary
+    # merges (a run continuing across consecutive non-empty shards counts
+    # once).  M[j] = shard j's first key equals the last key of the nearest
+    # previous non-empty shard.
+    prev_any = jnp.bool_(False)
+    prev_last = [jnp.zeros((), k.dtype) for k in keys]
+    merges = []
+    for j in range(P):                           # static unroll
+        nonempty = cnts[j] > 0
+        merges.append(nonempty & prev_any & key_eq(firsts, j, prev_last))
+        prev_last = [jnp.where(nonempty, c[j], p)
+                     for c, p in zip(lasts, prev_last)]
+        prev_any = prev_any | nonempty
+    m = jnp.stack(merges).astype(jnp.int32)
+    sh = jnp.arange(P)
+    runs_before = (jnp.sum(jnp.where(sh < r_me, runs, 0))
+                   - jnp.sum(jnp.where(sh <= r_me, m, 0)))
+    return jnp.where(valid, runs_before + run_ord, 0).astype(jnp.int32)
+
+
 # ---------------------------------------------------------------------------
 # distributed scans (MPI_Exscan analogue)
 # ---------------------------------------------------------------------------

@@ -687,9 +687,27 @@ def plan_physical(root: ir.Node, dists: dict[int, str], cfg,
                     src = local_sort(n, src, skeys)
                 part, order = src.part, src.order
             else:
-                # global window: row-preserving pass-through
+                # global window: row-preserving pass-through.  Global RANK
+                # kinds additionally need equal order-key tuples adjacent
+                # across the WHOLE stream (a tie straddling a shard boundary
+                # would rank wrong): provided by REP, by key co-location
+                # (hash/range on an order-key subsequence), or by a
+                # globally-sorted block layout.  api.rank inserts the Sort
+                # that guarantees it (a full no-op on already-sorted
+                # inputs), so this is a plan invariant, not a user surface.
                 part, order = c.part, c.order
                 src = c
+                if n.kind in ("rank", "dense_rank") and n.order_by:
+                    adjacent = (grouped(c.order, n.order_by)
+                                and (dists[n.id] == D.REP
+                                     or colocates(c.part, n.order_by)
+                                     or (c.part.kind == "block"
+                                         and c.part.globally_sorted)))
+                    if not adjacent:
+                        raise ValueError(
+                            f"global {n.kind} requires equal "
+                            f"{n.order_by} tuples adjacent across shards: "
+                            "sort(by=order_by) first (api.rank does)")
             # adds column n.out (may shadow an existing one)
             if n.out in part.keys:
                 part = BLOCK
@@ -813,8 +831,14 @@ def plan_physical(root: ir.Node, dists: dict[int, str], cfg,
                 R = int(getattr(cfg, "salt_factor", 8))
                 if adaptive and R > 1:
                     thr = float(getattr(cfg, "salt_threshold", 0.1))
-                    if stats.skewed_before(n):
-                        thr /= 2.0      # realized skew: salt more eagerly
+                    # realized skew from a previous run of this plan, OR
+                    # skew a REGISTERED table's persisted ScanLayout counts
+                    # show for free (hash-partitioned on the join keys: the
+                    # shard occupancy IS the key distribution — no
+                    # re-sampling pass; docs/serving.md): salt more eagerly.
+                    if stats.skewed_before(n) or stats.layout_skewed(
+                            n.left, n.left_on):
+                        thr /= 2.0
                     hot = stats.hot_keys(n.left, n.left_on, thr)
                 if hot:
                     lb = _est_shuffle_bytes(n.left)

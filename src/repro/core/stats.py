@@ -35,12 +35,15 @@ to a wrong answer.
 from __future__ import annotations
 
 import hashlib
-from dataclasses import dataclass
+import json
+import os
+from dataclasses import dataclass, field
 from typing import Any, Optional
 
 import numpy as np
 
 from . import ir
+from .dtypes import categories_of, is_category, is_nullable
 from .expr import AggExpr, BinOp, ColRef, Const, Expr, ExternalArray, UnOp
 from .optimizer import column_provenance
 
@@ -144,7 +147,94 @@ def estimate_keys(cols: list[np.ndarray], total_rows: int) -> KeyStats:
 # ---------------------------------------------------------------------------
 
 
-_REALIZED: dict[str, dict] = {}
+@dataclass
+class StatsStore:
+    """The per-fingerprint feedback store: realized per-shard counts
+    (consumed by :class:`StatsContext`) plus the retry/degradation event log
+    (``runtime/retry.py``), unified so one sidecar persists both.
+
+    The module holds one CURRENT store (process default); a long-lived
+    ``runtime.session.Session`` installs its own via :func:`use_store` and
+    persists it as a JSON sidecar under its ``session_dir``, so a restarted
+    server plans warm (docs/serving.md).
+    """
+
+    realized: dict[str, dict] = field(default_factory=dict)
+    events: dict[str, tuple] = field(default_factory=dict)
+
+    # -- disk sidecar --------------------------------------------------------
+
+    def save(self, path: str) -> None:
+        """Atomically write the store as a JSON sidecar (tmp + rename, so a
+        crashed writer leaves either the old file or a ``.tmp`` orphan —
+        never a torn sidecar at ``path`` itself)."""
+        from ..runtime.retry import RetryEvent
+        doc = {"version": 1,
+               "realized": self.realized,
+               "events": {fp: [{"kind": e.kind, "attempt": e.attempt,
+                                "op_id": e.op_id, "detail": e.detail}
+                               for e in evs if isinstance(e, RetryEvent)]
+                          for fp, evs in self.events.items()}}
+        tmp = f"{path}.tmp"
+        with open(tmp, "w") as f:
+            json.dump(doc, f, indent=1)
+        os.replace(tmp, path)
+
+    @classmethod
+    def load(cls, path: str) -> "StatsStore":
+        """Load a sidecar written by :meth:`save`.
+
+        A corrupt or partial file (truncated JSON, wrong shape, bad record
+        types) raises a typed :class:`~repro.core.errors.StatsError` — the
+        caller decides whether to quarantine and start cold
+        (``Session(recover_stats=True)``) or surface the failure."""
+        from ..runtime.retry import RetryEvent
+        from .errors import StatsError
+        try:
+            with open(path) as f:
+                doc = json.load(f)
+            if not isinstance(doc, dict) or doc.get("version") != 1:
+                raise ValueError(f"unrecognized sidecar shape: "
+                                 f"{type(doc).__name__}")
+            realized = {}
+            for fp, rec in dict(doc.get("realized", {})).items():
+                realized[str(fp)] = {"rows": int(rec["rows"]),
+                                     "max": int(rec["max"]),
+                                     "mean": float(rec["mean"]),
+                                     "nshards": int(rec["nshards"])}
+            events = {}
+            for fp, evs in dict(doc.get("events", {})).items():
+                events[str(fp)] = tuple(
+                    RetryEvent(kind=str(e["kind"]), attempt=int(e["attempt"]),
+                               op_id=int(e["op_id"]), detail=str(e["detail"]))
+                    for e in evs)
+        except OSError:
+            raise
+        except Exception as e:
+            raise StatsError(
+                f"corrupt stats sidecar {path!r}: {e} — delete the file (or "
+                "start the session with recover_stats=True) to plan cold"
+            ) from e
+        st = cls()
+        st.realized = realized
+        st.events = events
+        return st
+
+
+_STORE = StatsStore()
+
+
+def current_store() -> StatsStore:
+    return _STORE
+
+
+def use_store(store: StatsStore) -> StatsStore:
+    """Install ``store`` as the process-current feedback store; returns the
+    previous one (sessions swap their scoped store in on start)."""
+    global _STORE
+    prev = _STORE
+    _STORE = store
+    return prev
 
 
 def _expr_sig(e: Optional[Expr]) -> str:
@@ -169,13 +259,51 @@ def _expr_sig(e: Optional[Expr]) -> str:
     return f"{type(e).__name__}({kids})"
 
 
-def _node_sig(n: ir.Node) -> str:
-    if isinstance(n, ir.Scan):
-        sch = ",".join(f"{k}:{np.dtype(d).str}" for k, d in n.schema.items())
-        rows = (n.layout.rows() if n.layout is not None
-                and n.layout.counts is not None
+def _dtype_sig(d) -> str:
+    """LOGICAL dtype signature: category columns hash their dictionary (two
+    tables with the same int32 codes but different categories must never
+    share a fingerprint — plan constants are code-space rewrites), and
+    nullability marks with ``?``."""
+    if is_category(d):
+        cats = categories_of(d)
+        h = hashlib.sha1("\x00".join(map(str, cats)).encode()).hexdigest()[:12]
+        return f"cat[{len(cats)}:{h}]" + ("?" if is_nullable(d) else "")
+    return np.dtype(d).str + ("?" if is_nullable(d) else "")
+
+
+def _layout_sig(lay: Optional[ir.ScanLayout]) -> str:
+    """The plan-shaping part of a ScanLayout: partitioning/ordering claims
+    (they seed the physical planner) plus the device-carrier geometry
+    (capacity/nshards fix the compiled buffer shapes)."""
+    if lay is None:
+        return "-"
+    dev = (f"{lay.capacity}x{lay.nshards}" if lay.counts is not None
+           else "host")
+    return (f"{lay.kind}|{','.join(lay.partitioned_by)}|{int(lay.ascending)}"
+            f"|{int(lay.globally_sorted)}|{','.join(lay.sorted_by)}"
+            f"|{int(lay.order_ascending)}|{dev}|{lay.dist}")
+
+
+def _scan_sig(n: ir.Scan, scans: str) -> str:
+    sch = ",".join(f"{k}:{_dtype_sig(d)}" for k, d in n.schema.items())
+    device = n.layout is not None and n.layout.counts is not None
+    if scans == "shape":
+        # identity-free: NO scan name, and no row count for device layouts
+        # (per-shard counts ride in as runtime inputs; only the capacity
+        # geometry shapes the trace).  Two registered tables with the same
+        # schema + layout shape therefore share a plan-cache trace and
+        # rebind data (docs/serving.md cache-key definition).
+        rows = ("-" if device
                 else len(next(iter(n.columns.values()))) if n.columns else 0)
-        return f"Scan[{n.name}|{sch}|{rows}]"
+        return f"Scan[{sch}|{_layout_sig(n.layout)}|{rows}]"
+    rows = (n.layout.rows() if device
+            else len(next(iter(n.columns.values()))) if n.columns else 0)
+    return f"Scan[{n.name}|{sch}|{rows}]"
+
+
+def _node_sig(n: ir.Node, scans: str = "identity") -> str:
+    if isinstance(n, ir.Scan):
+        return _scan_sig(n, scans)
     if isinstance(n, ir.Filter):
         return f"Filter[{_expr_sig(n.pred)}]"
     if isinstance(n, ir.Project):
@@ -201,13 +329,20 @@ def _node_sig(n: ir.Node) -> str:
     return type(n).__name__
 
 
-def plan_fingerprint(node: ir.Node) -> str:
+def plan_fingerprint(node: ir.Node, scans: str = "identity") -> str:
     """Structural hash of the subplan rooted at ``node`` — stable across
-    processes (node ids never participate)."""
+    processes (node ids never participate).
+
+    ``scans="identity"`` (default) keys scans by name + schema + row count —
+    the realized-stats / retry-event store keying.  ``scans="shape"`` keys
+    scans by schema (dictionary-aware) + layout geometry only — the
+    session plan-cache keying, where same-shaped registered tables HIT the
+    compiled trace and rebind data (docs/serving.md).
+    """
     parts = []
 
     def rec(n: ir.Node):
-        parts.append(_node_sig(n))
+        parts.append(_node_sig(n, scans))
         parts.append("(")
         for c in n.children:
             rec(c)
@@ -225,7 +360,7 @@ def record_realized(root: ir.Node, counts: np.ndarray) -> None:
     counts = np.asarray(counts, dtype=np.int64).reshape(-1)
     if counts.size == 0:
         return
-    _REALIZED[plan_fingerprint(root)] = {
+    _STORE.realized[plan_fingerprint(root)] = {
         "rows": int(counts.sum()),
         "max": int(counts.max()),
         "mean": float(counts.mean()),
@@ -249,7 +384,7 @@ def record_failure(node: ir.Node, reqs: np.ndarray) -> None:
     reqs = np.asarray(reqs, dtype=np.int64).reshape(-1)
     if reqs.size == 0:
         return
-    _REALIZED[plan_fingerprint(node)] = {
+    _STORE.realized[plan_fingerprint(node)] = {
         "rows": int(reqs.sum()),
         "max": int(reqs.max()),
         "mean": float(reqs.mean()),
@@ -260,11 +395,11 @@ def record_failure(node: ir.Node, reqs: np.ndarray) -> None:
 def realized_for(node: ir.Node) -> Optional[dict]:
     while isinstance(node, ir.Rebalance):
         node = node.child
-    return _REALIZED.get(plan_fingerprint(node))
+    return _STORE.realized.get(plan_fingerprint(node))
 
 
 def clear_realized() -> None:
-    _REALIZED.clear()
+    _STORE.realized.clear()
 
 
 # ---------------------------------------------------------------------------
@@ -397,6 +532,31 @@ class StatsContext:
         rl = realized_for(node)
         return bool(rl and rl["nshards"] > 1 and rl["mean"] > 0
                     and rl["max"] / rl["mean"] >= _OCCUPANCY_TRIGGER)
+
+    def layout_skewed(self, node: ir.Node, keys: tuple[str, ...]) -> bool:
+        """Skew evidence a REGISTERED table carries for free: when ``keys``
+        at ``node`` trace to a persisted scan that is hash-partitioned on
+        (a subsequence of) those keys, its ScanLayout per-shard counts ARE
+        the realized key distribution under hash routing — shard occupancy
+        above the trigger means heavy hitters, with no sampling pass and no
+        prior run of this plan (docs/serving.md; PR 7 follow-up)."""
+        traced = self._trace(node, tuple(keys))
+        if traced is None:
+            return False
+        sid, scols = traced
+        lay = self.scans[sid].layout
+        if (lay is None or lay.counts is None or lay.nshards <= 1
+                or lay.kind != "hash" or not lay.partitioned_by):
+            return False
+        # the hash routing must be BY the traced keys (subsequence rule,
+        # physical_plan.colocates): counts then reflect key-group sizes.
+        it = iter(scols)
+        if not all(k in it for k in lay.partitioned_by):
+            return False
+        cnts = np.asarray(lay.counts, dtype=np.float64).reshape(-1)
+        mean = float(cnts.mean()) if cnts.size else 0.0
+        return bool(mean > 0 and float(cnts.max()) / mean
+                    >= _OCCUPANCY_TRIGGER)
 
     # -- row estimation (one forward pass) -----------------------------------
 

@@ -1,77 +1,135 @@
-"""Serving launcher: batched prefill + decode for any --arch (reduced on CPU).
+"""Serving entrypoint: a long-lived dataframe session over one mesh.
 
-    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --reduced \
-        --requests 4 --new-tokens 8
+Boots a :class:`~repro.runtime.session.Session`, registers the synthetic
+TPCx-BB tables with serving layouts (store_sales hash-partitioned on the
+join key, item replicated), and replays a Q26-shaped query mix through the
+session's plan cache.  Two modes:
+
+  * default — one pass over the mix, then print session stats (plan-cache
+    hit rate, compiles, collectives, per-query timings);
+  * ``--smoke`` — the CI gate: replay the mix TWICE and assert the serving
+    contract (docs/serving.md): every second-pass query HITS the plan
+    cache with ZERO new compiles, and the second pass issues strictly
+    fewer collectives than the first (pass 1 pays registration).  Exits
+    nonzero on violation.
+
+Run on N fake devices:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+        PYTHONPATH=src python -m repro.launch.serve --smoke
 """
 from __future__ import annotations
 
 import argparse
-import time
+import sys
+import tempfile
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro import configs
-from repro.launch import steps as S
-from repro.models import lm, whisper
+from repro import hiframes as hf
+from repro.core.api import DataFrame, ExecConfig
+from repro.data import synth
+from repro.runtime.session import Session
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True, choices=configs.ARCH_IDS)
-    ap.add_argument("--reduced", action="store_true", default=True)
-    ap.add_argument("--requests", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--new-tokens", type=int, default=8)
-    args = ap.parse_args()
+def build_mix(sess: Session) -> list:
+    """The replayed query mix: Q26 (join + aggregate + filter), a grouped
+    top-up aggregate, and a global leaderboard rank — three distinct plan
+    shapes exercising join, aggregation, and the global-window path."""
+    ss, it = sess.table("store_sales"), sess.table("item")
 
-    cfg = configs.get_reduced(args.arch)
-    B, Sp, T = args.requests, args.prompt_len, args.new_tokens
-    max_seq = Sp + T
-    rng = np.random.default_rng(0)
+    def q26() -> DataFrame:
+        j = ss.merge(it, on=("ss_item_sk", "i_item_sk"))
+        c_i = (j.groupby("ss_customer_sk")
+               .agg(c_i_count="count",
+                    id1=hf.sum_(j["i_class_id"] == 1),
+                    id2=hf.sum_(j["i_class_id"] == 2)))
+        return c_i[c_i["c_i_count"] > 4]
 
-    if cfg.family == "encdec":
-        params = whisper.init_params(cfg, jax.random.PRNGKey(0))
-        frames = jnp.asarray(rng.normal(size=(B, cfg.enc_frames, cfg.d_model))
-                             .astype(np.float32), jnp.bfloat16)
-        toks = jnp.asarray(rng.integers(0, cfg.vocab, (B, Sp)).astype(np.int32))
-        t0 = time.perf_counter()
-        lg, cache = whisper.prefill(params, frames, toks, cfg, max_seq)
-        step = jax.jit(S.make_decode_step(cfg))
-        outs = []
-        tok = jnp.argmax(lg, -1)[:, None].astype(jnp.int32)
-        for _ in range(T):
-            outs.append(np.asarray(tok[:, 0]))
-            lg, cache = step(params, tok, cache)
-            tok = jnp.argmax(lg, -1)[:, None].astype(jnp.int32)
-        dt = time.perf_counter() - t0
-    else:
-        params = lm.init_params(cfg, jax.random.PRNGKey(0))
-        prompts = jnp.asarray(rng.integers(0, cfg.vocab, (B, Sp)).astype(np.int32))
-        prefill = jax.jit(S.make_prefill_step(cfg, max_seq))
-        step = jax.jit(S.make_decode_step(cfg))
-        batch = {"tokens": prompts}
-        if cfg.family == "vlm":
-            batch = {"inputs_embeds": jnp.zeros((B, Sp, cfg.d_model), jnp.bfloat16),
-                     "positions": jnp.broadcast_to(
-                         jnp.arange(Sp, dtype=jnp.int32)[None, None], (3, B, Sp))}
-        t0 = time.perf_counter()
-        lg, cache = prefill(params, batch)
-        outs = []
-        tok = jnp.argmax(lg, -1)[:, None].astype(jnp.int32)
-        for _ in range(T):
-            outs.append(np.asarray(tok[:, 0]))
-            lg, cache = step(params, tok, cache)
-            tok = jnp.argmax(lg, -1)[:, None].astype(jnp.int32)
-        dt = time.perf_counter() - t0
+    def per_item() -> DataFrame:
+        return ss.groupby("ss_item_sk").agg(paid=("ss_net_paid", "sum"),
+                                            n=("ss_net_paid", "count"))
 
-    gen = np.stack(outs, axis=1)
-    print(f"{args.arch} (reduced): {B} reqs, prompt {Sp}, generated {T} "
-          f"tokens each in {dt*1e3:.0f} ms")
-    print("req0:", gen[0])
-    assert gen.shape == (B, T) and np.isfinite(gen).all()
+    def leaderboard() -> DataFrame:
+        per = ss.groupby("ss_customer_sk").agg(spend=("ss_net_paid", "sum"))
+        return hf.rank(per, [], ["spend"], out="r", ascending=False)
+
+    return [q26, per_item, leaderboard]
+
+
+def register_tables(sess: Session, scale: float, seed: int = 0) -> None:
+    n_sales = max(int(200_000 * scale), 2_000)
+    n_items = max(int(2_000 * scale), 64)
+    n_cust = max(int(10_000 * scale), 128)
+    ss = synth.store_sales(n_sales, n_items, n_cust, seed=seed)
+    it = synth.item(n_items, seed=seed + 1)
+    sess.register("store_sales", hf.table(ss, "store_sales"),
+                  partition_by="ss_item_sk")
+    sess.register("item", hf.table(it, "item").replicate())
+
+
+def run_pass(sess: Session, mix, repeats: int = 2) -> dict:
+    """Submit the whole mix (each query ``repeats`` times) through the
+    session's concurrent admission and collect per-pass totals."""
+    futures = [sess.submit(q()) for _ in range(repeats) for q in mix]
+    recs = [f.result().query_record for f in futures]
+    return {"queries": len(recs),
+            "hits": sum(r.cache == "hit" for r in recs),
+            "compiles": sum(r.compiles for r in recs),
+            "collectives": sum(r.collectives for r in recs),
+            "plan_s": sum(r.plan_s for r in recs),
+            "exec_s": sum(r.exec_s for r in recs)}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--scale", type=float, default=0.05,
+                    help="synthetic data scale factor")
+    ap.add_argument("--repeats", type=int, default=2,
+                    help="times each mix query runs per pass")
+    ap.add_argument("--session-dir", default=None,
+                    help="stats sidecar directory (default: temp dir)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI gate: two passes; assert pass-2 hit rate 100%%,"
+                         " zero compiles, strictly fewer collectives")
+    args = ap.parse_args(argv)
+
+    sdir = args.session_dir or tempfile.mkdtemp(prefix="hf-serve-")
+    cfg = ExecConfig()
+    with Session(cfg, session_dir=sdir) as sess:
+        register_tables(sess, args.scale)
+        mix = build_mix(sess)
+        p1 = run_pass(sess, mix, args.repeats)
+        p1_total_coll = p1["collectives"] + sess.stats()[
+            "register_collectives"]
+        print(f"pass 1: {p1['queries']} queries, {p1['hits']} cache hits, "
+              f"{p1['compiles']} compiles, "
+              f"{p1_total_coll} collectives (incl. registration), "
+              f"plan {p1['plan_s']*1e3:.0f} ms exec {p1['exec_s']*1e3:.0f} ms")
+        if not args.smoke:
+            st = sess.stats()
+            pc = st["plan_cache"]
+            print(f"plan cache: {pc['hits']} hits / {pc['misses']} misses, "
+                  f"{pc['size']}/{pc['capacity']} entries")
+            return 0
+        p2 = run_pass(sess, mix, args.repeats)
+        print(f"pass 2: {p2['queries']} queries, {p2['hits']} cache hits, "
+              f"{p2['compiles']} compiles, {p2['collectives']} collectives, "
+              f"plan {p2['plan_s']*1e3:.0f} ms exec {p2['exec_s']*1e3:.0f} ms")
+        ok = True
+        if p2["hits"] != p2["queries"]:
+            print(f"SMOKE FAIL: pass-2 hit rate "
+                  f"{p2['hits']}/{p2['queries']} != 100%")
+            ok = False
+        if p2["compiles"] != 0:
+            print(f"SMOKE FAIL: pass-2 compiled {p2['compiles']} new "
+                  "executables (expected 0)")
+            ok = False
+        if not p2["collectives"] < p1_total_coll:
+            print(f"SMOKE FAIL: pass-2 collectives {p2['collectives']} not "
+                  f"strictly fewer than pass-1 total {p1_total_coll}")
+            ok = False
+        print("serve smoke:", "PASS" if ok else "FAIL")
+        return 0 if ok else 1
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

@@ -59,8 +59,8 @@ class RetryEvent:
 
 
 # -- per-fingerprint event store (explain() renders the last run's events) ----
-
-_EVENTS: dict[str, tuple] = {}
+# The dict lives on core.stats.StatsStore (the realized-stats store's
+# sibling), so a session scopes + persists both through ONE sidecar.
 
 
 def _strip_rebalance(root):
@@ -75,17 +75,20 @@ def record_events(root, events) -> None:
     (same keying as the realized-stats store: structural, id-free)."""
     if not events:
         return
-    from ..core.stats import plan_fingerprint
-    _EVENTS[plan_fingerprint(_strip_rebalance(root))] = tuple(events)
+    from ..core.stats import current_store, plan_fingerprint
+    current_store().events[
+        plan_fingerprint(_strip_rebalance(root))] = tuple(events)
 
 
 def events_for(root) -> tuple:
-    from ..core.stats import plan_fingerprint
-    return _EVENTS.get(plan_fingerprint(_strip_rebalance(root)), ())
+    from ..core.stats import current_store, plan_fingerprint
+    return current_store().events.get(
+        plan_fingerprint(_strip_rebalance(root)), ())
 
 
 def clear_events() -> None:
-    _EVENTS.clear()
+    from ..core.stats import current_store
+    current_store().events.clear()
 
 
 # -- the policy ---------------------------------------------------------------

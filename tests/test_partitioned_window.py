@@ -126,7 +126,11 @@ def test_rank_requires_keys():
     with pytest.raises(ValueError):
         hf.rank(df, "g", ())
     with pytest.raises(ValueError):
-        ir.Window(df.node, "rank", None, "r", partition_by=(), order_by=("t",))
+        ir.Window(df.node, "rank", None, "r", partition_by=("g",),
+                  order_by=())
+    # empty partition_by is now LEGAL for rank kinds (global ranking via the
+    # per-shard-count exscan) as long as order_by is present
+    ir.Window(df.node, "rank", None, "r", partition_by=(), order_by=("t",))
     with pytest.raises(ValueError):
         ir.Window(df.node, "nope", None, "r")
 
